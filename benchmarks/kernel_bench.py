@@ -1,0 +1,48 @@
+"""Microbenchmarks: Pallas kernels (interpret mode on CPU — correctness
+path) vs their pure-jnp references. On TPU the same entry points run
+compiled; interpret timings here only sanity-check plumbing overhead."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.core.rff import draw_rff, featurize_jit
+from repro.kernels.coke_update.coke_update import coke_fused_update
+from repro.kernels.coke_update.ref import coke_update_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rff.ops import featurize_fused
+
+
+def main(emit):
+    # RFF featurizer
+    p = draw_rff(jax.random.PRNGKey(0), 77, 128, 1.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2048, 77))
+    t_ref = time_call(lambda: featurize_jit(p, x))
+    t_ker = time_call(lambda: featurize_fused(p, x))
+    emit("kernel/rff/jnp_ref", t_ref, "T=2048,d=77,L=128")
+    emit("kernel/rff/pallas_interpret", t_ker, "same shapes")
+
+    # flash attention
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k = jax.random.normal(ks[1], (1, 4, 512, 64))
+    v = jax.random.normal(ks[2], (1, 4, 512, 64))
+    t_ref = time_call(lambda: attention_ref(q, k, v))
+    t_ker = time_call(lambda: flash_attention(q, k, v, block_q=128,
+                                              block_k=128))
+    emit("kernel/flash_attention/jnp_ref", t_ref, "B1 H4 S512 D64 causal")
+    emit("kernel/flash_attention/pallas_interpret", t_ker, "same shapes")
+
+    # fused COKE update
+    args = [jax.random.normal(kk, (16, 65536))
+            for kk in jax.random.split(jax.random.PRNGKey(3), 6)]
+    t_ref = time_call(lambda: coke_update_ref(*args, rho=0.1))
+    t_ker = time_call(lambda: coke_fused_update(*args, rho=0.1))
+    emit("kernel/coke_update/jnp_ref", t_ref, "N=16,D=65536")
+    emit("kernel/coke_update/pallas_interpret", t_ker, "same shapes")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"))

@@ -1,0 +1,117 @@
+"""Regenerate the machine-written tables of EXPERIMENTS.md from the dry-run
+cache: §Dry-run (per-pair lowering status + memory) and §Roofline (three
+terms + dominant + useful fraction). Run after any dry-run sweep:
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "experiments_tables.md")
+
+ARCH_ORDER = ["internvl2-1b", "granite-3-8b", "zamba2-2.7b",
+              "deepseek-v2-lite-16b", "mamba2-2.7b", "minicpm3-4b",
+              "seamless-m4t-medium", "mixtral-8x7b", "qwen3-1.7b",
+              "llama3-405b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_baseline():
+    rows = {}
+    for f in glob.glob(os.path.join(RESULTS, "*.json")):
+        r = json.load(open(f))
+        if (r.get("strategy", "allreduce") != "allreduce" or r.get("fsdp")
+                or "seqpar" in f or "mb16" in f or "puredp" in f
+                or "headaligned" in f):
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh_kind"))
+        rows[key] = r
+    return rows
+
+
+def fmt_gb(x):
+    return f"{(x or 0) / 1e9:.1f}"
+
+
+def main():
+    rows = load_baseline()
+    lines = ["## §Dry-run — every (arch × shape × mesh) lowers + compiles",
+             "",
+             "Meshes: single = 16×16 (data, model) = 256 chips; multi = "
+             "2×16×16 (pod, data, model) = 512 chips. bf16 params; "
+             "ShapeDtypeStruct inputs (zero allocation). `arg`/`temp` are "
+             "per-device bytes from `compiled.memory_analysis()`.",
+             "",
+             "| arch | shape | mesh | status | params | arg GB/dev | "
+             "temp GB/dev | collective GB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("single", "multi"):
+                r = rows.get((arch, shape, mesh))
+                if r is None:
+                    continue
+                if r.get("status") != "ok":
+                    n_skip += 1
+                    lines.append(f"| {arch} | {shape} | {mesh} | "
+                                 f"{r.get('status')} (by design) | — | — |"
+                                 f" — | — |")
+                    continue
+                n_ok += 1
+                m, rf = r["memory"], r["roofline"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{r['params'] / 1e9:.2f}B | "
+                    f"{fmt_gb(m['argument_bytes'])} | "
+                    f"{fmt_gb(m['temp_bytes'])} | "
+                    f"{rf['collective_bytes_per_device'] / 1e9:.1f} |")
+    lines.append("")
+    lines.append(f"**{n_ok} ok, {n_skip} skipped-by-design** "
+                 "(seamless-m4t × long_500k; see DESIGN.md).")
+    lines.append("")
+
+    lines += ["## §Roofline — single-pod (16×16), per device, per step",
+              "",
+              "compute = dot_FLOPs/197e12, memory = HBM-traffic proxy/819e9,",
+              "collective = collective-operand-bytes/50e9 (all trip-count-",
+              "corrected from the compiled HLO; seconds). useful = "
+              "MODEL_FLOPS (6·N·D train / 2·N·D serve) ÷ global HLO FLOPs.",
+              "",
+              "| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | useful | what moves the dominant term |",
+              "|---|---|---|---|---|---|---|---|"]
+    NOTES = {
+        ("train_4k",): "fuse attention (Pallas flash) to kill score/mask "
+                       "HBM round-trips; seq-parallel residual",
+        ("prefill_32k",): "flash attention (32k scores dominate traffic)",
+        ("decode_32k",): "cache reads are the floor — batch more requests",
+        ("long_500k",): "B=1 replicates compute; batch or shard sequence",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = rows.get((arch, shape, "single"))
+            if r is None or r.get("status") != "ok":
+                continue
+            rf = r["roofline"]
+            note = NOTES[(shape,)]
+            if arch == "mamba2-2.7b" and shape == "train_4k":
+                note = "head-aligned projections (done, §Perf B)"
+            lines.append(
+                f"| {arch} | {shape} | {rf['compute_s']:.2e} | "
+                f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+                f"{rf['dominant']} | {rf['useful_fraction']:.2f} | {note} |")
+    lines.append("")
+
+    with open(OUT, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {OUT}: {n_ok} ok rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Fig. 3 + Tables 3/6: communication cost to reach a target MSE.
+
+Protocol (faithful to the paper's): censor thresholds are tuned per dataset
+and per accuracy requirement — "the parameters of the censoring function are
+tuned to achieve the best learning performance at nearly no performance
+loss". For each MSE level we report the transmissions DKLA needs vs the best
+censored run that also reaches that level (Fig. 3 reads exactly this way).
+
+Claim validated: COKE reaches the same MSE with substantially fewer
+transmissions (paper: ~45-55%; our stand-in datasets reach 35-85% depending
+on the convergence-tail shape), and with a tuned schedule the final-MSE gap
+is negligible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_problem
+from repro.configs.coke_krr import PAPER_SETUPS
+from repro.core import admm, cta
+from repro.core.censor import CensorSchedule
+
+GRID = ((0.5, 0.98), (0.5, 0.99), (0.1, 0.995), (0.05, 0.997),
+        (0.02, 0.998), (0.01, 0.999), (0.05, 0.999))
+
+
+def comms_to_reach(mse_hist, comms_hist, target: float):
+    hit = np.nonzero(np.asarray(mse_hist) <= target)[0]
+    return int(np.asarray(comms_hist)[hit[0]]) if hit.size else None
+
+
+def run_setup(name: str, iters: int = 1200, samples: int = 600):
+    cfg = PAPER_SETUPS[name]
+    prob, g, _, _ = build_problem(cfg, samples_override=samples)
+    res_d = admm.run(prob, admm.dkla_schedule(), iters)
+    res_t = cta.run(prob, g, lr=0.9, num_iters=iters)
+    candidates = {(v, mu): admm.run(prob, CensorSchedule(v, mu), iters)
+                  for v, mu in GRID}
+
+    final = float(res_d.train_mse[-1])
+    first = float(res_d.train_mse[0])
+    rows = []
+    for frac in (0.1, 0.01, 0.003):
+        tgt = final + (first - final) * frac
+        cd = comms_to_reach(res_d.train_mse, res_d.comms, tgt)
+        best = None
+        for (v, mu), r in candidates.items():
+            cc = comms_to_reach(r.train_mse, r.comms, tgt)
+            if cc is not None and (best is None or cc < best[0]):
+                best = (cc, v, mu)
+        rows.append({
+            "dataset": name, "target_mse": tgt,
+            "cta": comms_to_reach(res_t.train_mse, res_t.comms, tgt),
+            "dkla": cd,
+            "coke": best[0] if best else None,
+            "coke_schedule": f"{best[1]}*{best[2]}^k" if best else None,
+            "saving": (1 - best[0] / cd) if (best and cd) else None,
+        })
+
+    # no-loss summary: best total saving among candidates with <=1% gap
+    no_loss = [(1 - int(r.comms[-1]) / int(res_d.comms[-1]), v, mu)
+               for (v, mu), r in candidates.items()
+               if (float(r.train_mse[-1]) - final) / max(final, 1e-12)
+               <= 0.01]
+    no_loss.sort(reverse=True)
+    summary = {"no_loss_saving": no_loss[0][0] if no_loss else 0.0,
+               "no_loss_schedule": (f"{no_loss[0][1]}*{no_loss[0][2]}^k"
+                                    if no_loss else "dkla")}
+    return rows, summary
+
+
+def main(emit):
+    iters_by = {"synthetic": 2000}
+    for name in ("synthetic", "toms_hardware", "energy", "air_quality"):
+        rows, s = run_setup(name, iters=iters_by.get(name, 1200))
+        for r in rows:
+            sv = f"{r['saving']:.0%}" if r["saving"] is not None else "na"
+            emit(f"paper_comm_cost/{name}/mse{r['target_mse']:.3e}", 0.0,
+                 f"cta={r['cta']};dkla={r['dkla']};coke={r['coke']}"
+                 f";saving={sv};h(k)={r['coke_schedule']}")
+        emit(f"paper_comm_cost/{name}/no_loss", 0.0,
+             f"saving={s['no_loss_saving']:.2%};"
+             f"h(k)={s['no_loss_schedule']}")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"))

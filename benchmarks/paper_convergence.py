@@ -1,0 +1,74 @@
+"""Paper Figs. 1-2: functional consensus + training-MSE convergence of
+CTA / DKLA / COKE on the synthetic and a real-protocol dataset.
+
+Claims validated:
+  * every agent's functional converges to the centralized optimum (Fig 1),
+  * ADMM-based (DKLA, COKE) converge faster than diffusion CTA (Fig 2),
+  * COKE matches DKLA's final MSE despite censored transmissions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import build_problem, test_mse
+from repro.configs.coke_krr import PAPER_SETUPS
+from repro.core import admm, cta, ridge
+from repro.core.censor import CensorSchedule
+
+
+def run_setup(name: str, iters: int = 600, samples: int = 400,
+              checkpoints=(50, 100, 200, 400, 600)) -> list[dict]:
+    cfg = PAPER_SETUPS[name]
+    prob, g, _, (ft, lt) = build_problem(cfg, samples_override=samples)
+    theta_star = ridge.rf_ridge(prob.feats, prob.labels, cfg.lam)
+    mse_star = float(jnp.mean(
+        (prob.labels - jnp.einsum("ntd,d->nt", prob.feats, theta_star)) ** 2))
+
+    from benchmarks.common import tune_censor
+    schedule, _ = tune_censor(prob, iters=iters)
+    res_d = admm.run(prob, admm.dkla_schedule(), iters)
+    res_c = admm.run(prob, schedule, iters)
+    res_t = cta.run(prob, g, lr=0.9, num_iters=iters)
+
+    rows = []
+    for k in checkpoints:
+        if k > iters:
+            continue
+        i = k - 1
+        rows.append({
+            "dataset": name, "iteration": k, "mse_star": mse_star,
+            "cta_mse": float(res_t.train_mse[i]),
+            "dkla_mse": float(res_d.train_mse[i]),
+            "coke_mse": float(res_c.train_mse[i]),
+            "cta_comms": int(res_t.comms[i]),
+            "dkla_comms": int(res_d.comms[i]),
+            "coke_comms": int(res_c.comms[i]),
+            "coke_consensus_gap": float(res_c.consensus_gap[i]),
+            "coke_dist_to_star": float(jnp.max(jnp.linalg.norm(
+                res_c.state.theta - theta_star, axis=-1))),
+            "coke_test_mse": test_mse(res_c.state.theta, ft, lt),
+            "dkla_test_mse": test_mse(res_d.state.theta, ft, lt),
+        })
+    return rows
+
+
+def main(emit):
+    for name in ("synthetic", "twitter_large"):
+        rows = run_setup(name)
+        last = rows[-1]
+        # paper claims, asserted softly as derived metrics:
+        admm_beats_cta = last["dkla_mse"] <= last["cta_mse"] + 1e-9
+        coke_matches = abs(last["coke_mse"] - last["dkla_mse"]) \
+            / max(last["dkla_mse"], 1e-12) < 0.05
+        saving = 1.0 - last["coke_comms"] / max(last["dkla_comms"], 1)
+        for r in rows:
+            emit(f"paper_convergence/{name}/k{r['iteration']}", 0.0,
+                 f"cta={r['cta_mse']:.3e};dkla={r['dkla_mse']:.3e};"
+                 f"coke={r['coke_mse']:.3e};comms={r['coke_comms']}")
+        emit(f"paper_convergence/{name}/claims", 0.0,
+             f"admm_beats_cta={admm_beats_cta};coke_matches_dkla={coke_matches};"
+             f"comm_saving={saving:.2%};gap={last['coke_consensus_gap']:.2e}")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"))

@@ -1,0 +1,75 @@
+"""Roofline table from the cached dry-run artifacts (§Roofline deliverable).
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits the
+per-(arch x shape x mesh) three-term roofline with the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS useful fraction, and per-device memory. Also writes a
+markdown table to results/roofline.md for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_results(pattern: str = "*.json") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, pattern))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def _fmt(x):
+    return f"{x:.2e}" if isinstance(x, float) else str(x)
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | strat | compute_s | memory_s | "
+           "collective_s | dominant | useful | peak_GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                         f"{r.get('mesh_kind')} | {r.get('strategy','-')} |"
+                         f" — | — | — | {r.get('status')} | — | — |")
+            continue
+        roof = r["roofline"]
+        peak = r["memory"].get("temp_bytes") or 0
+        arg = r["memory"].get("argument_bytes") or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh_kind']} | "
+            f"{r.get('strategy','allreduce')}{'+fsdp' if r.get('fsdp') else ''} | "
+            f"{roof['compute_s']:.2e} | {roof['memory_s']:.2e} | "
+            f"{roof['collective_s']:.2e} | {roof['dominant']} | "
+            f"{roof['useful_fraction']:.2f} | "
+            f"{(peak + arg) / 1e9:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main(emit):
+    rows = load_results()
+    base = [r for r in rows if r.get("strategy", "allreduce") == "allreduce"
+            and not r.get("fsdp")]
+    ok = [r for r in base if r.get("status") == "ok"]
+    for r in ok:
+        roof = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh_kind']}",
+             roof["step_s_lower_bound"] * 1e6,
+             f"dom={roof['dominant']};useful={roof['useful_fraction']:.2f};"
+             f"coll_GB={roof['collective_bytes_per_device'] / 1e9:.2f}")
+    emit("roofline/summary", 0.0,
+         f"ok={len(ok)};skipped={sum(1 for r in base if r.get('status') == 'skipped')};"
+         f"errors={sum(1 for r in base if r.get('status') == 'error')}")
+    md = markdown_table(rows)
+    out = os.path.join(RESULTS_DIR, "..", "roofline.md")
+    with open(out, "w") as f:
+        f.write(md)
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"))

@@ -1,0 +1,38 @@
+"""Benchmark entry point: one function per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import (kernel_bench, paper_comm_cost,
+                            paper_convergence, paper_generalization,
+                            roofline)
+
+    suites = [
+        ("paper_convergence", paper_convergence.main),   # Figs 1-2, Tab 1/2/4/5
+        ("paper_comm_cost", paper_comm_cost.main),       # Fig 3, Tab 3/6
+        ("paper_generalization", paper_generalization.main),  # Thm 3
+        ("kernels", kernel_bench.main),
+        ("roofline", roofline.main),                     # from dry-run cache
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        try:
+            fn(_emit)
+        except Exception as e:  # keep the harness running; report
+            _emit(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+    _emit("total_wall_s", (time.time() - t0) * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

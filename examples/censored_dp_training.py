@@ -1,0 +1,87 @@
+"""End-to-end driver (deliverable b): train a ~100M-param qwen3-family
+model for a few hundred steps with COKE consensus data-parallelism, and
+compare against standard all-reduce DP on the same token stream.
+
+The agent axis is the paper's network: each agent sees a disjoint shard of
+every batch, runs an inexact ADMM primal step (one AdamW step on the
+augmented Lagrangian), censors its broadcast by ||θ−θ̂|| >= v·μ^k, and
+exchanges θ̂ with its ring neighbors (lax-level: jnp.roll over the stacked
+agent axis → collective-permute on a real mesh).
+
+Run:  PYTHONPATH=src python examples/censored_dp_training.py [--steps 300]
+(~100M params; a few hundred steps takes tens of minutes on CPU — use
+--small for a quick pass.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.distributed.consensus import ConsensusConfig
+from repro.optim.optimizers import OptConfig
+from repro.train.steps import agent_batch, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--small", action="store_true",
+                help="2-layer reduced variant for a quick smoke pass")
+args = ap.parse_args()
+
+# ~100M params: 8 layers, d=768, vocab 32k (qwen3 family, scaled down)
+cfg = get_config("qwen3-1.7b").with_overrides(
+    num_layers=8, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=32000, attn_block_q=128, attn_block_k=128)
+if args.small:
+    cfg = cfg.reduced()
+n_params = sum(x.size for x in jax.tree.leaves(
+    jax.eval_shape(lambda k: __import__("repro.models.model",
+                                        fromlist=["init_params"])
+                   .init_params(cfg, k), jax.random.PRNGKey(0))))
+print(f"model: {cfg.name} variant, {n_params/1e6:.1f}M params")
+
+N_AGENTS = 4
+B, S = 8, 128 if not args.small else 32
+opt = OptConfig(kind="adamw", lr=1e-3, grad_clip=1.0)
+stream = TokenStream(TokenStreamConfig(vocab_size=cfg.vocab_size,
+                                       seq_len=S, global_batch=B,
+                                       structure=0.9))
+
+runs = {}
+for label, ccfg in [
+    ("allreduce", None),
+    ("coke", ConsensusConfig(strategy="coke", rho=1e-3, censor_v=5.0,
+                             censor_mu=0.995)),
+]:
+    init_fn, step_fn, _ = make_train_step(cfg, opt, ccfg,
+                                          num_agents=N_AGENTS)
+    state = init_fn(jax.random.PRNGKey(0))
+    step_j = jax.jit(step_fn)
+    losses, t0 = [], time.time()
+    for i in range(args.steps):
+        toks, labels = stream.batch(i)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if ccfg is not None:
+            batch = agent_batch(batch, N_AGENTS)
+        state, m = step_j(state, batch)
+        losses.append(float(m["loss"]))
+        if i % 20 == 0:
+            extra = ""
+            if ccfg is not None:
+                extra = (f" gap={float(m['consensus_gap']):.3f}"
+                         f" comms={int(m['comms'])}")
+            print(f"[{label}] step {i:4d} loss={losses[-1]:.4f}{extra}",
+                  flush=True)
+    runs[label] = {"final_loss": losses[-1],
+                   "wall_s": time.time() - t0,
+                   "comms": int(m.get("comms", args.steps * N_AGENTS))}
+
+print("\nsummary:")
+for label, r in runs.items():
+    print(f"  {label:10s} final_loss={r['final_loss']:.4f} "
+          f"wall={r['wall_s']:.0f}s transmissions={r['comms']}")
+ideal = args.steps * N_AGENTS
+print(f"  COKE censored {1 - runs['coke']['comms']/ideal:.0%} of the "
+      f"{ideal} possible transmissions.")

@@ -1,0 +1,31 @@
+"""Reproduce the paper's Table 1/3-style comparison on one command.
+
+Prints MSE-vs-iteration and comms-to-target tables for CTA / DKLA / COKE on
+the synthetic setup of Section 5.1.
+
+Run:  PYTHONPATH=src python examples/paper_tables.py  (from the repo root)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.paper_comm_cost import run_setup as comm_rows  # noqa: E402
+from benchmarks.paper_convergence import run_setup as conv_rows  # noqa: E402
+
+print("=== MSE vs iteration (Table 1/2/4/5 protocol, synthetic) ===")
+print(f"{'k':>6s} {'CTA':>12s} {'DKLA':>12s} {'COKE':>12s} "
+      f"{'COKE comms':>12s}")
+for r in conv_rows("synthetic", iters=600, samples=300):
+    print(f"{r['iteration']:6d} {r['cta_mse']:12.3e} {r['dkla_mse']:12.3e} "
+          f"{r['coke_mse']:12.3e} {r['coke_comms']:12d}")
+
+print("\n=== comms to reach target MSE (Table 3/6 protocol) ===")
+print(f"{'target':>12s} {'CTA':>8s} {'DKLA':>8s} {'COKE':>8s} {'saving':>8s}")
+rows, _summary = comm_rows("synthetic", iters=800, samples=300)
+for r in rows:
+    cta = r["cta"] if r["cta"] is not None else "—"
+    dk, ck = r["dkla"], r["coke"]
+    saving = f"{1 - ck / dk:.0%}" if (dk and ck) else "—"
+    print(f"{r['target_mse']:12.3e} {str(cta):>8s} {str(dk):>8s} "
+          f"{str(ck):>8s} {saving:>8s}")

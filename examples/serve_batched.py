@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + greedy decode with KV / SSM-state
+caches across three architecture families (GQA, MLA, pure-SSM).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import Engine, ServeConfig
+
+for arch in ("qwen3-1.7b", "minicpm3-4b", "mamba2-2.7b"):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=12, cache_len=64))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts)
+    dt = time.time() - t0
+    kind = {"mla": "MLA latent cache", "gqa": "GQA KV cache",
+            "none": "SSM recurrent state"}[cfg.attn_kind]
+    print(f"{arch:14s} [{kind:20s}] batch=4 new=12 "
+          f"tok/s={4 * 12 / dt:6.1f}  first row: {out[0][:8]}")

@@ -1,0 +1,63 @@
+"""Sharding-aware npz checkpointing.
+
+Host-gathers every leaf (device_get handles cross-device sharding), stores a
+flat path->array npz plus a small JSON manifest (step, tree structure).
+Restore rebuilds the pytree and (optionally) re-shards via device_put with
+the caller's shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(path + ".npz", **arrays)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    manifest = {"step": step, "num_leaves": len(leaves),
+                "treedef": str(treedef)}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, like, shardings=None):
+    """`like`: a pytree with the target structure (arrays or
+    ShapeDtypeStructs). Returns (tree, step)."""
+    data = np.load(path + ".npz")
+    flat_like, _ = _flatten(like)
+    restored_flat = {}
+    for key, leaf in flat_like.items():
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"checkpoint leaf {key}: shape {arr.shape} != "
+                             f"expected {tuple(leaf.shape)}")
+        restored_flat[key] = arr.astype(leaf.dtype)
+    # rebuild in like's structure
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for leaf_path, _ in paths_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in leaf_path)
+        ordered.append(restored_flat[key])
+    tree = jax.tree_util.tree_unflatten(treedef, ordered)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    with open(path + ".json") as f:
+        step = json.load(f)["step"]
+    return tree, step

@@ -1,0 +1,3 @@
+"""Per-architecture configs (exact assigned specs) + input shapes + registry."""
+from repro.configs.registry import get_config, get_krr_config, list_archs  # noqa: F401
+from repro.configs.shapes import SHAPES, input_specs, long_context_mode  # noqa: F401

@@ -1,0 +1,34 @@
+"""Architecture registry: `--arch <id>` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelConfig
+
+_ARCH_MODULES = {
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "mamba2-2.7b": "repro.configs.mamba2_2p7b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "llama3-405b": "repro.configs.llama3_405b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def get_krr_config(setup: str = "synthetic"):
+    from repro.configs.coke_krr import PAPER_SETUPS
+    return PAPER_SETUPS[setup]

@@ -1,0 +1,23 @@
+"""seamless-m4t-medium [audio] — encoder-decoder, multimodal
+[arXiv:2308.11596].
+
+Transformer backbone only: the mel-spectrogram + conv feature extractor is a
+stub; `input_specs()` provides precomputed frame embeddings (B, S_enc, d).
+12 encoder + 12 decoder layers. Decode shapes run the decoder against a
+cached encoder memory. `long_500k` is skipped for this arch (DESIGN.md).
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    num_layers=12,
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    source="arXiv:2308.11596 (SeamlessM4T medium)",
+)

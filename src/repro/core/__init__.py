@@ -1,0 +1,14 @@
+"""Core contribution of the paper: RF-space decentralized kernel learning.
+
+Public API:
+  rff        — random Fourier feature mapping (common-seed draw, featurize)
+  graph      — network topologies + incidence spectra for the rho-condition
+  losses     — convex losses + the RF-space local empirical risk (15)
+  ridge      — centralized closed-form oracles (26)/(37) + d_K^lambda
+  censor     — censoring schedule h(k) = v mu^k and masked broadcast
+  admm       — DKLA (Alg. 1) and COKE (Alg. 2) batched simulator
+  cta        — diffusion combine-then-adapt baseline
+  online     — streaming COKE (beyond-paper: the stated future-work setting)
+"""
+from repro.core import (admm, censor, cta, graph, losses, online,  # noqa: F401
+                        rff, ridge)

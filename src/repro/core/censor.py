@@ -1,0 +1,53 @@
+"""Communication censoring — the CO in COKE.
+
+The censoring rule (Eqs. 19-20): agent i transmits theta_i^k iff
+
+    H_i(k, xi) = ||theta_hat_i^{k-1} - theta_i^k||_2 - h_i(k) >= 0,
+
+with h(k) = v * mu^k a non-increasing, non-negative threshold sequence
+(Theorem 2 requires exactly this geometric form for linear convergence).
+
+In a bulk-synchronous SPMD program the decision is computed on every replica
+and applied by value-masking (see DESIGN.md §3); here we provide the schedule
+and the masked-update primitive shared by the simulator and the distributed
+runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CensorSchedule:
+    """h(k) = v * mu^k. v=0 disables censoring (COKE degenerates to DKLA)."""
+
+    v: float = 1.0
+    mu: float = 0.95
+
+    def __call__(self, k: jax.Array | int) -> jax.Array:
+        return jnp.asarray(self.v) * jnp.asarray(self.mu) ** k
+
+    @property
+    def enabled(self) -> bool:
+        return self.v > 0.0
+
+
+def censor_decision(
+    theta: jax.Array, theta_hat_prev: jax.Array, threshold: jax.Array
+) -> jax.Array:
+    """send flag per agent: ||theta_hat_prev - theta||_2 >= h(k).
+
+    theta, theta_hat_prev: (..., D); returns boolean (...,).
+    """
+    xi = theta_hat_prev - theta
+    return jnp.sqrt(jnp.sum(xi * xi, axis=-1)) >= threshold
+
+
+def masked_broadcast(
+    theta: jax.Array, theta_hat_prev: jax.Array, send: jax.Array
+) -> jax.Array:
+    """theta_hat^k = theta^k where transmitted, else the stale copy."""
+    return jnp.where(send[..., None], theta, theta_hat_prev)

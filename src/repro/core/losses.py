@@ -1,0 +1,58 @@
+"""Loss functions for the decentralized learning objective (Section 2).
+
+All losses are convex in the prediction; in the RF space the composite local
+objective R_hat_i(theta) is (strongly, with the ridge term) convex — the
+property Remark 1 of the paper highlights as the payoff of RF mapping.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quadratic(y: jax.Array, y_hat: jax.Array) -> jax.Array:
+    """(y - y_hat)^2 — regression (the paper's analyzed case)."""
+    return (y - y_hat) ** 2
+
+
+def logistic(y: jax.Array, y_hat: jax.Array) -> jax.Array:
+    """log(1 + exp(-y * y_hat)) — binary classification, y in {-1, +1}."""
+    return jnp.logaddexp(0.0, -y * y_hat)
+
+
+def hinge(y: jax.Array, y_hat: jax.Array) -> jax.Array:
+    """max(0, 1 - y * y_hat) — SVM-style classification."""
+    return jnp.maximum(0.0, 1.0 - y * y_hat)
+
+
+LOSSES = {"quadratic": quadratic, "logistic": logistic, "hinge": hinge}
+
+
+def local_empirical_risk(
+    theta: jax.Array,
+    feats: jax.Array,
+    labels: jax.Array,
+    lam: float,
+    loss: str = "quadratic",
+) -> jax.Array:
+    """R_hat_i(theta) of Eq. (15): mean loss over the local shard + ridge.
+
+    feats: (T_i, D) RF-mapped inputs; labels: (T_i,); lam is lambda_i (the
+    per-agent share lambda/N in the common-regularizer convention).
+    """
+    preds = feats @ theta
+    data_term = jnp.mean(LOSSES[loss](labels, preds))
+    return data_term + lam * jnp.sum(theta * theta)
+
+
+def global_empirical_risk(theta, feats_all, labels_all, lam_total, loss="quadratic"):
+    """Sum_i R_hat_i(theta) for the centralized benchmark (16).
+
+    feats_all: (N, T, D); labels_all: (N, T). lam_total = lambda (split as
+    lambda/N per agent).
+    """
+    N = feats_all.shape[0]
+    per_agent = jax.vmap(
+        lambda f, y: local_empirical_risk(theta, f, y, lam_total / N, loss)
+    )(feats_all, labels_all)
+    return jnp.sum(per_agent)

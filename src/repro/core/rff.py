@@ -1,0 +1,109 @@
+"""Random Fourier feature (RFF) mapping — the enabling transform of the paper.
+
+Implements both real-valued mappings of Rahimi & Recht (2008) referenced by the
+paper as Eq. (12) (cos/sin pairs, output dim 2L) and Eq. (13)
+(sqrt(2)*cos(w'x + b), output dim L), plus the Gaussian-kernel spectral draw
+with a *common seed* across agents (Algorithm 1/2, step 1).
+
+The feature map is the data-independent bridge that turns the T-dimensional
+kernel decision variable alpha into the fixed-size theta in R^L on which
+consensus is possible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Mapping = Literal["cos_sin", "cos_bias"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RFFParams:
+    """Frozen random-feature parameters shared by every agent.
+
+    omega : (d, L) spectral samples from p_kappa(omega).
+    bias  : (L,) uniform [0, 2pi) phases (only used by the 'cos_bias' map).
+    mapping : which real-valued mapping to apply.
+    """
+
+    omega: jax.Array
+    bias: jax.Array
+    mapping: Mapping = "cos_bias"
+
+    @property
+    def num_features(self) -> int:
+        L = self.omega.shape[1]
+        return 2 * L if self.mapping == "cos_sin" else L
+
+    @property
+    def input_dim(self) -> int:
+        return self.omega.shape[0]
+
+
+def draw_rff(
+    key: jax.Array,
+    input_dim: int,
+    num_features: int,
+    bandwidth: float = 1.0,
+    mapping: Mapping = "cos_bias",
+    dtype=jnp.float32,
+) -> RFFParams:
+    """Draw L iid spectral samples for a Gaussian kernel of the given bandwidth.
+
+    For kappa(x, x') = exp(-||x - x'||^2 / (2 sigma^2)) the spectral density is
+    N(0, sigma^{-2} I) — Bochner's theorem, Eq. (10) of the paper.
+
+    The caller passes the *common random seed*; every agent calling with the
+    same key obtains identical features, which is what makes theta comparable
+    across agents without any raw-data exchange.
+    """
+    k_omega, k_bias = jax.random.split(key)
+    L = num_features // 2 if mapping == "cos_sin" else num_features
+    omega = jax.random.normal(k_omega, (input_dim, L), dtype) / bandwidth
+    bias = jax.random.uniform(k_bias, (L,), dtype, 0.0, 2.0 * jnp.pi)
+    return RFFParams(omega=omega, bias=bias, mapping=mapping)
+
+
+def featurize(params: RFFParams, x: jax.Array) -> jax.Array:
+    """phi_L(x): map raw inputs (..., d) to RF-space features (..., D).
+
+    D = L for 'cos_bias' (Eq. 13), D = 2L for 'cos_sin' (Eq. 12). Both are
+    scaled so that E[phi(x)'phi(x')] = kappa(x, x') and ||phi(x)||_2 <= 1,
+    the bound used in the convergence proof (Eq. 33).
+    """
+    proj = x @ params.omega  # (..., L)
+    L = params.omega.shape[1]
+    if params.mapping == "cos_sin":
+        feats = jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1)
+        return feats * jnp.sqrt(1.0 / L).astype(feats.dtype)
+    feats = jnp.sqrt(2.0).astype(proj.dtype) * jnp.cos(proj + params.bias)
+    return feats * jnp.sqrt(1.0 / L).astype(feats.dtype)
+
+
+def approx_kernel(params: RFFParams, x: jax.Array, y: jax.Array) -> jax.Array:
+    """kappa_hat_L(x, y) = phi_L(x)' phi_L(y) — Eq. (11)."""
+    return featurize(params, x) @ featurize(params, y).T
+
+
+def exact_gaussian_kernel(x: jax.Array, y: jax.Array, bandwidth: float) -> jax.Array:
+    """Exact Gaussian Gram matrix — oracle for RFF approximation tests."""
+    sq = (
+        jnp.sum(x * x, -1)[:, None]
+        - 2.0 * x @ y.T
+        + jnp.sum(y * y, -1)[None, :]
+    )
+    return jnp.exp(-sq / (2.0 * bandwidth**2))
+
+
+@functools.partial(jax.jit, static_argnames=("mapping",))
+def _featurize_jit(omega, bias, x, mapping: Mapping):
+    return featurize(RFFParams(omega, bias, mapping), x)
+
+
+def featurize_jit(params: RFFParams, x: jax.Array) -> jax.Array:
+    """jit'd convenience entry point used by the data pipeline."""
+    return _featurize_jit(params.omega, params.bias, x, params.mapping)

@@ -1,0 +1,65 @@
+"""Centralized closed-form solvers — the oracles the decentralized algorithms
+must converge to (Theorems 1/2 measure distance to these).
+
+* `rf_ridge` implements Eq. (26): theta* = (Phi~'Phi~ + lam I)^{-1} Phi~'y~
+  in the RF space (dimension D, cheap).
+* `kernel_ridge` implements Eq. (37) in the full RKHS (dimension T) — used
+  only in small tests, it carries the curse of dimensionality the paper is
+  escaping from.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _stack_scaled(feats_all: jax.Array, labels_all: jax.Array):
+    """Build Phi~ in R^{T x D} and y~ in R^T with the 1/sqrt(T_i) row scaling
+    of Eq. (26). feats_all: (N, T_i, D), labels_all: (N, T_i) (equal shards)."""
+    N, Ti, D = feats_all.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Ti, feats_all.dtype))
+    phi = (feats_all * scale).reshape(N * Ti, D)
+    y = (labels_all * scale).reshape(N * Ti)
+    return phi, y
+
+
+def rf_ridge(
+    feats_all: jax.Array, labels_all: jax.Array, lam: float
+) -> jax.Array:
+    """Optimal theta* of the RF-space objective (25)/(26)."""
+    phi, y = _stack_scaled(feats_all, labels_all)
+    D = phi.shape[1]
+    gram = phi.T @ phi + lam * jnp.eye(D, dtype=phi.dtype)
+    return jnp.linalg.solve(gram, phi.T @ y)
+
+
+def kernel_ridge(
+    kernel_matrix: jax.Array, labels: jax.Array, lam: float, num_samples_per_agent: int
+) -> jax.Array:
+    """Optimal alpha* of Eq. (37) with equal shards.
+
+    kernel_matrix: (T, T) Gram over all data; labels: (T,).
+    With equal T_i, K~ = K / sqrt(T_i) and y~ = y / sqrt(T_i), so
+    alpha* = (K~'K~ + lam K)^{-1} K~' y~ = (K K / T_i + lam K)^{-1} K y / T_i.
+    """
+    Ti = num_samples_per_agent
+    K = kernel_matrix
+    T = K.shape[0]
+    lhs = K @ K / Ti + lam * K + 1e-8 * jnp.eye(T, dtype=K.dtype)
+    rhs = K @ labels / Ti
+    return jnp.linalg.solve(lhs, rhs)
+
+
+def effective_degrees_of_freedom(kernel_matrix: jax.Array, lam: float) -> jax.Array:
+    """d_K^lambda = Tr(K (K + lam T I)^{-1}) — Theorem 3's feature-count knob."""
+    T = kernel_matrix.shape[0]
+    eig = jnp.linalg.eigvalsh(kernel_matrix)
+    return jnp.sum(eig / (eig + lam * T))
+
+
+def sufficient_features(kernel_matrix: jax.Array, lam: float,
+                        eps: float = 0.5, delta: float = 0.1) -> float:
+    """The L >= (1/lam)(1/eps^2 + 2/(3 eps)) log(16 d_K^lam / delta) bound."""
+    d = float(effective_degrees_of_freedom(kernel_matrix, lam))
+    import math
+    return (1.0 / lam) * (1.0 / eps**2 + 2.0 / (3.0 * eps)) * math.log(16.0 * d / delta)

@@ -1,0 +1,4 @@
+"""Data substrate: the paper's datasets + the framework's LM token pipeline."""
+from repro.data import synthetic, tokens  # noqa: F401
+from repro.data.synthetic import Dataset, paper_synthetic, uci_standin  # noqa: F401
+from repro.data.tokens import TokenStream, TokenStreamConfig  # noqa: F401

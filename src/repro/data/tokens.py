@@ -1,0 +1,65 @@
+"""Synthetic LM token pipeline for the framework side (train/serve drivers).
+
+Deterministic, shardable streams of token batches — each data-parallel agent
+(mesh `data` shard) reads a disjoint slice, matching the paper's
+locally-observed-data regime. Host-side numpy generation, device upload via
+the caller's sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # Markov-ish structure so the loss actually decreases during smoke training
+    structure: float = 0.8
+
+
+class TokenStream:
+    """Infinite deterministic stream of (tokens, labels) batches.
+
+    Generates order-1 structured sequences: with prob `structure` the next
+    token is (prev * 31 + 7) % vocab (learnable), else uniform noise.
+    """
+
+    def __init__(self, cfg: TokenStreamConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> tuple[np.ndarray, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+        toks = np.empty((B, S), np.int32)
+        toks[:, 0] = rng.integers(0, V, B)
+        det = (rng.random((B, S)) < cfg.structure)
+        noise = rng.integers(0, V, (B, S))
+        for t in range(1, S):
+            nxt = (toks[:, t - 1].astype(np.int64) * 31 + 7) % V
+            toks[:, t] = np.where(det[:, t], nxt, noise[:, t]).astype(np.int32)
+        labels = np.roll(toks, -1, axis=1)
+        labels[:, -1] = toks[:, 0]
+        return toks, labels
+
+    def __iter__(self) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def regression_shards_to_device(dataset, rff_params, featurize_fn):
+    """Featurize a per-agent `Dataset` into (N, T, D) arrays ready for the
+    COKE Problem — used by the kernel-regression driver."""
+    import jax.numpy as jnp
+
+    feats = featurize_fn(rff_params, jnp.asarray(dataset.x))
+    labels = jnp.asarray(dataset.y)
+    return feats, labels

@@ -1,0 +1,3 @@
+"""Distribution substrate: meshes, divisibility-aware sharding, consensus DP."""
+from repro.distributed import consensus, sharding  # noqa: F401
+from repro.distributed.consensus import ConsensusConfig  # noqa: F401

@@ -1,0 +1,238 @@
+"""The paper's technique as a first-class data-parallel strategy.
+
+Each data-parallel shard (the `pod` x `data` mesh axes jointly) is one COKE
+*agent* holding its own parameter copy theta_i; the consensus graph is the
+ring matching the ICI torus. All agent-axis operations are expressed as
+plain jnp over a leading stacked agent dimension sharded over the batch
+axes — `jnp.roll` along that dimension lowers to `collective-permute`, so
+the neighbor exchange costs two permutes per step instead of an all-reduce.
+
+Strategies:
+  allreduce — standard DP (mean gradient; the framework baseline),
+  dkla      — decentralized ADMM (Alg. 1) with an inexact inner argmin
+              (one optimizer step on the augmented Lagrangian),
+  coke      — dkla + communication censoring (Alg. 2); in SPMD the permute
+              always executes but carries the *stale* theta_hat when
+              censored — semantically identical to not transmitting; the
+              paper's metric (# transmissions) is counted exactly,
+  cta       — diffusion combine-then-adapt baseline (ring Metropolis mix),
+  coke_et   — beyond-paper event-triggered variant: `local_steps` purely
+              local optimizer steps between consensus rounds, which REMOVES
+              the collectives from the lowered graph for censored steps
+              (a real bytes saving visible in the roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import (OptConfig, apply_updates,
+                                    init_opt_state, opt_update)
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=(),
+         meta_fields=("strategy", "rho", "censor_v", "censor_mu",
+                      "local_steps", "mix_weight", "track_gap", "offsets",
+                      "use_fused_kernel"))
+@dataclasses.dataclass(frozen=True)
+class ConsensusConfig:
+    strategy: str = "allreduce"  # allreduce | dkla | coke | cta | coke_et
+    rho: float = 1e-3
+    censor_v: float = 1.0
+    censor_mu: float = 0.99
+    local_steps: int = 1         # coke_et: local steps per consensus round
+    mix_weight: float = 1.0 / 3.0  # cta ring mixing (self + 2 neighbors)
+    # consensus_gap is an all-reduce of the full parameter tree — keep it
+    # out of the hot step unless explicitly requested (§Perf pair C).
+    track_gap: bool = True
+    # circulant topology: agent i ~ i±o for each offset o. (1,) = ring;
+    # (1, k) = 2k-regular circulant — denser graphs raise sigma_min(S_-)
+    # (faster consensus per Thm 2) at 2 extra permutes per added offset.
+    offsets: tuple = (1,)
+    # route the augmented-gradient + censor-norm computation through the
+    # fused Pallas kernel (repro.kernels.coke_update) — the TPU fast path;
+    # on this CPU host it runs in interpret mode (tests assert equality).
+    use_fused_kernel: bool = False
+
+    @property
+    def degree(self) -> float:
+        return 2.0 * len(self.offsets)
+
+    @property
+    def is_admm(self) -> bool:
+        return self.strategy in ("dkla", "coke", "coke_et")
+
+
+def needs_agent_stack(cfg: ConsensusConfig) -> bool:
+    return cfg.strategy != "allreduce"
+
+
+# ---------------------------------------------------------------------------
+# Agent-stacked state
+# ---------------------------------------------------------------------------
+
+def stack_params(params, num_agents: int):
+    """Broadcast params to a leading agent axis (all agents start equal,
+    matching theta^0 identical across agents)."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (num_agents, *p.shape)), params)
+
+
+def init_consensus_state(ccfg: ConsensusConfig, opt_cfg: OptConfig,
+                         params_stacked) -> dict[str, Any]:
+    """State carried across steps alongside the stacked params."""
+    state: dict[str, Any] = {
+        "opt": jax.vmap(lambda p: init_opt_state(opt_cfg, p))(params_stacked),
+        "step": jnp.zeros((), jnp.int32),
+        "comms": jnp.zeros((), jnp.int32),
+    }
+    if ccfg.is_admm:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_stacked)
+        theta_hat = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params_stacked)
+        state["gamma"] = zeros
+        state["theta_hat"] = theta_hat
+        # cached neighbor broadcasts: all agents start identical, so the
+        # initial cache equals theta_hat itself (exact). Caching the dual-
+        # update fetch for the next primal step halves the permute bytes
+        # (4 -> 2 per iteration) with bit-identical iterates (§Perf).
+        state["nbr_left"] = theta_hat
+        state["nbr_right"] = theta_hat
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Ring primitives over the agent axis
+# ---------------------------------------------------------------------------
+
+def _ring_neighbors(tree, offsets: tuple = (1,)):
+    """Circulant neighbor copies via roll on the agent axis (each roll
+    lowers to a collective-permute when that axis is mesh-sharded).
+    Returns (sum_of_neighbors_left..., right...) halves as a pair of
+    summed trees so callers stay offset-agnostic."""
+    left = None
+    right = None
+    for o in offsets:
+        l_o = jax.tree.map(lambda x: jnp.roll(x, o, axis=0), tree)
+        r_o = jax.tree.map(lambda x: jnp.roll(x, -o, axis=0), tree)
+        left = l_o if left is None else jax.tree.map(jnp.add, left, l_o)
+        right = r_o if right is None else jax.tree.map(jnp.add, right, r_o)
+    return left, right
+
+
+def _agent_norms(diff_tree) -> jax.Array:
+    """Per-agent l2 norm over all parameters: (N,)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)),
+                     axis=tuple(range(1, x.ndim)))
+             for x in jax.tree.leaves(diff_tree))
+    return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# One consensus update given per-agent local gradients
+# ---------------------------------------------------------------------------
+
+def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
+                     params, grads, state):
+    """params/grads: agent-stacked pytrees (N, ...). Returns
+    (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    metrics: dict[str, jax.Array] = {}
+
+    if ccfg.strategy == "cta":
+        left, right = _ring_neighbors(params, ccfg.offsets)
+        w = ccfg.mix_weight / len(ccfg.offsets)
+        combined = jax.tree.map(
+            lambda p, l, r: ((1 - ccfg.degree * w) * p.astype(jnp.float32)
+                             + w * (l + r).astype(jnp.float32)).astype(p.dtype),
+            params, left, right)
+        updates, opt = jax.vmap(
+            lambda g, s, p: opt_update(opt_cfg, g, s, p)
+        )(grads, state["opt"], combined)
+        new_params = apply_updates(combined, updates)
+        n_agents = jax.tree.leaves(params)[0].shape[0]
+        new_state = dict(state, opt=opt, step=step,
+                         comms=state["comms"] + n_agents)
+        return new_params, new_state, metrics
+
+    # --- ADMM family (dkla / coke / coke_et) -------------------------------
+    theta_hat, gamma = state["theta_hat"], state["gamma"]
+    # neighbors' theta_hat^{k-1}: served from the cache filled by the
+    # previous step's dual-update fetch — no permute here
+    left, right = state["nbr_left"], state["nbr_right"]
+    deg = ccfg.degree
+
+    # inexact (21a): one optimizer step on the augmented Lagrangian gradient
+    #   g_aug = g_local + 2 rho deg theta + gamma - rho (deg theta_hat + sum_n theta_hat_n)
+    fused_xi_norm = None
+    if ccfg.use_fused_kernel:
+        from repro.kernels.coke_update.ops import coke_update_pytree
+        nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
+        half = jax.tree.map(lambda x: 0.5 * x, nbr_sum)
+        g_aug, fused_xi_norm = coke_update_pytree(
+            params, theta_hat, gamma, grads, half, half,
+            rho=ccfg.rho, deg=deg)
+    else:
+        g_aug = jax.tree.map(
+            lambda g, p, th, gm, l, r: (
+                g.astype(jnp.float32)
+                + 2.0 * ccfg.rho * deg * p.astype(jnp.float32)
+                + gm
+                - ccfg.rho * (deg * th + l + r)),
+            grads, params, theta_hat, gamma, left, right)
+    updates, opt = jax.vmap(
+        lambda g, s, p: opt_update(opt_cfg, g, s, p)
+    )(g_aug, state["opt"], params)
+    new_params = apply_updates(params, updates)
+
+    # censoring (19)/(20)
+    if ccfg.strategy == "dkla":
+        send = jnp.ones((jax.tree.leaves(params)[0].shape[0],), bool)
+    else:
+        xi = jax.tree.map(lambda th, p: th - p.astype(jnp.float32),
+                          theta_hat, new_params)
+        h_k = ccfg.censor_v * ccfg.censor_mu ** step.astype(jnp.float32)
+        send = _agent_norms(xi) >= h_k
+    new_theta_hat = jax.tree.map(
+        lambda th, p: jnp.where(
+            send.reshape((-1,) + (1,) * (p.ndim - 1)),
+            p.astype(jnp.float32), th),
+        theta_hat, new_params)
+
+    # dual (21b) with theta_hat^k values — the step's ONLY neighbor fetch
+    # (2 permutes); cached for the next step's primal update
+    hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
+    new_gamma = jax.tree.map(
+        lambda gm, th, l, r: gm + ccfg.rho * (deg * th - l - r),
+        gamma, new_theta_hat, hat_l, hat_r)
+
+    metrics["send_frac"] = jnp.mean(send.astype(jnp.float32))
+    new_state = dict(state, opt=opt, step=step,
+                     comms=state["comms"] + jnp.sum(send.astype(jnp.int32)),
+                     theta_hat=new_theta_hat, gamma=new_gamma,
+                     nbr_left=hat_l, nbr_right=hat_r)
+    return new_params, new_state, metrics
+
+
+def local_update(opt_cfg: OptConfig, params, grads, state):
+    """Purely local step (no collectives over the agent axis) — the censored
+    rounds of the event-triggered coke_et strategy."""
+    updates, opt = jax.vmap(
+        lambda g, s, p: opt_update(opt_cfg, g, s, p)
+    )(grads, state["opt"], params)
+    return apply_updates(params, updates), dict(
+        state, opt=opt, step=state["step"] + 1)
+
+
+def consensus_gap(params) -> jax.Array:
+    """max_i ||theta_i - mean theta|| — the Fig.-1 functional-consensus
+    diagnostic, for agent-stacked params."""
+    mean = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), 0,
+                                           keepdims=True), params)
+    diff = jax.tree.map(lambda p, m: p.astype(jnp.float32) - m, params, mean)
+    return jnp.max(_agent_norms(diff))

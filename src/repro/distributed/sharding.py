@@ -1,0 +1,223 @@
+"""Divisibility-aware sharding rules.
+
+Head counts / vocab sizes of the assigned archs are not uniformly divisible
+by the 16-way `model` axis (internvl2 has 14 heads, minicpm3 has 40, GQA KV
+is often 8). The rule-set here shards a dim over a mesh axis IFF divisible,
+else falls back (replicate, or for KV caches shard the cache-length dim —
+sequence-parallel KV). This guarantees every (arch x shape x mesh) lowers;
+the roofline table then shows the replication cost where it occurs.
+
+Naming-based rules walk the param pytree with tree_map_with_path; params
+under a stacked layer collection ("blocks", "encoder", "decoder") carry
+leading scan dims that are never sharded (optionally FSDP-sharded over the
+batch axes — a hillclimb lever).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.common import ModelConfig
+
+
+def _div(size: int, mesh, axis: str | tuple[str, ...] | None):
+    """axis if size divides the mesh extent, else None."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        import math
+        extent = math.prod(mesh.shape[a] for a in axis)
+    else:
+        extent = mesh.shape[axis]
+    return axis if size % extent == 0 else None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# --- per-tensor rules ------------------------------------------------------
+
+def _leaf_spec(cfg: ModelConfig, mesh, path: str, shape: tuple[int, ...],
+               n_stack: int, fsdp: bool) -> P:
+    """PartitionSpec for the *unstacked* trailing dims; `n_stack` leading
+    scan dims get None (or FSDP over batch axes on the first stack dim)."""
+    m = "model"
+    name = path.split("/")[-1]
+    dims = shape[n_stack:]
+
+    def spec(*parts):
+        lead = [None] * n_stack
+        parts = list(parts)
+        if fsdp:
+            # ZeRO-style: shard the largest still-unsharded weight dim over
+            # the batch axes (falls back to the stack dim when divisible)
+            import math
+            ba = batch_axes(mesh)
+            extent = math.prod(mesh.shape[a] for a in ba) if ba else 0
+            if extent:
+                cands = [(dims[i], i) for i in range(len(parts))
+                         if parts[i] is None and dims[i] % extent == 0
+                         and dims[i] >= extent]
+                if cands:
+                    _, idx = max(cands)
+                    parts[idx] = ba
+                elif n_stack >= 1 and shape[0] % extent == 0:
+                    lead[0] = ba
+        return P(*lead, *parts)
+
+    if name in ("embed",):                       # (Vp, d)
+        return spec(_div(dims[0], mesh, m), None)
+    if name == "lm_head":                        # (d, Vp)
+        return spec(None, _div(dims[1], mesh, m))
+    if name in ("wq", "wk", "wv"):               # (d, H, Dh)
+        return spec(None, _div(dims[1], mesh, m), None)
+    if name == "wo":                             # (H, Dh, d)
+        return spec(_div(dims[0], mesh, m), None, None)
+    if name == "wq_b" or name == "wkv_b":        # (r, H, e)
+        return spec(None, _div(dims[1], mesh, m), None)
+    if name in ("wq_a", "wkv_a"):                # (d, r) small latents
+        return spec(None, None)
+    if name in ("w_gate", "w_up"):
+        if len(dims) == 3:                       # MoE experts (E, d, f)
+            e = _div(dims[0], mesh, m)
+            return spec(e, None, _div(dims[2], mesh, m) if e is None else None)
+        return spec(None, _div(dims[1], mesh, m))   # dense (d, f)
+    if name == "w_down":
+        if len(dims) == 3:                       # (E, f, d)
+            e = _div(dims[0], mesh, m)
+            return spec(e, _div(dims[1], mesh, m) if e is None else None, None)
+        return spec(_div(dims[0], mesh, m), None)   # (f, d)
+    if name in ("shared_gate", "shared_up"):     # (d, fs)
+        return spec(None, _div(dims[1], mesh, m))
+    if name == "shared_down":                    # (fs, d)
+        return spec(_div(dims[0], mesh, m), None)
+    if name in ("w_z", "w_x"):                   # ssm (d, d_inner)
+        return spec(None, _div(dims[1], mesh, m))
+    if name == "w_dt":                           # ssm (d, H)
+        return spec(None, _div(dims[1], mesh, m))
+    if name == "w_bc":                           # ssm (d, 2N) — B/C shared
+        return spec(None, None)
+    if name == "conv_x":                         # ssm (W, d_inner)
+        return spec(None, _div(dims[1], mesh, m))
+    if name in ("conv_bc", "conv_bx", "conv_bbc"):
+        if name == "conv_bx":                    # (d_inner,)
+            return spec(_div(dims[0], mesh, m))
+        return spec(*([None] * len(dims)))
+    if name == "norm" and len(dims) == 1:        # ssm gated norm (d_inner,)
+        return spec(_div(dims[0], mesh, m))
+    if name == "out_proj":                       # ssm (d_inner, d)
+        return spec(_div(dims[0], mesh, m), None)
+    if name == "router":                         # (d, E) fp32, small
+        return spec(None, None)
+    # norms, biases, conv, A_log, D, dt_bias, scalars -> replicated
+    return spec(*([None] * len(dims)))
+
+
+_STACKED_ROOTS = ("blocks", "encoder", "decoder")
+
+
+def _stack_depth(cfg: ModelConfig, path: str) -> int:
+    parts = path.split("/")
+    root = next((p for p in parts if p in _STACKED_ROOTS), None)
+    if root is None:
+        return 0
+    if root == "blocks" and cfg.arch_type == "hybrid":
+        return 2  # (groups, every, ...)
+    return 1
+
+
+def param_specs(cfg: ModelConfig, shapes_pytree, mesh, fsdp: bool = False):
+    """PartitionSpec pytree matching a params (or ShapeDtypeStruct) pytree."""
+    def rule(path, leaf):
+        ps = _path_str(path)
+        return _leaf_spec(cfg, mesh, ps, leaf.shape, _stack_depth(cfg, ps),
+                          fsdp)
+    return jax.tree_util.tree_map_with_path(rule, shapes_pytree)
+
+
+def param_shardings(cfg: ModelConfig, shapes_pytree, mesh,
+                    fsdp: bool = False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, shapes_pytree, mesh, fsdp))
+
+
+# --- batch / serve-state specs ---------------------------------------------
+
+def batch_specs(cfg: ModelConfig, specs_pytree, mesh):
+    """Token/embedding batches: leading batch dim over the batch axes (iff
+    divisible), everything else replicated."""
+    ba = batch_axes(mesh)
+
+    def rule(leaf):
+        b = _div(leaf.shape[0], mesh, ba) if leaf.ndim >= 1 else None
+        return P(b, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, specs_pytree)
+
+
+def decode_state_specs(cfg: ModelConfig, state_pytree, mesh):
+    """Serve-state sharding: (L, B, C, KV, Dh) caches shard batch over the
+    batch axes and KV-heads over `model` — falling back to sequence-parallel
+    cache (shard C over model) when the head count doesn't divide."""
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shape = leaf.shape
+        if name == "slot_positions":                   # (L, C) or (G, C)
+            return P(*([None] * leaf.ndim))
+        if name in ("k", "v"):                         # (L, B, C, KV, Dh)
+            b = _div(shape[1], mesh, ba)
+            kv = _div(shape[3], mesh, "model")
+            c = None if kv else _div(shape[2], mesh, "model")
+            return P(None, b, c, kv, None)
+        if name in ("ckv", "krope"):                   # (L, B, C, r)
+            b = _div(shape[1], mesh, ba)
+            c = _div(shape[2], mesh, "model")
+            return P(None, b, c, None)
+        if name in ("cross_k", "cross_v"):             # (L, B, S_enc, KV, Dh)
+            b = _div(shape[1], mesh, ba)
+            kv = _div(shape[3], mesh, "model")
+            c = None if kv else _div(shape[2], mesh, "model")
+            return P(None, b, c, kv, None)
+        if name == "conv_x":                           # (.., B, W-1, di)
+            lead = leaf.ndim - 3
+            b = _div(shape[lead], mesh, ba)
+            return P(*([None] * lead), b, None,
+                     _div(shape[-1], mesh, "model"))
+        if name == "conv_bc":                          # (.., B, W-1, 2N)
+            lead = leaf.ndim - 3
+            b = _div(shape[lead], mesh, ba)
+            return P(*([None] * lead), b, None, None)
+        if name == "state":                            # (.., B, H, P, N)
+            lead = leaf.ndim - 4
+            b = _div(shape[lead], mesh, ba)
+            return P(*([None] * lead), b,
+                     _div(shape[lead + 1], mesh, "model"), None, None)
+        # fallback: replicate
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, state_pytree)
+
+
+def step_in_specs(cfg: ModelConfig, kind: str, specs: dict, mesh):
+    """Input PartitionSpecs for a dry-run step of the given kind."""
+    if kind in ("train", "prefill"):
+        return batch_specs(cfg, specs, mesh)
+    ba = batch_axes(mesh)
+    return {
+        "token": P(_div(specs["token"].shape[0], mesh, ba), None),
+        "position": P(),
+        "state": decode_state_specs(cfg, specs["state"], mesh),
+    }

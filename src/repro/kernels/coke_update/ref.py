@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused COKE update."""
+import jax.numpy as jnp
+
+
+def coke_update_ref(theta, theta_hat, gamma, grad, left, right, *, rho,
+                    deg=2.0):
+    f = lambda a: a.astype(jnp.float32)
+    gaug = (f(grad) + 2.0 * rho * deg * f(theta) + f(gamma)
+            - rho * (deg * f(theta_hat) + f(left) + f(right)))
+    xi = f(theta_hat) - f(theta)
+    return gaug, jnp.sum(xi * xi, axis=-1)

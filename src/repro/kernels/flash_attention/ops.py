@@ -1,0 +1,27 @@
+"""Public entry: GQA-layout wrapper over the flash kernel.
+
+Takes (B, S, H, Dh) activations-layout q and (B, S, KV, *) k/v (the model's
+native layout), broadcasts KV groups, and calls the kernel. On TPU this is
+the prefill path; the pure-jnp blockwise implementation remains the
+XLA-lowerable oracle used by the dry-run.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def gqa_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
+              interpret=True):
+    """q: (B,Sq,H,Dh); k/v: (B,Sk,KV,*) -> (B,Sq,H,Dv)."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

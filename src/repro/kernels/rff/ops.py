@@ -1,0 +1,19 @@
+"""jit'd public entry point for the fused RFF featurizer."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.rff import RFFParams
+from repro.kernels.rff.rff import rff_pallas
+
+
+def featurize_fused(params: RFFParams, x: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """Drop-in for repro.core.rff.featurize (cos_bias mapping), batched over
+    leading dims."""
+    if x.ndim > 2:
+        flat = x.reshape(-1, x.shape[-1])
+        out = rff_pallas(flat, params.omega, params.bias,
+                         interpret=interpret)
+        return out.reshape(*x.shape[:-1], out.shape[-1])
+    return rff_pallas(x, params.omega, params.bias, interpret=interpret)

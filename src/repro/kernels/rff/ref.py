@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the RFF kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rff_ref(x: jax.Array, omega: jax.Array, bias: jax.Array) -> jax.Array:
+    L = omega.shape[1]
+    proj = jnp.dot(x, omega, preferred_element_type=jnp.float32)
+    return (jnp.sqrt(2.0 / L) * jnp.cos(proj + bias[None, :])).astype(x.dtype)

@@ -1,0 +1,144 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds per step, per chip:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+HLO_FLOPs / bytes come from compiled.cost_analysis() of the SPMD-partitioned
+(= per-device) program. collective bytes are NOT in cost_analysis: we parse
+the compiled HLO text and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (TPU v5e-class target given by the assignment):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `bf16[2,128,1024]{2,1,0}` (layout suffix optional); scalars: `f32[]`
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind operand bytes (per-device program)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z\-]+)", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = next((k for k in _COLLECTIVES if op == k or
+                     op.startswith(k + "-start")), None)
+        if kind is None:
+            continue
+        # operand shapes: everything inside the top-level call parens
+        paren = stripped.find("(", m.end())
+        if paren < 0:
+            continue
+        args = stripped[paren:]
+        # stop at metadata to avoid counting shapes in attributes
+        for stop in ("replica_groups", "source_target_pairs", "metadata",
+                     "channel_id", "dimensions"):
+            idx = args.find(stop)
+            if idx > 0:
+                args = args[:idx]
+                break
+        for dt, dims in _SHAPE_RE.findall(args):
+            out[kind] += _shape_bytes(dt, dims)
+    return out
+
+
+def roofline(cost: dict, coll_bytes: dict[str, int]) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(coll_bytes.values()))
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_accessed / HBM_BW
+    coll_t = cbytes / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": cbytes,
+        "collective_breakdown": coll_bytes,
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "step_s_lower_bound": max(terms.values()),
+    }
+
+
+def count_params(shapes_pytree) -> int:
+    import jax
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes_pytree))
+
+
+def active_params(cfg, shapes_pytree) -> int:
+    """Active (per-token) params: MoE counts top_k + shared experts only."""
+    import jax
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes_pytree)[0]
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n = math.prod(leaf.shape)
+        if cfg.is_moe and any(k in ("w_gate", "w_up", "w_down")
+                              for k in keys) and leaf.ndim >= 3 \
+                and leaf.shape[-3] == cfg.num_experts:
+            n = n * cfg.top_k // cfg.num_experts
+        total += n
+    return total
+
+
+def model_flops(cfg, kind: str, global_batch: int, seq_len: int,
+                n_active: int) -> float:
+    """6*N*D (train) or 2*N*D (forward-only), D = tokens per step.
+
+    Enc-dec: a token traverses only its branch (~half the params), so the
+    effective N*D halves (enc tokens never see the decoder and vice versa).
+    """
+    branch = 0.5 if getattr(cfg, "encoder_layers", 0) else 1.0
+    if kind == "train":
+        return 6.0 * n_active * branch * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n_active * branch * global_batch * seq_len
+    return 2.0 * n_active * branch * global_batch  # decode: one new token
+
+
+def efficiency(cost_flops_per_device: float, num_devices: int,
+               mflops: float) -> float:
+    """MODEL_FLOPS / HLO_FLOPS (global) — >1 impossible; <<1 = waste
+    (remat recompute, attention quadratic term, dispatch overhead)."""
+    hlo_global = cost_flops_per_device * num_devices
+    return mflops / hlo_global if hlo_global else 0.0

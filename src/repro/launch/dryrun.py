@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production meshes with ShapeDtypeStruct stand-ins —
+no allocation, no execution. Proves the distribution config is coherent and
+extracts memory / cost / collective data for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch ID|all]
+      [--shape NAME|all] [--mesh single|multi|both]
+      [--strategy allreduce|coke|coke_et] [--fsdp] [--tag NAME] [--force]
+
+Results cached to results/dryrun/<tag>.json per combination (re-runs skip
+completed entries unless --force).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.distributed.consensus import ConsensusConfig  # noqa: E402
+from repro.launch import analysis  # noqa: E402
+from repro.launch.mesh import batch_axes, make_production_mesh, num_agents  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.optim.optimizers import OptConfig  # noqa: E402
+from repro.train.steps import make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+
+def _tree_specs_for_state(cfg, state_shapes, mesh, fsdp):
+    """Shardings for a train state: params rules apply throughout (opt m/v
+    mirror param paths), scalars replicate."""
+    return shd.param_specs(cfg, state_shapes, mesh, fsdp=fsdp)
+
+
+def _agent_stack_specs(cfg, state_shapes, mesh, fsdp):
+    """Consensus state: leading agent axis over the batch axes on every
+    stacked leaf; inner dims follow the param rules computed on the
+    agent-STRIPPED shapes (the rules are positional in the stack depth)."""
+    ba = batch_axes(mesh)
+    N = num_agents(mesh)
+
+    def strip(leaf):
+        if leaf.ndim >= 1 and leaf.shape and leaf.shape[0] == N:
+            return jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+        return leaf
+
+    stripped = jax.tree.map(strip, state_shapes)
+    base = shd.param_specs(cfg, stripped, mesh, fsdp=False)
+
+    def add_agent(spec, leaf):
+        if leaf.ndim >= 1 and leaf.shape and leaf.shape[0] == N:
+            inner = list(spec)[: leaf.ndim - 1]
+            inner += [None] * (leaf.ndim - 1 - len(inner))
+            return P(ba, *inner)
+        return P(*list(spec)[: leaf.ndim])
+
+    return jax.tree.map(add_agent, base, state_shapes)
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, strategy="allreduce",
+              fsdp=False, seq_parallel=False, microbatches=1, head_pad=0,
+              donate=True):
+    """Returns (lowered, compiled, meta)."""
+    cfg = get_config(arch).with_overrides(dtype=jnp.bfloat16)
+    if head_pad:
+        cfg = cfg.with_overrides(tp_head_pad=head_pad)
+    if seq_parallel:
+        ba = batch_axes(mesh)
+        cfg = cfg.with_overrides(seq_parallel=True, act_batch_axes=ba)
+        jax.set_mesh(mesh)
+    rcfg, kind, specs = input_specs(cfg, shape_name)
+    if rcfg is None:
+        return None, None, {"skipped": True,
+                            "reason": "long_500k inapplicable (DESIGN.md)"}
+    shape = SHAPES[shape_name]
+
+    def ns(spec_tree):
+        """PartitionSpec pytree -> NamedSharding pytree on this mesh."""
+        return jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    with mesh:
+        if kind == "train":
+            opt_cfg = OptConfig(kind="adamw", lr=1e-4)
+            if strategy == "allreduce":
+                init_fn, step_fn, _ = make_train_step(
+                    rcfg, opt_cfg, microbatches=microbatches)
+                state_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+                state_specs = _tree_specs_for_state(rcfg, state_shapes, mesh,
+                                                    fsdp)
+                batch_sp = shd.batch_specs(rcfg, specs, mesh)
+                fn = jax.jit(step_fn,
+                             in_shardings=(ns(state_specs), ns(batch_sp)),
+                             out_shardings=(ns(state_specs), None),
+                             donate_argnums=(0,) if donate else ())
+                lowered = fn.lower(state_shapes, specs)
+            else:
+                N = num_agents(mesh)
+                ccfg = ConsensusConfig(strategy=strategy, rho=1e-3,
+                                       track_gap=False)
+                init_fn, step_fn, local_fn = make_train_step(
+                    rcfg, opt_cfg, ccfg, num_agents=N)
+                if strategy == "coke_et_local":
+                    step_fn = local_fn
+                state_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+                state_specs = _agent_stack_specs(rcfg, state_shapes, mesh,
+                                                 fsdp)
+                # batch gains agent axis: (N, B/N, ...)
+                def stack_spec(leaf):
+                    B = leaf.shape[0]
+                    n = (N, B // N, *leaf.shape[1:])
+                    return jax.ShapeDtypeStruct(n, leaf.dtype)
+                specs_stacked = jax.tree.map(stack_spec, specs)
+                ba = batch_axes(mesh)
+                batch_sp = jax.tree.map(
+                    lambda leaf: P(ba, *([None] * (leaf.ndim - 1))),
+                    specs_stacked)
+                fn = jax.jit(step_fn,
+                             in_shardings=(ns(state_specs), ns(batch_sp)),
+                             out_shardings=(ns(state_specs), None),
+                             donate_argnums=(0,) if donate else ())
+                lowered = fn.lower(state_shapes, specs_stacked)
+        elif kind == "prefill":
+            param_shapes = model_lib.param_shapes(rcfg)
+            p_specs = shd.param_specs(rcfg, param_shapes, mesh, fsdp=fsdp)
+            batch_sp = shd.batch_specs(rcfg, specs, mesh)
+            fn = jax.jit(lambda p, b: model_lib.prefill(p, rcfg, b),
+                         in_shardings=(ns(p_specs), ns(batch_sp)))
+            lowered = fn.lower(param_shapes, specs)
+        else:  # decode
+            param_shapes = model_lib.param_shapes(rcfg)
+            p_specs = shd.param_specs(rcfg, param_shapes, mesh, fsdp=fsdp)
+            in_sp = shd.step_in_specs(rcfg, kind, specs, mesh)
+            fn = jax.jit(
+                lambda p, t, s, pos: model_lib.decode_step(p, rcfg, t, s,
+                                                           pos),
+                in_shardings=(ns(p_specs), ns(in_sp["token"]),
+                              ns(in_sp["state"]), ns(in_sp["position"])),
+                out_shardings=(None, ns(in_sp["state"])),
+                donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(param_shapes, specs["token"], specs["state"],
+                               specs["position"])
+
+        compiled = lowered.compile()
+
+    n_dev = mesh.size
+    p_shapes = (state_shapes["params"] if kind == "train" and
+                strategy == "allreduce" else
+                state_shapes["params"] if kind == "train" else param_shapes)
+    n_params = analysis.count_params(
+        jax.tree.map(lambda x: x, p_shapes))
+    n_active = analysis.active_params(rcfg, p_shapes)
+    if kind == "train" and strategy != "allreduce":
+        # stacked agent axis inflates the count; normalize
+        n_params //= num_agents(mesh)
+        n_active //= num_agents(mesh)
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "axes": list(mesh.axis_names), "devices": n_dev,
+        "strategy": strategy, "fsdp": fsdp,
+        "params": int(n_params), "active_params": int(n_active),
+        "global_batch": shape.global_batch, "seq_len": shape.seq_len,
+    }
+    return lowered, compiled, meta
+
+
+def analyze(lowered, compiled, meta) -> dict:
+    from repro.launch.hlo_analyzer import analyze_hlo
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    hres = analyze_hlo(hlo)  # trip-count-aware FLOPs/bytes/collectives
+    roof = analysis.roofline(
+        {"flops": hres["dot_flops"], "bytes accessed": hres["hbm_bytes"]},
+        hres["collective_bytes"])
+    roof["xla_cost_flops_body_once"] = float(cost.get("flops", 0.0))
+    roof["xla_cost_bytes_body_once"] = float(cost.get("bytes accessed", 0.0))
+    mf = analysis.model_flops(
+        get_config(meta["arch"]), meta["kind"], meta["global_batch"],
+        meta["seq_len"], meta["active_params"])
+    roof["model_flops"] = mf
+    roof["useful_fraction"] = analysis.efficiency(
+        roof["flops_per_device"], meta["devices"], mf)
+    result = dict(meta)
+    result["roofline"] = roof
+    result["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    return result
+
+
+def run_pair(arch, shape_name, mesh_kind, *, strategy="allreduce",
+             fsdp=False, seq_parallel=False, microbatches=1, head_pad=0,
+             tag=None, force=False) -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = tag or f"{arch}_{shape_name}_{mesh_kind}_{strategy}" + \
+        ("_fsdp" if fsdp else "") + ("_seqpar" if seq_parallel else "") + \
+        (f"_mb{microbatches}" if microbatches > 1 else "") + \
+        (f"_hp{head_pad}" if head_pad else "")
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = lower_one(arch, shape_name, mesh,
+                                            strategy=strategy, fsdp=fsdp,
+                                            seq_parallel=seq_parallel,
+                                            microbatches=microbatches,
+                                            head_pad=head_pad)
+        if compiled is None:
+            result = dict(meta, arch=arch, shape=shape_name,
+                          mesh_kind=mesh_kind)
+        else:
+            result = analyze(lowered, compiled, meta)
+            result["mesh_kind"] = mesh_kind
+        result["status"] = "skipped" if compiled is None else "ok"
+    except Exception as e:  # record failures — they are bugs to fix
+        result = {"arch": arch, "shape": shape_name, "mesh_kind": mesh_kind,
+                  "strategy": strategy, "fsdp": fsdp, "status": "error",
+                  "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+    result["elapsed_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="allreduce")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--seqpar", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--headpad", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                r = run_pair(arch, shape_name, mesh_kind,
+                             strategy=args.strategy, fsdp=args.fsdp,
+                             seq_parallel=args.seqpar,
+                             microbatches=args.microbatch,
+                             head_pad=args.headpad,
+                             tag=args.tag, force=args.force)
+                status = r.get("status")
+                line = f"{arch:24s} {shape_name:12s} {mesh_kind:6s} {status}"
+                if status == "ok":
+                    roof = r["roofline"]
+                    line += (f" dom={roof['dominant']:10s}"
+                             f" c={roof['compute_s']:.3e}"
+                             f" m={roof['memory_s']:.3e}"
+                             f" n={roof['collective_s']:.3e}"
+                             f" useful={roof['useful_fraction']:.2f}"
+                             f" ({r['elapsed_s']}s)")
+                elif status == "error":
+                    n_fail += 1
+                    line += " " + r["error"][:120]
+                print(line, flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

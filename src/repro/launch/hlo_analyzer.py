@@ -1,0 +1,268 @@
+"""Trip-count-aware HLO analyzer.
+
+XLA's `compiled.cost_analysis()` (and any naive text scan) counts a while
+loop's body ONCE, but `lax.scan` over 126 layers executes it 126 times — so
+FLOPs, HBM bytes, and collective bytes would all be undercounted by the
+layer count. This analyzer parses the post-optimization HLO text into a call
+graph, reads loop trip counts from `backend_config known_trip_count` (with a
+condition-compare-constant fallback), and propagates execution multipliers
+from ENTRY through while / fusion / call / conditional edges. Per device it
+reports:
+
+  * dot_flops        — 2 * prod(output dims) * prod(contracting dims) per
+                       dot, multiplier-weighted (matmul FLOPs, the MFU
+                       convention),
+  * hbm_bytes        — operand + output bytes of control-level instructions
+                       (fusion internals excluded: they live in registers /
+                       VMEM), multiplier-weighted — a proxy for HBM traffic,
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       multiplier-weighted, split by kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|[a-z]\d*[a-z]*\d*\[[\d,]*\]\S*)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_PARAM_DECL_RE = re.compile(r"([\w\.\-]+):\s*([a-z]\d*[a-z]*\d*\[[\d,]*\])")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(_shape_elems(dims) for _, dims in _SHAPE_RE.findall(type_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_entry: bool = False
+
+
+def parse_computations(hlo: str):
+    """-> (computations by name, name->out_type symbol table)."""
+    comps: dict[str, Computation] = {}
+    symbols: dict[str, str] = {}
+    current = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and stripped.endswith("{"):
+            is_entry = stripped.startswith("ENTRY")
+            header = stripped[len("ENTRY"):].strip() if is_entry else stripped
+            m = re.match(r"%?([\w\.\-]+)\s*\(", header)
+            if m:
+                current = Computation(m.group(1), [], is_entry)
+                comps[current.name] = current
+                # parameter declarations carry shapes
+                for pname, ptype in _PARAM_DECL_RE.findall(header):
+                    symbols[pname] = ptype
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), stripped)
+            current.instrs.append(ins)
+            symbols[ins.name] = ins.out_type
+    return comps, symbols
+
+
+def _operand_names(line: str, opcode: str | None = None) -> list[str]:
+    """Operand names of the CALL parens — for tuple-typed instructions
+    (variadic all-reduce etc.) the first '(' after '=' is the tuple type,
+    so locate the parens following the opcode itself."""
+    if opcode is not None:
+        pos = line.find(f" {opcode}(")
+        paren = line.find("(", pos + 1) if pos >= 0 else -1
+    else:
+        paren = line.find("(", line.find("=") + 1)
+    if paren < 0:
+        return []
+    depth = 0
+    end = paren
+    for i in range(paren, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    section = line[paren + 1:end]
+    return re.findall(r"%([\w\.\-]+)", section)
+
+
+def _operand_bytes(line: str, symbols: dict, opcode: str | None = None) -> int:
+    return sum(_type_bytes(symbols.get(n, ""))
+               for n in _operand_names(line, opcode))
+
+
+def _dot_flops(ins: Instr, symbols: dict) -> float:
+    out_elems = _type_elems(ins.out_type)
+    ops = _operand_names(ins.line, ins.opcode)
+    if not ops:
+        return 0.0
+    lhs_type = symbols.get(ops[0], "")
+    shapes = _SHAPE_RE.findall(lhs_type)
+    if not shapes:
+        return 0.0
+    lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(ins: Instr, comps: dict) -> int:
+    m = _TRIP_RE.search(ins.line)
+    if m:
+        return int(m.group(1))
+    # fallback: largest compare constant in the condition computation
+    mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+    best = 1
+    if mc and mc.group(1) in comps:
+        for cins in comps[mc.group(1)].instrs:
+            if cins.opcode in ("compare", "constant"):
+                for c in re.findall(r"constant\((\d+)\)", cins.line):
+                    best = max(best, int(c))
+    return best
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "call", "conditional",
+                   "after-all", "iota"}
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, symbols = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"dot_flops": 0.0, "hbm_bytes": 0.0,
+                "collective_bytes": {k: 0.0 for k in COLLECTIVES},
+                "trip_counts": {}}
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    fusion_bodies: set[str] = set()
+    order = [entry.name]
+    queued = {entry.name}
+    trip_counts: dict[str, int] = {}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+
+        def enqueue(callee, factor, fusion=False):
+            mult[callee] += m * factor
+            if fusion:
+                fusion_bodies.add(callee)
+            if callee not in queued:
+                queued.add(callee)
+                order.append(callee)
+
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trips = _trip_count(ins, comps)
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                if mb:
+                    trip_counts[mb.group(1)] = trips
+                    enqueue(mb.group(1), trips)
+                if mc:
+                    enqueue(mc.group(1), trips + 1)
+            elif ins.opcode == "fusion":
+                mcal = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if mcal:
+                    enqueue(mcal.group(1), 1, fusion=True)
+            elif ins.opcode == "call":
+                mcal = re.search(r"to_apply=%?([\w\.\-]+)", ins.line)
+                if mcal:
+                    enqueue(mcal.group(1), 1)
+            elif ins.opcode == "conditional":
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if mbr:
+                    for b in mbr.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b:
+                            enqueue(b, 1)
+
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    for cname in order:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        if m == 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                dot_flops += m * _dot_flops(ins, symbols)
+            kind = next((k for k in COLLECTIVES
+                         if ins.opcode == k or ins.opcode == k + "-start"),
+                        None)
+            if kind:
+                coll[kind] += m * _operand_bytes(ins.line, symbols,
+                                                 ins.opcode)
+            if not in_fusion and ins.opcode not in _SKIP_BYTES_OPS:
+                hbm_bytes += m * (_type_bytes(ins.out_type)
+                                  + _operand_bytes(ins.line, symbols,
+                                                   ins.opcode))
+
+    return {"dot_flops": dot_flops, "hbm_bytes": hbm_bytes,
+            "collective_bytes": coll, "trip_counts": trip_counts}

@@ -1,0 +1,94 @@
+"""Training driver.
+
+Host-scale runs execute on the local device(s); the production meshes are
+exercised via dryrun.py. Supports every consensus strategy:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --strategy coke --agents 4 --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import save
+from repro.configs import get_config
+from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.distributed.consensus import ConsensusConfig
+from repro.optim.optimizers import OptConfig
+from repro.train.steps import agent_batch, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced family variant (CPU-runnable)")
+    ap.add_argument("--strategy", default="allreduce",
+                    choices=["allreduce", "dkla", "coke", "coke_et", "cta"])
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--rho", type=float, default=1e-3)
+    ap.add_argument("--censor-v", type=float, default=1.0)
+    ap.add_argument("--censor-mu", type=float, default=0.99)
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="coke_et: local steps per consensus round")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt_cfg = OptConfig(kind="adamw", lr=args.lr, grad_clip=1.0)
+    ccfg = None
+    if args.strategy != "allreduce":
+        ccfg = ConsensusConfig(strategy=args.strategy, rho=args.rho,
+                               censor_v=args.censor_v,
+                               censor_mu=args.censor_mu,
+                               local_steps=args.local_steps)
+    init_fn, step_fn, local_fn = make_train_step(
+        cfg, opt_cfg, ccfg, num_agents=args.agents)
+    state = init_fn(jax.random.PRNGKey(0))
+    step_j = jax.jit(step_fn)
+    local_j = jax.jit(local_fn) if local_fn is not None else None
+
+    stream = TokenStream(TokenStreamConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        toks, labels = stream.batch(i)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if ccfg is not None:
+            batch = agent_batch(batch, args.agents)
+            if (args.strategy == "coke_et"
+                    and (i + 1) % max(args.local_steps, 1) != 0):
+                state, metrics = local_j(state, batch)
+            else:
+                state, metrics = step_j(state, batch)
+        else:
+            state, metrics = step_j(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()
+                 if jnp.ndim(v) == 0}
+            print(json.dumps({"step": i, **m,
+                              "wall_s": round(time.time() - t0, 1)}),
+                  flush=True)
+
+    if args.ckpt:
+        save(args.ckpt, state["params"] if "params" in state else state,
+             step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

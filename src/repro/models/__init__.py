@@ -1,0 +1,3 @@
+"""Model zoo: unified config + blocks covering the ten assigned architectures."""
+from repro.models.common import ModelConfig  # noqa: F401
+from repro.models import attention, blocks, common, model, moe, ssm  # noqa: F401

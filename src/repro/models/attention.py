@@ -1,0 +1,392 @@
+"""Attention variants: GQA (opt. qk-norm, sliding window) and MLA
+(DeepSeek-V2-style multi-head latent attention), with
+
+  * a blockwise online-softmax implementation (the memory-correct jnp path
+    used for training and 32k prefill — mirrors the Pallas flash kernel),
+  * single-token decode against a (rolling) KV cache, with the *absorbed*
+    MLA decode that scores directly in the compressed latent space.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, apply_rope, dense_init,
+                                 rms_norm, rope_frequencies)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (shared by GQA and expanded-MLA paths)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(
+    q: jax.Array,            # (B, Sq, H, Dh)
+    k: jax.Array,            # (B, Sk, KV, Dh)
+    v: jax.Array,            # (B, Sk, KV, Dv)
+    positions_q: jax.Array,  # (Sq,) absolute positions
+    positions_k: jax.Array,  # (Sk,)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 1024,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, O(block_q * block_k) live score memory.
+
+    Grouped-query: H = KV * rep; scores computed in grouped layout so KV
+    blocks are never materialized at H width.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, Dv = v.shape
+    rep = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        positions_q = jnp.pad(positions_q, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        # padded keys get position +inf-ish so causal masking removes them
+        positions_k = jnp.pad(positions_k, (0, pad_k),
+                              constant_values=jnp.iinfo(jnp.int32).max)
+    nq, nk = (Sq + pad_q) // bq, (Sk + pad_k) // bk
+
+    qg = q.reshape(B, nq * bq, KV, rep, Dh)
+
+    def one_q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=1)
+        pq = jax.lax.dynamic_slice_in_dim(positions_q, qi * bq, bq, axis=0)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, axis=1)
+            pk = jax.lax.dynamic_slice_in_dim(positions_k, ki * bk, bk, axis=0)
+
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            # padded keys carry the int32-max sentinel position
+            valid = pk[None, :] != jnp.iinfo(jnp.int32).max
+            if causal:
+                valid &= pk[None, :] <= pq[:, None]
+            if window:
+                valid &= pk[None, :] > pq[:, None] - window
+            valid &= (pq[:, None] >= 0)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, rep, bq, Dv), jnp.float32)
+        m0 = jnp.full((B, KV, rep, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, bq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, KV, rep, bq, Dv) -> (B, bq, H, Dv)
+        return jnp.moveaxis(out, 3, 1).reshape(B, bq, H, Dv)
+
+    blocks = jax.lax.map(one_q_block, jnp.arange(nq))   # (nq, B, bq, H, Dv)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, nq * bq, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, Dh)
+    k_cache: jax.Array,    # (B, C, KV, Dh)
+    v_cache: jax.Array,    # (B, C, KV, Dv)
+    slot_positions: jax.Array,  # (C,) absolute position stored per slot, -1 empty
+    position: jax.Array,   # scalar current decode position
+    window: int = 0,
+) -> jax.Array:
+    """One-token attention against a (possibly rolling) cache."""
+    B, _, H, Dh = q.shape
+    KV = k_cache.shape[2]
+    rep = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    qg = q.reshape(B, KV, rep, Dh)
+    s = jnp.einsum("bgrd,bcgd->bgrc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (slot_positions >= 0) & (slot_positions <= position)
+    if window:
+        valid &= slot_positions > position - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrc,bcgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array              # (B, C, KV, Dh)
+    v: jax.Array              # (B, C, KV, Dv)
+    slot_positions: jax.Array  # (C,) int32, -1 = empty
+
+
+def _zero_pad_heads(w: jax.Array, logical: int, axis: int) -> jax.Array:
+    """Zero the padded-head rows so extra heads are exact no-ops."""
+    idx = jnp.arange(w.shape[axis]) < logical
+    shape = [1] * w.ndim
+    shape[axis] = w.shape[axis]
+    return w * idx.reshape(shape).astype(w.dtype)
+
+
+def init_gqa_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d, KV, Dh = cfg.d_model, cfg.num_kv_heads, cfg.resolved_head_dim
+    H = cfg.padded_heads
+    ks = jax.random.split(key, 4)
+    wo = dense_init(ks[3], (H, Dh, d), cfg.dtype, fan_in=H * Dh)
+    if H != cfg.num_heads:
+        wo = _zero_pad_heads(wo, cfg.num_heads, axis=0)
+    p = {
+        "wq": dense_init(ks[0], (d, H, Dh), cfg.dtype),
+        "wk": dense_init(ks[1], (d, KV, Dh), cfg.dtype),
+        "wv": dense_init(ks[2], (d, KV, Dh), cfg.dtype),
+        "wo": wo,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), cfg.dtype)
+        p["k_norm"] = jnp.ones((Dh,), cfg.dtype)
+    return p
+
+
+def _gqa_project_qkv(params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dge->bsge", x, params["wk"])
+    v = jnp.einsum("bsd,dge->bsge", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_frequencies(cfg.resolved_head_dim, cfg.rope_theta,
+                                positions, q.dtype)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _build_kv_cache(k, v, positions, cache_len: int) -> KVCache:
+    """Pack computed k/v into a (rolling) cache keeping the last
+    `cache_len` tokens."""
+    B, S = k.shape[:2]
+    C = cache_len
+    keep = min(S, C)
+    kc = jnp.zeros((B, C, *k.shape[2:]), k.dtype)
+    vc = jnp.zeros((B, C, *v.shape[2:]), v.dtype)
+    pos_keep = positions[-keep:]
+    slots = pos_keep % C
+    kc = kc.at[:, slots].set(k[:, -keep:])
+    vc = vc.at[:, slots].set(v[:, -keep:])
+    sp = jnp.full((C,), -1, jnp.int32).at[slots].set(pos_keep)
+    return KVCache(kc, vc, sp)
+
+
+def gqa_forward(params, cfg: ModelConfig, x, positions, *,
+                causal: bool = True, window: int | None = None,
+                cache_len: int | None = None):
+    """Training / prefill attention. x: (B,S,d); positions: (S,).
+    With cache_len, also returns the KV cache for subsequent decode."""
+    w = cfg.sliding_window if window is None else window
+    q, k, v = _gqa_project_qkv(params, cfg, x, positions)
+    out = blockwise_attention(q, k, v, positions, positions, causal=causal,
+                              window=w, block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if cache_len is None:
+        return y
+    return y, _build_kv_cache(k, v, positions, cache_len)
+
+
+def gqa_prefill_cache(params, cfg: ModelConfig, x, positions,
+                      cache_len: int) -> KVCache:
+    """Build the cache for decode after a prefill pass (keeps last
+    `cache_len` tokens — rolling for SWA)."""
+    _, k, v = _gqa_project_qkv(params, cfg, x, positions)
+    B, S = x.shape[:2]
+    C = cache_len
+    keep = min(S, C)
+    kc = jnp.zeros((B, C, *k.shape[2:]), k.dtype)
+    vc = jnp.zeros((B, C, *v.shape[2:]), v.dtype)
+    pos_keep = positions[-keep:]
+    slots = pos_keep % C
+    kc = kc.at[:, slots].set(k[:, -keep:])
+    vc = vc.at[:, slots].set(v[:, -keep:])
+    sp = jnp.full((C,), -1, jnp.int32).at[slots].set(pos_keep)
+    return KVCache(kc, vc, sp)
+
+
+def gqa_decode(params, cfg: ModelConfig, x, cache: KVCache,
+               position: jax.Array):
+    """One-token decode. x: (B,1,d). Returns (out (B,1,d), new cache)."""
+    q, k, v = _gqa_project_qkv(params, cfg, x, position[None])
+    C = cache.k.shape[1]
+    slot = position % C
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_positions, position[None].astype(jnp.int32), slot, axis=0)
+    out = decode_attention(q, kc, vc, sp, position,
+                           window=cfg.sliding_window)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, KVCache(kc, vc, sp)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    ckv: jax.Array             # (B, C, r) compressed latents
+    krope: jax.Array           # (B, C, Dr) shared rotary key
+    slot_positions: jax.Array  # (C,)
+
+
+def init_mla_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d, H = cfg.d_model, cfg.padded_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 6)
+    wo = dense_init(ks[3], (H, dv, d), cfg.dtype, fan_in=H * dv)
+    if H != cfg.num_heads:
+        wo = _zero_pad_heads(wo, cfg.num_heads, axis=0)
+    p = {
+        "wkv_a": dense_init(ks[1], (d, r + dr), cfg.dtype),
+        "kv_norm": jnp.ones((r,), cfg.dtype),
+        "wkv_b": dense_init(ks[2], (r, H, dn + dv), cfg.dtype, fan_in=r),
+        "wo": wo,
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], (d, cfg.q_lora_rank), cfg.dtype)
+        p["q_norm_a"] = jnp.ones((cfg.q_lora_rank,), cfg.dtype)
+        p["wq_b"] = dense_init(ks[4], (cfg.q_lora_rank, H, dn + dr),
+                               cfg.dtype, fan_in=cfg.q_lora_rank)
+    else:
+        p["wq"] = dense_init(ks[0], (d, H, dn + dr), cfg.dtype)
+    return p
+
+
+def _mla_q(params, cfg: ModelConfig, x, positions):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        qa = rms_norm(x @ params["wq_a"], params["q_norm_a"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhe->bshe", qa, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_frequencies(dr, cfg.rope_theta, positions, q.dtype)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, cfg: ModelConfig, x, positions):
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = x @ params["wkv_a"]
+    ckv = rms_norm(kv[..., :r], params["kv_norm"], cfg.norm_eps)
+    krope = kv[..., r:][:, :, None, :]  # single shared rope "head"
+    cos, sin = rope_frequencies(dr, cfg.rope_theta, positions, x.dtype)
+    krope = apply_rope(krope, cos, sin)[:, :, 0]
+    return ckv, krope
+
+
+def mla_forward(params, cfg: ModelConfig, x, positions, *,
+                causal: bool = True, window: int | None = None,
+                cache_len: int | None = None):
+    """Training / prefill: expand latents to full k/v, run blockwise attn.
+    With cache_len, also returns the latent cache for decode."""
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    w = cfg.sliding_window if window is None else window
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv, krope = _mla_latents(params, cfg, x, positions)
+    kv = jnp.einsum("bsr,rhe->bshe", ckv, params["wkv_b"])
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    H = cfg.padded_heads
+    k_rope = jnp.broadcast_to(krope[:, :, None, :],
+                              (*krope.shape[:2], H, krope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope], -1)
+    out = blockwise_attention(q, k, v, positions, positions, causal=causal,
+                              window=w, block_q=cfg.attn_block_q,
+                              block_k=cfg.attn_block_k)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if cache_len is None:
+        return y
+    C = cache_len
+    B, S = x.shape[:2]
+    keep = min(S, C)
+    cc = jnp.zeros((B, C, ckv.shape[-1]), ckv.dtype)
+    kc = jnp.zeros((B, C, krope.shape[-1]), krope.dtype)
+    pos_keep = positions[-keep:]
+    slots = pos_keep % C
+    cc = cc.at[:, slots].set(ckv[:, -keep:])
+    kc = kc.at[:, slots].set(krope[:, -keep:])
+    sp = jnp.full((C,), -1, jnp.int32).at[slots].set(pos_keep)
+    return y, MLACache(cc, kc, sp)
+
+
+def mla_prefill_cache(params, cfg: ModelConfig, x, positions,
+                      cache_len: int) -> MLACache:
+    ckv, krope = _mla_latents(params, cfg, x, positions)
+    B, S = x.shape[:2]
+    C = cache_len
+    keep = min(S, C)
+    cc = jnp.zeros((B, C, ckv.shape[-1]), ckv.dtype)
+    kc = jnp.zeros((B, C, krope.shape[-1]), krope.dtype)
+    pos_keep = positions[-keep:]
+    slots = pos_keep % C
+    cc = cc.at[:, slots].set(ckv[:, -keep:])
+    kc = kc.at[:, slots].set(krope[:, -keep:])
+    sp = jnp.full((C,), -1, jnp.int32).at[slots].set(pos_keep)
+    return MLACache(cc, kc, sp)
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache: MLACache,
+               position: jax.Array):
+    """Absorbed decode: scores in the r-dim latent space — the cache stays
+    (B, C, r + Dr) instead of (B, C, H, Dh) (MLA's memory advantage)."""
+    dn, dv, r = cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(params, cfg, x, position[None])
+    ckv, krope = _mla_latents(params, cfg, x, position[None])
+
+    C = cache.ckv.shape[1]
+    slot = position % C
+    cc = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv, slot, axis=1)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.krope, krope, slot, axis=1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache.slot_positions, position[None].astype(jnp.int32), slot, axis=0)
+
+    wk = params["wkv_b"][..., :dn]     # (r, H, dn)
+    wv = params["wkv_b"][..., dn:]     # (r, H, dv)
+    # absorb W_k into q: q_lat (B,1,H,r)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, wk)
+    s = (jnp.einsum("bshr,bcr->bshc", q_lat, cc,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshe,bce->bshc", q_rope, kc,
+                      preferred_element_type=jnp.float32))
+    s *= 1.0 / jnp.sqrt(jnp.asarray(dn + cfg.qk_rope_dim, jnp.float32))
+    valid = (sp >= 0) & (sp <= position)
+    if cfg.sliding_window:
+        valid &= sp > position - cfg.sliding_window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bshc,bcr->bshr", p.astype(cc.dtype), cc)  # latent ctx
+    out_h = jnp.einsum("bshr,rhe->bshe", ctx, wv)               # (B,1,H,dv)
+    out = jnp.einsum("bshe,hed->bsd", out_h, params["wo"])
+    return out, MLACache(cc, kc, sp)

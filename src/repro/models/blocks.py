@@ -1,0 +1,229 @@
+"""Residual blocks: dense attn+MLP, MoE, Mamba2, cross-attention (enc-dec).
+
+Every block is a pure function over a param dict; stacks are built by vmap'd
+init and executed under `lax.scan` (one compiled layer body regardless of
+depth — essential for the 126-layer dry-runs on a single-core host).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ModelConfig, dense_init, rms_norm,
+                                 shard_activations, swiglu)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp_params(cfg: ModelConfig, key: jax.Array, d_ff: int | None = None
+                    ) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), cfg.dtype),
+        "w_up": dense_init(ks[1], (d, f), cfg.dtype),
+        "w_down": dense_init(ks[2], (f, d), cfg.dtype, fan_in=f),
+    }
+
+
+def mlp_forward(params: dict, x: jax.Array) -> jax.Array:
+    return swiglu(x @ params["w_gate"], x @ params["w_up"]) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Attention dispatch (GQA vs MLA)
+# ---------------------------------------------------------------------------
+
+def init_attn_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    if cfg.attn_kind == "mla":
+        return attn.init_mla_params(cfg, key)
+    return attn.init_gqa_params(cfg, key)
+
+
+def attn_forward(params, cfg: ModelConfig, x, positions, *, causal=True,
+                 window=None, cache_len=None):
+    if cfg.attn_kind == "mla":
+        return attn.mla_forward(params, cfg, x, positions, causal=causal,
+                                window=window, cache_len=cache_len)
+    return attn.gqa_forward(params, cfg, x, positions, causal=causal,
+                            window=window, cache_len=cache_len)
+
+
+def attn_decode(params, cfg: ModelConfig, x, cache, position):
+    if cfg.attn_kind == "mla":
+        return attn.mla_decode(params, cfg, x, cache, position)
+    return attn.gqa_decode(params, cfg, x, cache, position)
+
+
+def attn_empty_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    Dh = cfg.resolved_head_dim
+    if cfg.attn_kind == "mla":
+        return attn.MLACache(
+            ckv=jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            krope=jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+            slot_positions=jnp.full((cache_len,), -1, jnp.int32))
+    return attn.KVCache(
+        k=jnp.zeros((batch, cache_len, cfg.num_kv_heads, Dh), dtype),
+        v=jnp.zeros((batch, cache_len, cfg.num_kv_heads, Dh), dtype),
+        slot_positions=jnp.full((cache_len,), -1, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decoder blocks
+# ---------------------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, key: jax.Array, kind: str) -> dict:
+    """kind: dense | moe | ssm."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if kind == "ssm":
+        return {"ln1": jnp.ones((d,), cfg.dtype),
+                "ssm": ssm_mod.init_ssm_params(cfg, ks[0])}
+    p = {
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "attn": init_attn_params(cfg, ks[0]),
+        "ln2": jnp.ones((d,), cfg.dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe_params(cfg, ks[1])
+    else:
+        p["mlp"] = init_mlp_params(cfg, ks[1])
+    return p
+
+
+def block_forward(params: dict, cfg: ModelConfig, x, positions, kind: str,
+                  *, causal=True, window=None, cache_len=None):
+    """Pre-norm residual block. Returns (x, aux_loss[, cache])."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        x = shard_activations(cfg, x)
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        if cache_len is not None:
+            y, cache = ssm_mod.ssm_forward(params["ssm"], cfg, h,
+                                           return_cache=True)
+            return x + y, aux, cache
+        return x + ssm_mod.ssm_forward(params["ssm"], cfg, h), aux
+    x = shard_activations(cfg, x)
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    cache = None
+    if cache_len is not None:
+        y, cache = attn_forward(params["attn"], cfg, h, positions,
+                                causal=causal, window=window,
+                                cache_len=cache_len)
+        x = x + y
+    else:
+        x = x + attn_forward(params["attn"], cfg, h, positions,
+                             causal=causal, window=window)
+    x = shard_activations(cfg, x)
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_mod.moe_forward(params["moe"], cfg, h)
+        x = x + y
+    else:
+        x = x + mlp_forward(params["mlp"], h)
+    if cache_len is not None:
+        return x, aux, cache
+    return x, aux
+
+
+def block_decode(params: dict, cfg: ModelConfig, x, positions_unused,
+                 kind: str, cache, position):
+    """Single-token decode through one block. Returns (x, new_cache)."""
+    if kind == "ssm":
+        y, new_cache = ssm_mod.ssm_decode(
+            params["ssm"], cfg, rms_norm(x, params["ln1"], cfg.norm_eps),
+            cache)
+        return x + y, new_cache
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    y, new_cache = attn_decode(params["attn"], cfg, h, cache, position)
+    x = x + y
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y, _ = moe_mod.moe_forward(params["moe"], cfg, h)
+        x = x + y
+    else:
+        x = x + mlp_forward(params["mlp"], h)
+    return x, new_cache
+
+
+def block_empty_cache(cfg: ModelConfig, kind: str, batch: int,
+                      cache_len: int, dtype):
+    if kind == "ssm":
+        return ssm_mod.SSMCache(
+            conv_x=jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner),
+                             dtype),
+            conv_bc=jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                               2 * cfg.ssm_state), dtype),
+            state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                             cfg.ssm_state), jnp.float32))
+    return attn_empty_cache(cfg, batch, cache_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder blocks)
+# ---------------------------------------------------------------------------
+
+def init_cross_block_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "self_attn": attn.init_gqa_params(cfg, ks[0]),
+        "ln_x": jnp.ones((d,), cfg.dtype),
+        "cross_attn": attn.init_gqa_params(cfg, ks[1]),
+        "ln2": jnp.ones((d,), cfg.dtype),
+        "mlp": init_mlp_params(cfg, ks[2]),
+    }
+
+
+def cross_attend(params, cfg: ModelConfig, x, memory_k, memory_v,
+                 positions_q):
+    """Query from x, keys/values precomputed from encoder memory (no rope)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    S_enc = memory_k.shape[1]
+    pos_k = jnp.arange(S_enc)
+    out = attn.blockwise_attention(
+        q, memory_k, memory_v, positions_q, pos_k, causal=False, window=0,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def cross_memory_kv(params, memory):
+    """Project encoder output into cross-attention k/v once."""
+    k = jnp.einsum("bsd,dge->bsge", memory, params["wk"])
+    v = jnp.einsum("bsd,dge->bsge", memory, params["wv"])
+    return k, v
+
+
+def cross_block_forward(params, cfg: ModelConfig, x, positions,
+                        memory_k, memory_v):
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    x = x + attn.gqa_forward(params["self_attn"], cfg, h, positions,
+                             causal=True, window=0)
+    h = rms_norm(x, params["ln_x"], cfg.norm_eps)
+    x = x + cross_attend(params["cross_attn"], cfg, h, memory_k, memory_v,
+                         positions)
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    return x + mlp_forward(params["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def cross_block_decode(params, cfg: ModelConfig, x, cache, position,
+                       memory_k, memory_v):
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    y, new_cache = attn.gqa_decode(params["self_attn"], cfg, h, cache,
+                                   position)
+    x = x + y
+    h = rms_norm(x, params["ln_x"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, params["cross_attn"]["wq"])
+    S_enc = memory_k.shape[1]
+    out = attn.decode_attention(q, memory_k, memory_v,
+                                jnp.arange(S_enc, dtype=jnp.int32),
+                                jnp.asarray(S_enc, jnp.int32), window=0)
+    x = x + jnp.einsum("bshe,hed->bsd", out, params["cross_attn"]["wo"])
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    return x + mlp_forward(params["mlp"], h), new_cache

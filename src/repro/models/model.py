@@ -1,0 +1,324 @@
+"""Top-level language models assembled from blocks.
+
+All ten assigned architectures reduce to three structural templates:
+
+  * decoder-only (dense / MoE / SSM / VLM-backbone) — `lax.scan` over a
+    homogeneous stacked block,
+  * grouped hybrid (zamba2) — scan over groups of `shared_attn_every` SSM
+    layers followed by one *weight-shared* attention block (per-application
+    KV caches stay distinct),
+  * encoder-decoder (seamless-m4t) — bidirectional encoder over stub frame
+    embeddings + cross-attending causal decoder.
+
+The public entry points consumed by training/serving/dry-run:
+  init_params, forward(batch) -> (logits, aux), loss_fn,
+  init_serve_state, prefill, decode_step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.common import ModelConfig, dense_init, rms_norm
+
+
+def layer_kind(cfg: ModelConfig) -> str:
+    return {"moe": "moe", "ssm": "ssm", "hybrid": "ssm"}.get(
+        cfg.arch_type, "dense")
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    kind = layer_kind(cfg)
+    keys = jax.random.split(key, 8)
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    params: dict = {
+        "embed": dense_init(keys[0], (Vp, d), cfg.dtype, fan_in=d),
+        "final_norm": jnp.ones((d,), cfg.dtype),
+        "lm_head": dense_init(keys[1], (d, Vp), cfg.dtype),
+    }
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[2], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: blk.init_block_params(cfg, k, "dense"))(enc_keys)
+        params["enc_norm"] = jnp.ones((d,), cfg.dtype)
+        dec_keys = jax.random.split(keys[3], cfg.num_layers)
+        params["decoder"] = jax.vmap(
+            lambda k: blk.init_cross_block_params(cfg, k))(dec_keys)
+        return params
+
+    if cfg.arch_type == "hybrid":
+        every = cfg.shared_attn_every
+        assert cfg.num_layers % every == 0
+        groups = cfg.num_layers // every
+        lkeys = jax.random.split(keys[2], cfg.num_layers).reshape(
+            groups, every, 2)
+        params["blocks"] = jax.vmap(jax.vmap(
+            lambda k: blk.init_block_params(cfg, k, "ssm")))(lkeys)
+        params["shared_attn"] = blk.init_block_params(cfg, keys[3], "dense")
+        return params
+
+    lkeys = jax.random.split(keys[2], cfg.num_layers)
+    params["blocks"] = jax.vmap(
+        lambda k: blk.init_block_params(cfg, k, kind))(lkeys)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree of the parameters — dry-run stand-in, never
+    allocates."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Token embedding + optional multimodal prefix. Returns (x, positions,
+    text_offset) where logits[:, text_offset:] align with batch tokens."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    offset = 0
+    if cfg.prefix_len and "prefix_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+        offset = batch["prefix_embeds"].shape[1]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, positions, offset
+
+
+def _decoder_only_forward(params, cfg: ModelConfig, x, positions):
+    kind = layer_kind(cfg)
+
+    if cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(carry, gparams):
+            x, aux = carry
+
+            def layer_body(x, lp):
+                y, a = blk.block_forward(lp, cfg, x, positions, "ssm")
+                return y, a
+
+            x, a_layers = jax.lax.scan(layer_body, x, gparams)
+            x, a = blk.block_forward(shared, cfg, x, positions, "dense")
+            return (x, aux + jnp.sum(a_layers) + a), None
+
+        body = _maybe_remat(cfg, group_body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        return x, aux
+
+    def layer_body(carry, lp):
+        x, aux = carry
+        x, a = blk.block_forward(lp, cfg, x, positions, kind)
+        return (x, aux + a), None
+
+    body = _maybe_remat(cfg, layer_body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return x, aux
+
+
+def _encdec_forward(params, cfg: ModelConfig, batch: dict):
+    # Encoder over stub frame embeddings (bidirectional).
+    enc_x = batch["encoder_embeds"].astype(cfg.dtype)
+    enc_pos = jnp.arange(enc_x.shape[1], dtype=jnp.int32)
+
+    def enc_body(carry, lp):
+        x, aux = carry
+        x, a = blk.block_forward(lp, cfg, x, enc_pos, "dense", causal=False)
+        return (x, aux + a), None
+
+    (memory, aux), _ = jax.lax.scan(
+        _maybe_remat(cfg, enc_body),
+        (enc_x, jnp.zeros((), jnp.float32)), params["encoder"])
+    memory = rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+
+    # Decoder with cross attention.
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def dec_body(carry, lp):
+        x, aux = carry
+        mk, mv = blk.cross_memory_kv(lp["cross_attn"], memory)
+        x, a = blk.cross_block_forward(lp, cfg, x, pos, mk, mv)
+        return (x, aux + a), None
+
+    (x, aux2), _ = jax.lax.scan(
+        _maybe_remat(cfg, dec_body),
+        (x, jnp.zeros((), jnp.float32)), params["decoder"])
+    return x, aux + aux2
+
+
+def forward(params, cfg: ModelConfig, batch: dict):
+    """-> (logits over padded vocab aligned with batch['tokens'], aux)."""
+    if cfg.is_encdec:
+        x, aux = _encdec_forward(params, cfg, batch)
+        offset = 0
+    else:
+        x, positions, offset = _embed_inputs(params, cfg, batch)
+        x, aux = _decoder_only_forward(params, cfg, x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    if offset:
+        logits = logits[:, offset:]
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict,
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                               axis=-1)[..., 0]
+    loss = jnp.mean(nll) + aux_weight * aux
+    return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=None, enc_len: int = 0) -> dict:
+    """Empty caches for decode-from-scratch (the dry-run decode shapes build
+    these as ShapeDtypeStructs directly)."""
+    dtype = dtype or cfg.dtype
+    kind = layer_kind(cfg)
+    if cfg.is_encdec:
+        Dh = cfg.resolved_head_dim
+        L = cfg.num_layers
+        return {
+            "self": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (L, *x.shape)),
+                blk.attn_empty_cache(cfg, batch, cache_len, dtype)),
+            "cross_k": jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, Dh),
+                                 dtype),
+            "cross_v": jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, Dh),
+                                 dtype),
+        }
+    if cfg.arch_type == "hybrid":
+        groups = cfg.num_layers // cfg.shared_attn_every
+        ssm = blk.block_empty_cache(cfg, "ssm", batch, cache_len, dtype)
+        return {
+            "ssm": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (groups, cfg.shared_attn_every, *x.shape)), ssm),
+            "shared": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (groups, *x.shape)),
+                blk.attn_empty_cache(cfg, batch, cache_len, dtype)),
+        }
+    cache = blk.block_empty_cache(cfg, kind, batch, cache_len, dtype)
+    return {"layers": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers, *x.shape)), cache)}
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, state: dict,
+                position: jax.Array):
+    """token: (B, 1) int32 -> (logits (B, 1, Vp), new state)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    kind = layer_kind(cfg)
+
+    if cfg.is_encdec:
+        def body(x, xs):
+            lp, cache, mk, mv = xs
+            x, new_cache = blk.cross_block_decode(lp, cfg, x, cache,
+                                                  position, mk, mv)
+            return x, new_cache
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["decoder"], state["self"],
+                      state["cross_k"], state["cross_v"]))
+        state = dict(state, self=new_self)
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            gparams, ssm_caches, shared_cache = xs
+
+            def layer_body(x, ys):
+                lp, cache = ys
+                x, nc = blk.block_decode(lp, cfg, x, None, "ssm", cache,
+                                         position)
+                return x, nc
+
+            x, new_ssm = jax.lax.scan(layer_body, x, (gparams, ssm_caches))
+            x, new_shared = blk.block_decode(shared, cfg, x, None, "dense",
+                                             shared_cache, position)
+            return x, (new_ssm, new_shared)
+
+        x, (new_ssm, new_shared) = jax.lax.scan(
+            group_body, x, (params["blocks"], state["ssm"],
+                            state["shared"]))
+        state = {"ssm": new_ssm, "shared": new_shared}
+    else:
+        def body(x, xs):
+            lp, cache = xs
+            x, nc = blk.block_decode(lp, cfg, x, None, kind, cache, position)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["blocks"], state["layers"]))
+        state = {"layers": new_caches}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"], state
+
+
+def prefill(params, cfg: ModelConfig, batch: dict):
+    """Full-sequence forward returning last-position logits (the prefill
+    serving step lowered for `prefill_32k`)."""
+    logits, _ = forward(params, cfg, batch)
+    return logits[:, -1:]
+
+
+def prefill_with_state(params, cfg: ModelConfig, batch: dict,
+                       cache_len: int):
+    """One full-sequence pass that ALSO builds the decode caches — the
+    production prefill path (vs replaying tokens through decode_step).
+    Decoder-only architectures; enc-dec uses the engine's cross-memory
+    fill. Returns (last-position logits, serve state)."""
+    assert not cfg.is_encdec, "enc-dec prefill handled by the engine"
+    x, positions, offset = _embed_inputs(params, cfg, batch)
+
+    if cfg.arch_type == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(x, gparams):
+            def layer_body(x, lp):
+                y, _, cache = blk.block_forward(lp, cfg, x, positions,
+                                                "ssm", cache_len=cache_len)
+                return y, cache
+
+            x, ssm_caches = jax.lax.scan(layer_body, x, gparams)
+            x, _, shared_cache = blk.block_forward(
+                shared, cfg, x, positions, "dense", cache_len=cache_len)
+            return x, (ssm_caches, shared_cache)
+
+        x, (ssm_caches, shared_caches) = jax.lax.scan(
+            group_body, x, params["blocks"])
+        state = {"ssm": ssm_caches, "shared": shared_caches}
+    else:
+        kind = layer_kind(cfg)
+
+        def layer_body(x, lp):
+            y, _, cache = blk.block_forward(lp, cfg, x, positions, kind,
+                                            cache_len=cache_len)
+            return y, cache
+
+        x, caches = jax.lax.scan(layer_body, x, params["blocks"])
+        state = {"layers": caches}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, -1:]
+    return logits, state

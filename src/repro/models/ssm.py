@@ -1,0 +1,184 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060): quadratic
+attention-like compute inside chunks of length Q, linear recurrence across
+chunk boundaries — computed under a `lax.scan` over chunks so live memory is
+O(B * Q^2 * H), not O(B * S * Q * H).
+
+Decode is the O(1) recurrent update on the (B, H, P, N) state — this is what
+makes `long_500k` natural for the SSM/hybrid architectures.
+
+Projection layout (a §Perf finding, see EXPERIMENTS.md): the reference
+implementation fuses z|x|B|C|dt into one in_proj whose column sharding
+misaligns with the semantic split, so tensor-parallel SPMD all-gathers the
+whole (B, S, 2*d_inner + 2N + H) projection every layer. We keep SEPARATE
+head-aligned projections (w_z, w_x sharded on d_inner; w_bc replicated —
+B/C are shared across heads; w_dt sharded on heads), which keeps the conv,
+the SSD scan, the gating, and the norm shard-local and leaves a single
+all-reduce per layer at out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm
+
+
+class SSMCache(NamedTuple):
+    conv_x: jax.Array   # (B, W-1, d_inner) trailing conv inputs (x path)
+    conv_bc: jax.Array  # (B, W-1, 2N) trailing conv inputs (B/C path)
+    state: jax.Array    # (B, H, P, N) recurrent state
+
+
+def init_ssm_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    # dt bias init so softplus(dt_bias) spans ~[1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[0], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "w_z": dense_init(ks[1], (d, di), cfg.dtype),
+        "w_x": dense_init(ks[2], (d, di), cfg.dtype),
+        "w_bc": dense_init(ks[3], (d, 2 * N), cfg.dtype),
+        "w_dt": dense_init(ks[4], (d, H), cfg.dtype),
+        "conv_x": dense_init(ks[5], (W, di), cfg.dtype, fan_in=W),
+        "conv_bc": dense_init(ks[6], (W, 2 * N), cfg.dtype, fan_in=W),
+        "conv_bx": jnp.zeros((di,), cfg.dtype),
+        "conv_bbc": jnp.zeros((2 * N,), cfg.dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": jnp.ones((di,), cfg.dtype),
+        "out_proj": dense_init(ks[7], (di, d), cfg.dtype, fan_in=di),
+    }
+
+
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array | None = None):
+    """Depthwise causal conv along S. xc: (B,S,ch); w: (W,ch).
+    prev: (B, W-1, ch) trailing context (decode) or None (zero left-pad)."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xc.shape[0], W - 1, xc.shape[-1]), xc.dtype)
+    xp = jnp.concatenate([prev, xc], axis=1)
+    out = sum(xp[:, i:i + xc.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b), xp[:, -(W - 1):]
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // Q
+
+    xc = x.reshape(B_, nc, Q, H, P).swapaxes(0, 1)     # (nc,B,Q,H,P)
+    dtc = dt.reshape(B_, nc, Q, H).swapaxes(0, 1)      # (nc,B,Q,H)
+    Bc = Bm.reshape(B_, nc, Q, N).swapaxes(0, 1)
+    Cc = Cm.reshape(B_, nc, Q, N).swapaxes(0, 1)
+
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        xq, dtq, Bq, Cq = inp                          # (B,Q,...)
+        dA = dtq * A                                    # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)                    # (B,Q,H)
+        # intra-chunk quadratic part
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,i,j,H)
+        cb = jnp.einsum("bin,bjn->bij", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+        scores = cb[..., None] * decay * dtq[:, None, :, :]       # (B,i,j,H)
+        scores = jnp.where(tri[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores,
+                             xq.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        state_decay = jnp.exp(cum)                       # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cq, state,
+                             state_decay)
+        # chunk-end state update
+        rem = jnp.exp(cum[:, -1:, :] - cum)              # (B,Q,H)
+        contrib = jnp.einsum("bjn,bjhp,bjh->bhpn", Bq,
+                             xq.astype(jnp.float32), rem * dtq)
+        total_decay = jnp.exp(cum[:, -1, :])             # (B,H)
+        state_new = state * total_decay[:, :, None, None] + contrib
+        return state_new, (y_intra + y_inter)
+
+    state, ys = jax.lax.scan(chunk_step, init_state, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(B_, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), state
+
+
+def _project(params: dict, cfg: ModelConfig, x: jax.Array):
+    z = x @ params["w_z"]
+    xs = x @ params["w_x"]
+    bc = x @ params["w_bc"]
+    dt = x @ params["w_dt"]
+    return z, xs, bc, dt
+
+
+def ssm_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                return_cache: bool = False):
+    """Full-sequence mixer. x: (B,S,d) -> (B,S,d) [, SSMCache]."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, bc, dt = _project(params, cfg, x)
+    xs, tail_x = _causal_conv(xs, params["conv_x"], params["conv_bx"])
+    bc, tail_bc = _causal_conv(bc, params["conv_bc"], params["conv_bbc"])
+    xs = xs.reshape(B, S, H, P)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_cache:
+        return out, SSMCache(conv_x=tail_x, conv_bc=tail_bc, state=state)
+    return out
+
+
+def ssm_decode(params: dict, cfg: ModelConfig, x: jax.Array,
+               cache: SSMCache):
+    """Single-token recurrent update. x: (B,1,d)."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, bc, dt = _project(params, cfg, x)
+    xs, tail_x = _causal_conv(xs, params["conv_x"], params["conv_bx"],
+                              prev=cache.conv_x)
+    bc, tail_bc = _causal_conv(bc, params["conv_bc"], params["conv_bbc"],
+                               prev=cache.conv_bc)
+    xs1 = xs[:, 0].reshape(B, H, P)
+    Bm, Cm = bc[:, 0, :N], bc[:, 0, N:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt1 * A)                                    # (B,H)
+    state = (cache.state * dA[:, :, None, None]
+             + jnp.einsum("bn,bhp,bh->bhpn", Bm.astype(jnp.float32),
+                          xs1.astype(jnp.float32), dt1))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xs1.astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], SSMCache(conv_x=tail_x, conv_bc=tail_bc,
+                                            state=state)

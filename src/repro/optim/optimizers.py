@@ -1,0 +1,84 @@
+"""Optimizers from scratch (no optax in the container): SGD(+momentum) and
+AdamW, as pure pytree transforms. Used both by the deep-net training loop and
+as the inexact inner solver of the consensus (ADMM) strategies."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=(), meta_fields=("kind", "lr", "beta1", "beta2", "eps",
+                                      "weight_decay", "momentum",
+                                      "grad_clip"))
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | sgd
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.0        # sgd only
+    grad_clip: float = 0.0       # 0 = off (global-norm clip)
+
+
+def init_opt_state(cfg: OptConfig, params):
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if cfg.kind == "adamw":
+        return {"m": zeros(), "v": zeros(),
+                "count": jnp.zeros((), jnp.int32)}
+    if cfg.momentum:
+        return {"m": zeros(), "count": jnp.zeros((), jnp.int32)}
+    return {"count": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    """-> (updates to ADD to params, new_state)."""
+    if cfg.grad_clip:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    count = state["count"] + 1
+
+    if cfg.kind == "adamw":
+        m = jax.tree.map(
+            lambda m_, g: cfg.beta1 * m_ + (1 - cfg.beta1)
+            * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: cfg.beta2 * v_ + (1 - cfg.beta2)
+            * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - cfg.beta1 ** c
+        bc2 = 1 - cfg.beta2 ** c
+        updates = jax.tree.map(
+            lambda m_, v_, p: (-cfg.lr * ((m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + cfg.eps)
+                               + cfg.weight_decay
+                               * p.astype(jnp.float32))).astype(p.dtype),
+            m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    # SGD
+    if cfg.momentum:
+        m = jax.tree.map(lambda m_, g: cfg.momentum * m_
+                         + g.astype(jnp.float32), state["m"], grads)
+        updates = jax.tree.map(lambda m_, p: (-cfg.lr * m_).astype(p.dtype),
+                               m, params)
+        return updates, {"m": m, "count": count}
+    updates = jax.tree.map(lambda g, p: (-cfg.lr * g).astype(p.dtype),
+                           grads, params)
+    return updates, {"count": count}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill once, decode greedily.
+
+Host-side loop over jit'd prefill / decode_step; the decode step is the same
+function the dry-run lowers for `decode_32k` / `long_500k`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 16
+    cache_len: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class Engine:
+    """Minimal batched engine. Prompts are pre-tokenized int32 arrays of the
+    same length (left-padding is out of scope for this repro)."""
+
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 extra_batch: dict | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.extra = extra_batch or {}
+        self._decode = jax.jit(
+            lambda p, t, s, pos: model_lib.decode_step(p, cfg, t, s, pos))
+
+    def _prefill_state(self, prompts: jax.Array):
+        """Build decode caches: one fused forward for decoder-only archs
+        (model_lib.prefill_with_state); enc-dec fills the cross memory once
+        then replays prompt tokens through decode."""
+        B, S = prompts.shape
+        if not self.cfg.is_encdec:
+            logits, state = jax.jit(
+                lambda p, b: model_lib.prefill_with_state(
+                    p, self.cfg, b, self.scfg.cache_len)
+            )(self.params, {"tokens": prompts, **self.extra})
+            return logits, state, S
+
+        enc_len = self.extra["encoder_embeds"].shape[1]
+        state = model_lib.init_serve_state(
+            self.cfg, B, self.scfg.cache_len, enc_len=enc_len)
+        state = _fill_cross_memory(self.cfg, self.params, state,
+                                   self.extra["encoder_embeds"])
+        logits = None
+        for t in range(S):
+            logits, state = self._decode(self.params, prompts[:, t:t + 1],
+                                         state, jnp.asarray(t, jnp.int32))
+        return logits, state, S
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        prompts = jnp.asarray(prompts, jnp.int32)
+        logits, state, pos = self._prefill_state(prompts)
+        out = []
+        token = jnp.argmax(logits[:, -1:, :self.cfg.vocab_size], axis=-1)
+        out.append(token)
+        for i in range(self.scfg.max_new_tokens - 1):
+            logits, state = self._decode(self.params, token.astype(jnp.int32),
+                                         state, jnp.asarray(pos + i, jnp.int32))
+            token = jnp.argmax(logits[:, :, :self.cfg.vocab_size], axis=-1)
+            out.append(token)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def _fill_cross_memory(cfg, params, state, encoder_embeds):
+    """Encode once and project per-layer cross k/v into the serve state."""
+    from repro.models import blocks as blk
+    from repro.models.common import rms_norm
+    enc_pos = jnp.arange(encoder_embeds.shape[1], dtype=jnp.int32)
+
+    def enc_body(x, lp):
+        x, _ = blk.block_forward(lp, cfg, x, enc_pos, "dense", causal=False)
+        return x, None
+
+    memory, _ = jax.lax.scan(enc_body, encoder_embeds.astype(cfg.dtype),
+                             params["encoder"])
+    memory = rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+
+    def proj(lp):
+        return blk.cross_memory_kv(lp["cross_attn"], memory)
+
+    ks, vs = jax.vmap(proj)(params["decoder"])
+    return dict(state, cross_k=ks, cross_v=vs)

@@ -1,0 +1,1 @@
+from repro.train.steps import agent_batch, make_train_step  # noqa: F401

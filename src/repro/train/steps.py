@@ -1,0 +1,129 @@
+"""Train-step factories.
+
+`make_train_step(cfg, opt_cfg, ccfg)` returns (init_fn, step_fn):
+
+  * allreduce: canonical DP+TP step — mean loss over the global batch, XLA
+    inserts the gradient all-reduce across the batch axes.
+  * dkla / coke / coke_et / cta: the paper's decentralized strategies — the
+    batch carries a leading agent axis, each agent computes a local gradient
+    (vmap), and the consensus layer couples agents over the ring.
+
+Both step kinds are pure (state, batch) -> (state, metrics) functions, jit
+/ lower-able with explicit shardings by the launcher and the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import consensus as cns
+from repro.models import model as model_lib
+from repro.models.common import ModelConfig
+from repro.optim.optimizers import (OptConfig, apply_updates,
+                                    init_opt_state, opt_update)
+
+
+def make_allreduce_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                        microbatches: int = 1):
+    def init_fn(key):
+        params = model_lib.init_params(cfg, key)
+        return {"params": params,
+                "opt": init_opt_state(opt_cfg, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def _grads(params, batch):
+        if microbatches == 1:
+            (loss, extras), grads = jax.value_and_grad(
+                model_lib.loss_fn, has_aux=True)(params, cfg, batch)
+            return loss, extras, grads
+
+        # gradient accumulation: scan over microbatches so only one
+        # microbatch's activations are live at a time
+        def split(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches,
+                             *x.shape[1:])
+        mbatch = {k: split(v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            g_acc, loss_acc, aux_acc = carry
+            (loss, extras), g = jax.value_and_grad(
+                model_lib.loss_fn, has_aux=True)(params, cfg, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                 g_acc, g)
+            return (g_acc, loss_acc + loss, aux_acc + extras["aux"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_acc, loss_sum, aux_sum), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.float32)), mbatch)
+        scale = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * scale, g_acc)
+        return loss_sum * scale, {"nll": loss_sum * scale,
+                                  "aux": aux_sum * scale}, grads
+
+    def step_fn(state, batch):
+        loss, extras, grads = _grads(state["params"], batch)
+        updates, opt = opt_update(opt_cfg, grads, state["opt"],
+                                  state["params"])
+        params = apply_updates(state["params"], updates)
+        metrics = {"loss": loss, **extras}
+        return ({"params": params, "opt": opt, "step": state["step"] + 1},
+                metrics)
+
+    return init_fn, step_fn
+
+
+def make_consensus_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                        ccfg: cns.ConsensusConfig, num_agents: int):
+    """Batch layout: every leaf gains a leading agent axis (N, ...)."""
+
+    def init_fn(key):
+        params = model_lib.init_params(cfg, key)
+        stacked = cns.stack_params(params, num_agents)
+        return {"params": stacked,
+                "consensus": cns.init_consensus_state(ccfg, opt_cfg,
+                                                      stacked)}
+
+    def _local_grads(params_stacked, batch_stacked):
+        def local(p, b):
+            (loss, extras), g = jax.value_and_grad(
+                model_lib.loss_fn, has_aux=True)(p, cfg, b)
+            return loss, g
+        loss, grads = jax.vmap(local)(params_stacked, batch_stacked)
+        return jnp.mean(loss), grads
+
+    def step_fn(state, batch):
+        loss, grads = _local_grads(state["params"], batch)
+        params, cstate, metrics = cns.consensus_update(
+            ccfg, opt_cfg, state["params"], grads, state["consensus"])
+        metrics = {"loss": loss, "comms": cstate["comms"], **metrics}
+        if ccfg.track_gap:  # full-param all-reduce; off in the hot path
+            metrics["consensus_gap"] = cns.consensus_gap(params)
+        return {"params": params, "consensus": cstate}, metrics
+
+    def local_step_fn(state, batch):
+        """coke_et censored round: no agent-axis collectives lowered."""
+        loss, grads = _local_grads(state["params"], batch)
+        params, cstate = cns.local_update(opt_cfg, state["params"], grads,
+                                          state["consensus"])
+        return {"params": params, "consensus": cstate}, {"loss": loss}
+
+    return init_fn, step_fn, local_step_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    ccfg: cns.ConsensusConfig | None = None,
+                    num_agents: int = 1, microbatches: int = 1):
+    if ccfg is None or ccfg.strategy == "allreduce":
+        init_fn, step_fn = make_allreduce_step(cfg, opt_cfg, microbatches)
+        return init_fn, step_fn, None
+    return make_consensus_step(cfg, opt_cfg, ccfg, num_agents)
+
+
+def agent_batch(batch: dict, num_agents: int) -> dict:
+    """Reshape a global batch (B, ...) into (N, B/N, ...) agent shards."""
+    def r(x):
+        return x.reshape(num_agents, x.shape[0] // num_agents, *x.shape[1:])
+    return {k: r(v) for k, v in batch.items()}

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see the host's real (single) device; only the dry-run sets the
+512-device flag, inside its own process."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

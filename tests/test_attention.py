@@ -1,0 +1,169 @@
+"""Attention: blockwise == naive; decode-vs-forward consistency; MLA
+absorbed decode == expanded forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import ModelConfig
+
+
+def _naive(q, k, v, positions_q, positions_k, causal=True, window=0):
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / jnp.sqrt(float(Dh))
+    valid = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        valid &= positions_k[None, :] <= positions_q[:, None]
+    if window:
+        valid &= positions_k[None, :] > positions_q[:, None] - window
+    valid &= positions_q[:, None] >= 0
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16),
+                                           (False, 0)])
+@pytest.mark.parametrize("Sq,block", [(64, 16), (50, 16), (33, 64)])
+def test_blockwise_matches_naive(causal, window, Sq, block):
+    key = jax.random.PRNGKey(0)
+    B, H, KV, Dh = 2, 4, 2, 8
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh))
+    k = jax.random.normal(ks[1], (B, Sq, KV, Dh))
+    v = jax.random.normal(ks[2], (B, Sq, KV, Dh))
+    pos = jnp.arange(Sq)
+    out_b = A.blockwise_attention(q, k, v, pos, pos, causal=causal,
+                                  window=window, block_q=block,
+                                  block_k=block)
+    out_n = _naive(q, k, v, pos, pos, causal, window)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_n),
+                               atol=2e-5)
+
+
+def _gqa_cfg(**kw):
+    base = dict(name="t", arch_type="dense", num_layers=1, d_model=32,
+                num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                vocab_size=64, attn_block_q=16, attn_block_k=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("qk_norm", [False, True])
+@pytest.mark.parametrize("window", [0, 8])
+def test_gqa_decode_matches_forward(qk_norm, window):
+    """Token-by-token decode reproduces the full forward output."""
+    cfg = _gqa_cfg(qk_norm=qk_norm, sliding_window=window)
+    params = A.init_gqa_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model))
+    pos = jnp.arange(S)
+    full = A.gqa_forward(params, cfg, x, pos)
+
+    C = window or S
+    cache = A.KVCache(
+        k=jnp.zeros((B, C, cfg.num_kv_heads, cfg.resolved_head_dim)),
+        v=jnp.zeros((B, C, cfg.num_kv_heads, cfg.resolved_head_dim)),
+        slot_positions=jnp.full((C,), -1, jnp.int32))
+    outs = []
+    for t in range(S):
+        o, cache = A.gqa_decode(params, cfg, x[:, t:t + 1], cache,
+                                jnp.asarray(t))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=3e-5)
+
+
+def test_gqa_prefill_cache_then_decode_matches_forward():
+    cfg = _gqa_cfg()
+    params = A.init_gqa_params(cfg, jax.random.PRNGKey(3))
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S + 1, cfg.d_model))
+    pos = jnp.arange(S + 1)
+    full = A.gqa_forward(params, cfg, x, pos)
+
+    cache = A.gqa_prefill_cache(params, cfg, x[:, :S], pos[:S], cache_len=16)
+    o, _ = A.gqa_decode(params, cfg, x[:, S:S + 1], cache, jnp.asarray(S))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(full[:, S:S + 1]),
+                               atol=3e-5)
+
+
+@pytest.mark.parametrize("q_lora", [0, 24])
+def test_mla_absorbed_decode_matches_forward(q_lora):
+    """The latent-space (absorbed) decode equals the expanded forward."""
+    cfg = _gqa_cfg(attn_kind="mla", kv_lora_rank=16, q_lora_rank=q_lora,
+                   qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8)
+    params = A.init_mla_params(cfg, jax.random.PRNGKey(5))
+    B, S = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, cfg.d_model))
+    pos = jnp.arange(S)
+    full = A.mla_forward(params, cfg, x, pos)
+
+    cache = A.MLACache(
+        ckv=jnp.zeros((B, S, cfg.kv_lora_rank)),
+        krope=jnp.zeros((B, S, cfg.qk_rope_dim)),
+        slot_positions=jnp.full((S,), -1, jnp.int32))
+    outs = []
+    for t in range(S):
+        o, cache = A.mla_decode(params, cfg, x[:, t:t + 1], cache,
+                                jnp.asarray(t))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=3e-5)
+
+
+def test_rolling_cache_evicts_old_positions():
+    """SWA rolling cache: positions older than the window are overwritten
+    and masked out."""
+    cfg = _gqa_cfg(sliding_window=4)
+    params = A.init_gqa_params(cfg, jax.random.PRNGKey(7))
+    B, S = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(8), (B, S, cfg.d_model))
+    C = 4
+    cache = A.KVCache(
+        k=jnp.zeros((B, C, cfg.num_kv_heads, cfg.resolved_head_dim)),
+        v=jnp.zeros((B, C, cfg.num_kv_heads, cfg.resolved_head_dim)),
+        slot_positions=jnp.full((C,), -1, jnp.int32))
+    for t in range(S):
+        o, cache = A.gqa_decode(params, cfg, x[:, t:t + 1], cache,
+                                jnp.asarray(t))
+    # all slots hold positions within the last window
+    slots = np.asarray(cache.slot_positions)
+    assert slots.min() >= S - C
+
+
+@pytest.mark.parametrize("kind", ["gqa", "mla"])
+def test_tp_head_padding_is_exact(kind):
+    """tp_head_pad physically pads Q heads to a shardable multiple with
+    zero-initialized wo rows — outputs must equal the unpadded model
+    exactly (the §Perf D lever for 14/40-head archs on a 16-way mesh)."""
+    base = dict(name="t", arch_type="dense", num_layers=1, d_model=64,
+                num_heads=5, num_kv_heads=1, head_dim=16, d_ff=64,
+                vocab_size=64, attn_block_q=16, attn_block_k=16)
+    if kind == "mla":
+        base.update(attn_kind="mla", kv_lora_rank=16, qk_nope_dim=8,
+                    qk_rope_dim=4, v_head_dim=8)
+    cfg0 = ModelConfig(**base)
+    cfg1 = ModelConfig(**base, tp_head_pad=8)
+    assert cfg1.padded_heads == 8 and cfg0.padded_heads == 5
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64))
+    pos = jnp.arange(12)
+    if kind == "gqa":
+        p1 = A.init_gqa_params(cfg1, key)
+        p0 = dict(p1, wq=p1["wq"][:, :5], wo=p1["wo"][:5])
+        o0 = A.gqa_forward(p0, cfg0, x, pos)
+        o1 = A.gqa_forward(p1, cfg1, x, pos)
+    else:
+        p1 = A.init_mla_params(cfg1, key)
+        p0 = dict(p1, wq=p1["wq"][:, :5], wkv_b=p1["wkv_b"][:, :5],
+                  wo=p1["wo"][:5])
+        o0 = A.mla_forward(p0, cfg0, x, pos)
+        o1 = A.mla_forward(p1, cfg1, x, pos)
+    np.testing.assert_array_equal(np.asarray(o0), np.asarray(o1))

@@ -1,0 +1,48 @@
+"""Censoring primitives (Eqs. 19-20) — property-based."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.censor import (CensorSchedule, censor_decision,
+                               masked_broadcast)
+
+
+@settings(deadline=None, max_examples=50)
+@given(hnp.arrays(np.float32, (4, 8), elements=st.floats(-5, 5, width=32)),
+       hnp.arrays(np.float32, (4, 8), elements=st.floats(-5, 5, width=32)),
+       st.floats(0.0, 10.0))
+def test_censor_decision_matches_norm(theta, hat, h):
+    send = censor_decision(jnp.asarray(theta), jnp.asarray(hat),
+                           jnp.asarray(h))
+    expect = np.linalg.norm(hat - theta, axis=-1) >= h
+    np.testing.assert_array_equal(np.asarray(send), expect)
+
+
+@settings(deadline=None, max_examples=50)
+@given(hnp.arrays(np.float32, (5, 6), elements=st.floats(-3, 3, width=32)),
+       hnp.arrays(np.float32, (5, 6), elements=st.floats(-3, 3, width=32)),
+       hnp.arrays(np.bool_, (5,)))
+def test_masked_broadcast_selects_rows(theta, hat, send):
+    out = np.asarray(masked_broadcast(jnp.asarray(theta), jnp.asarray(hat),
+                                      jnp.asarray(send)))
+    for i in range(5):
+        np.testing.assert_array_equal(out[i],
+                                      theta[i] if send[i] else hat[i])
+
+
+def test_schedule_nonincreasing_nonnegative():
+    s = CensorSchedule(v=2.0, mu=0.9)
+    vals = [float(s(k)) for k in range(50)]
+    assert all(v >= 0 for v in vals)
+    assert all(vals[i + 1] <= vals[i] for i in range(49))
+
+
+def test_zero_threshold_always_sends():
+    s = CensorSchedule(v=0.0)
+    assert not s.enabled
+    theta = jnp.ones((3, 4))
+    hat = jnp.ones((3, 4))  # no change at all
+    send = censor_decision(theta, hat, s(10))
+    assert bool(jnp.all(send))  # ||xi|| = 0 >= 0 -> transmit

@@ -1,0 +1,157 @@
+"""Theorem-level behaviour of DKLA / COKE / CTA (the paper's core claims):
+convergence to the centralized optimum, linear rate, censoring savings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, cta, graph, rff, ridge
+from repro.core.censor import CensorSchedule
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(0)
+    N, T, d, L = 6, 50, 3, 8
+    x = rng.normal(size=(N, T, d)).astype(np.float32)
+    y = (np.sin(x.sum(-1)) + 0.05 * rng.normal(size=(N, T))).astype(
+        np.float32)
+    g = graph.ring(N)
+    p = rff.draw_rff(jax.random.PRNGKey(1), d, L, 1.0)
+    feats = rff.featurize(p, jnp.asarray(x))
+    labels = jnp.asarray(y)
+    lam = 1e-2
+    prob = admm.make_problem(feats, labels, g, lam=lam, rho=0.5)
+    theta_star = ridge.rf_ridge(feats, labels, lam)
+    return prob, g, theta_star
+
+
+def _dist(state_theta, theta_star):
+    return float(jnp.max(jnp.linalg.norm(state_theta - theta_star, axis=-1)))
+
+
+def test_dkla_converges_to_centralized_optimum(problem):
+    prob, _, theta_star = problem
+    res = admm.run(prob, admm.dkla_schedule(), 800)
+    assert _dist(res.state.theta, theta_star) < 1e-4
+    assert float(res.consensus_gap[-1]) < 1e-5
+
+
+def test_dkla_linear_rate(problem):
+    """Theorem 1: R-linear convergence — log-distance decreases ~linearly."""
+    prob, _, theta_star = problem
+    res = admm.run(prob, admm.dkla_schedule(), 600)
+    # distance at checkpoints shrinks by a stable factor
+    d = []
+    for k in (100, 200, 300, 400):
+        r = admm.run(prob, admm.dkla_schedule(), k)
+        d.append(_dist(r.state.theta, theta_star))
+    ratios = [d[i + 1] / d[i] for i in range(3)]
+    assert all(r < 0.7 for r in ratios), ratios
+
+
+def test_coke_converges_and_saves_communication(problem):
+    prob, _, theta_star = problem
+    iters = 800
+    res_d = admm.run(prob, admm.dkla_schedule(), iters)
+    res_c = admm.run(prob, CensorSchedule(v=0.5, mu=0.97), iters)
+    assert _dist(res_c.state.theta, theta_star) < 1e-3
+    assert int(res_c.comms[-1]) < int(res_d.comms[-1])
+    # final learning performance matches DKLA (paper: negligible gap)
+    assert abs(float(res_c.train_mse[-1]) - float(res_d.train_mse[-1])) < 1e-5
+
+
+def test_coke_zero_threshold_is_dkla(problem):
+    prob, _, _ = problem
+    res_d = admm.run(prob, admm.dkla_schedule(), 50)
+    res_c = admm.run(prob, CensorSchedule(v=0.0, mu=0.9), 50)
+    np.testing.assert_allclose(np.asarray(res_d.state.theta),
+                               np.asarray(res_c.state.theta), atol=0)
+    assert int(res_c.comms[-1]) == int(res_d.comms[-1])
+
+
+def test_cta_converges_but_slower(problem):
+    """Compare the *regularized objective* (raw MSE can dip below the
+    regularized optimum's, which is not a win): at equal iteration count
+    the ADMM iterate is closer to theta* than the diffusion iterate."""
+    prob, g, theta_star = problem
+    iters = 300
+    res_cta = cta.run(prob, g, lr=0.5, num_iters=iters)
+    res_dkla = admm.run(prob, admm.dkla_schedule(), iters)
+    d_cta = float(jnp.max(jnp.linalg.norm(
+        res_cta.state.theta - theta_star, axis=-1)))
+    d_dkla = float(jnp.max(jnp.linalg.norm(
+        res_dkla.state.theta - theta_star, axis=-1)))
+    assert d_cta < 1.0          # CTA does converge toward theta*
+    assert d_dkla <= d_cta      # ...but ADMM is closer at the same k
+
+
+def test_dual_variables_sum_to_zero(problem):
+    """Invariant: sum_i gamma_i == 0 for all k (symmetric graph, zero init)
+    — this is what forces the fixed point to the *global* optimum."""
+    prob, _, _ = problem
+    res = admm.run(prob, admm.dkla_schedule(), 100)
+    total = jnp.sum(res.state.gamma, axis=0)
+    np.testing.assert_allclose(np.asarray(total), 0.0, atol=1e-3)
+
+
+def test_censoring_more_aggressive_saves_more(problem):
+    prob, _, _ = problem
+    mild = admm.run(prob, CensorSchedule(v=0.1, mu=0.95), 300)
+    aggressive = admm.run(prob, CensorSchedule(v=2.0, mu=0.99), 300)
+    assert int(aggressive.comms[-1]) < int(mild.comms[-1])
+
+
+def test_gradient_inner_solver_matches_closed_form(problem):
+    """The inexact (gradient) primal update approaches the exact solve."""
+    prob, _, theta_star = problem
+    prob_grad = admm.Problem(prob.feats, prob.labels, prob.adjacency,
+                             prob.lam, prob.rho, loss="quadratic")
+    res_exact = admm.run(prob, admm.dkla_schedule(), 150)
+    # force gradient path by pretending loss is non-quadratic via inner call
+    state = admm.init_state(prob_grad)
+    sched = admm.dkla_schedule()
+    for _ in range(150):
+        state = admm.coke_step(prob_grad, sched, state, chol=None,
+                               inner_steps=60, inner_lr=0.4)
+    d = float(jnp.max(jnp.linalg.norm(
+        state.theta - res_exact.state.theta, axis=-1)))
+    assert d < 0.05
+
+
+def test_online_coke_stream_learns_and_censors():
+    """Online (streaming) COKE — beyond-paper extension of Alg. 2 to the
+    paper's stated future-work setting: instantaneous MSE on incoming data
+    falls, transmissions are censored, all agents track each other."""
+    import jax
+    from repro.core import online, rff
+    from repro.core.graph import ring
+
+    N, b, d, L = 6, 16, 3, 24
+    g = ring(N)
+    p = rff.draw_rff(jax.random.PRNGKey(0), d, L, 1.0)
+    true_theta = jax.random.normal(jax.random.PRNGKey(1), (L,))
+
+    def batch_fn(k):
+        kx = jax.random.fold_in(jax.random.PRNGKey(2), k)
+        x = jax.random.normal(kx, (N, b, d))
+        feats = rff.featurize(p, x)
+        labels = jnp.einsum("nbd,d->nb", feats, true_theta)
+        return feats, labels
+
+    from repro.core.censor import CensorSchedule
+    state = online.init_state(N, L)
+    adjacency = jnp.asarray(g.adjacency, jnp.float32)
+    state, mse, comms = online.run_stream(
+        state, adjacency, CensorSchedule(0.2, 0.995), lam=1e-3, rho=0.05,
+        lr=0.3, num_rounds=600, batch_fn=batch_fn)
+    # instantaneous (pre-update) MSE falls by >10x
+    head = float(jnp.mean(mse[:20]))
+    tail = float(jnp.mean(mse[-20:]))
+    assert tail < head / 10.0, (head, tail)
+    # censoring saved transmissions
+    assert int(comms[-1]) < 600 * N
+    # consensus across the ring
+    gap = float(jnp.max(jnp.linalg.norm(
+        state.theta - jnp.mean(state.theta, 0, keepdims=True), axis=-1)))
+    assert gap < 0.5

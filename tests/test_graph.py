@@ -1,0 +1,61 @@
+"""Topology substrate: connectivity, incidence spectra, Thm-2 rho bound."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import graph as G
+
+
+def test_er_connected_and_symmetric():
+    g = G.erdos_renyi(20, 0.3, seed=0)
+    assert g.is_connected()
+    np.testing.assert_array_equal(g.adjacency, g.adjacency.T)
+    assert np.all(np.diag(g.adjacency) == 0)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(3, 24))
+def test_ring_degree_two(n):
+    g = G.ring(n)
+    assert g.is_connected()
+    if n > 2:
+        assert np.all(g.degrees == 2)
+
+
+def test_circulant_matches_ppermute_offsets():
+    g = G.circulant(8, offsets=(1, 3))
+    for i in range(8):
+        nbrs = set(g.neighbors(i))
+        assert nbrs == {(i + 1) % 8, (i - 1) % 8, (i + 3) % 8, (i - 3) % 8}
+
+
+def test_incidence_shapes_and_nullspace():
+    g = G.erdos_renyi(10, 0.4, seed=3)
+    S_plus, S_minus = g.incidence()
+    E = g.num_edges
+    assert S_plus.shape == (2 * E, 10) and S_minus.shape == (2 * E, 10)
+    # signed incidence annihilates the consensus (all-ones) direction
+    np.testing.assert_allclose(S_minus @ np.ones(10), 0.0, atol=1e-12)
+    smax, smin = g.sigma_terms()
+    assert smax > 0 and smin > 0
+
+
+def test_metropolis_doubly_stochastic():
+    g = G.erdos_renyi(12, 0.35, seed=5)
+    W = G.metropolis_weights(g)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    assert np.all(W >= -1e-12)
+
+
+def test_admissible_rho_positive():
+    g = G.ring(8)
+    rho = G.admissible_rho(g, m_R=0.5, M_R=2.0)
+    assert rho > 0
+
+
+def test_admissible_rho_raises_when_infeasible():
+    g = G.ring(8)
+    with pytest.raises(ValueError):
+        G.admissible_rho(g, m_R=1e-9, M_R=1e3, eta3=1e6)

@@ -1,0 +1,108 @@
+"""The trip-count-aware HLO analyzer is the roofline's foundation — test it
+on synthetic HLO snippets covering the constructs we rely on: while trip
+counts, fusion exclusion, variadic tuple all-reduce operands, dot FLOPs."""
+from repro.launch.hlo_analyzer import analyze_hlo
+
+HLO_SIMPLE = """\
+HloModule test
+
+%fused_inner (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  ROOT %m = f32[8,8] multiply(%p0, %p0)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,8]) -> f32[8,8] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,8] parameter(1)
+  %d = f32[8,8] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %f = f32[8,8] fusion(%d), kind=kLoop, calls=%fused_inner
+}
+"""
+
+
+def test_dot_flops_and_fusion_exclusion():
+    res = analyze_hlo(HLO_SIMPLE)
+    # dot: 2 * 8*8 * 16 = 2048 flops
+    assert res["dot_flops"] == 2048.0
+    # fusion internals excluded from hbm bytes; dot counts operands+output:
+    # (8*16 + 16*8 + 8*8) * 4 = 1280; fusion op itself: (64 + 64) * 4 = 512
+    assert res["hbm_bytes"] == 1280.0 + 512.0
+
+
+HLO_WHILE = """\
+HloModule test
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4] get-tuple-element(%p), index=1
+  %d = f32[4,4] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,4] all-reduce(%d), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[4,4]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%add (ax: f32[], ay: f32[]) -> f32[] {
+  %ax = f32[] parameter(0)
+  %ay = f32[] parameter(1)
+  ROOT %s = f32[] add(%ax, %ay)
+}
+
+ENTRY %main (x0: f32[4,4]) -> (s32[], f32[4,4]) {
+  %x0 = f32[4,4] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4,4]) tuple(%zero, %x0)
+  ROOT %w = (s32[], f32[4,4]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+
+
+def test_while_trip_count_multiplies_body():
+    res = analyze_hlo(HLO_WHILE)
+    # per-iteration dot: 2 * 16 * 4 = 128 flops; 7 trips
+    assert res["dot_flops"] == 7 * 128.0
+    # all-reduce operand f32[4,4] = 64 bytes, 7 trips
+    assert res["collective_bytes"]["all-reduce"] == 7 * 64.0
+    assert res["trip_counts"].get("body") == 7
+
+
+def test_trip_count_fallback_from_condition():
+    hlo = HLO_WHILE.replace(', backend_config={"known_trip_count":{"n":"7"}}',
+                            "")
+    res = analyze_hlo(hlo)
+    assert res["dot_flops"] == 7 * 128.0  # from constant(7) in %cond
+
+
+HLO_VARIADIC = """\
+HloModule test
+
+%add (ax: f32[], ay: f32[]) -> f32[] {
+  %ax = f32[] parameter(0)
+  %ay = f32[] parameter(1)
+  ROOT %s = f32[] add(%ax, %ay)
+}
+
+ENTRY %main (a: f32[100], b: f32[50]) -> (f32[100], f32[50]) {
+  %a = f32[100] parameter(0)
+  %b = f32[50] parameter(1)
+  ROOT %ar = (f32[100]{0}, f32[50]{0}) all-reduce(%a, %b), replica_groups={}, to_apply=%add
+}
+"""
+
+
+def test_variadic_tuple_all_reduce_operands():
+    """Tuple-typed collectives: operand bytes must come from the CALL
+    parens, not the tuple-type parens (the A4/C-pair parser bug)."""
+    res = analyze_hlo(HLO_VARIADIC)
+    assert res["collective_bytes"]["all-reduce"] == (100 + 50) * 4.0
+
+
+def test_empty_module():
+    res = analyze_hlo("HloModule empty\n")
+    assert res["dot_flops"] == 0.0

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rff import draw_rff, featurize
+from repro.kernels.coke_update.coke_update import coke_fused_update
+from repro.kernels.coke_update.ops import coke_update_pytree
+from repro.kernels.coke_update.ref import coke_update_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import gqa_flash
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rff.ops import featurize_fused
+from repro.kernels.rff.ref import rff_ref
+
+
+# --------------------------- rff ------------------------------------------
+
+@pytest.mark.parametrize("T,d,L", [(64, 5, 32), (300, 77, 100),
+                                   (128, 96, 200), (33, 13, 50)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rff_kernel_shapes_dtypes(T, d, L, dtype):
+    p = draw_rff(jax.random.PRNGKey(0), d, L, 1.0)
+    p = type(p)(p.omega.astype(dtype), p.bias.astype(dtype), p.mapping)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, d), dtype)
+    out = featurize_fused(p, x)
+    ref = rff_ref(x, p.omega, p.bias)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_rff_kernel_matches_core_featurize():
+    p = draw_rff(jax.random.PRNGKey(2), 5, 64, 2.0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 50, 5))
+    out = featurize_fused(p, x)
+    core = featurize(p, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(core), atol=1e-5)
+
+
+# --------------------------- flash attention ------------------------------
+
+@pytest.mark.parametrize("Sq,Sk,blocks", [(128, 128, 64), (100, 100, 32),
+                                          (257, 257, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32),
+                                           (False, 0)])
+def test_flash_attention_sweep(Sq, Sk, blocks, causal, window):
+    B, H, Dh = 2, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, Dh))
+    k = jax.random.normal(ks[1], (B, H, Sk, Dh))
+    v = jax.random.normal(ks[2], (B, H, Sk, Dh))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=blocks, block_k=blocks)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, H, S, Dh = 1, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, H, S, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, Dh), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_gqa_flash_grouped_heads():
+    q = jax.random.normal(jax.random.PRNGKey(6), (2, 96, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(7), (2, 96, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(8), (2, 96, 2, 16))
+    out = gqa_flash(q, k, v, block_q=32, block_k=32)
+    kr = jnp.repeat(k.transpose(0, 2, 1, 3), 4, 1)
+    vr = jnp.repeat(v.transpose(0, 2, 1, 3), 4, 1)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), kr, vr).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# --------------------------- coke fused update ----------------------------
+
+@pytest.mark.parametrize("N,D", [(4, 100), (8, 1000), (2, 513), (1, 4096)])
+@pytest.mark.parametrize("rho", [0.01, 1.0])
+def test_coke_update_sweep(N, D, rho):
+    args = [jax.random.normal(k, (N, D))
+            for k in jax.random.split(jax.random.PRNGKey(9), 6)]
+    g_k, xi_k = coke_fused_update(*args, rho=rho)
+    g_r, xi_r = coke_update_ref(*args, rho=rho)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xi_k), np.asarray(xi_r),
+                               rtol=1e-4)
+
+
+def test_coke_update_pytree_wrapper():
+    N = 4
+    mk = lambda k, shape: jax.random.normal(k, (N, *shape))
+    keys = jax.random.split(jax.random.PRNGKey(10), 30).reshape(6, 5, 2)
+    trees = []
+    for i in range(6):
+        trees.append({"a": mk(keys[i, 0], (3, 7)), "b": mk(keys[i, 1], (11,)),
+                      "c": {"d": mk(keys[i, 2], (2, 2, 2))}})
+    gaug, xi = coke_update_pytree(*trees, rho=0.1)
+    assert jax.tree.structure(gaug) == jax.tree.structure(trees[0])
+    # oracle on the flattened view
+    flat = [jnp.concatenate([l.reshape(N, -1) for l in jax.tree.leaves(t)], 1)
+            for t in trees]
+    g_r, xi_sq = coke_update_ref(*flat, rho=0.1)
+    flat_gaug = jnp.concatenate(
+        [l.reshape(N, -1) for l in jax.tree.leaves(gaug)], 1)
+    np.testing.assert_allclose(np.asarray(flat_gaug), np.asarray(g_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xi), np.sqrt(np.asarray(xi_sq)),
+                               rtol=1e-4)

@@ -1,0 +1,62 @@
+"""MoE grouped-GShard dispatch vs dense oracle; aux loss; capacity behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+from repro.models.common import ModelConfig
+
+
+def _cfg(E=4, k=2, shared=0, cf=8.0, group=32):
+    return ModelConfig(name="t", arch_type="moe", num_layers=1, d_model=16,
+                       num_heads=2, num_kv_heads=2, d_ff=24, vocab_size=64,
+                       num_experts=E, top_k=k, num_shared_experts=shared,
+                       moe_capacity_factor=cf, moe_group_size=group)
+
+
+@pytest.mark.parametrize("E,k,shared", [(4, 2, 0), (8, 2, 0), (4, 2, 1),
+                                        (8, 3, 2)])
+def test_dispatch_matches_dense_oracle(E, k, shared):
+    cfg = _cfg(E=E, k=k, shared=shared)
+    params = moe.init_moe_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y, aux = moe.moe_forward(params, cfg, x)
+    y_ref = moe.moe_forward_dense_ref(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-5  # >= 1 by Cauchy-Schwarz, = 1 balanced
+
+
+def test_low_capacity_drops_tokens_gracefully():
+    cfg = _cfg(cf=0.25)  # deliberately starved
+    params = moe.init_moe_params(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model))
+    y, _ = moe.moe_forward(params, cfg, x)
+    y_ref = moe.moe_forward_dense_ref(params, cfg, x)
+    # dropped tokens produce zeros (residual passes through in the block);
+    # output must never exceed the dense result's magnitude wildly
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(jnp.linalg.norm(y)) <= float(jnp.linalg.norm(y_ref)) + 1e-3
+
+
+def test_grouping_invariance_with_ample_capacity():
+    cfg_a = _cfg(group=16)
+    cfg_b = _cfg(group=64)
+    params = moe.init_moe_params(cfg_a, jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 32, cfg_a.d_model))
+    ya, _ = moe.moe_forward(params, cfg_a, x)
+    yb, _ = moe.moe_forward(params, cfg_b, x)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), atol=1e-4)
+
+
+def test_gates_normalized():
+    """Top-k gate values are renormalized (mixtral convention): outputs are
+    convex combos, so scaling all experts by c scales output by c."""
+    cfg = _cfg()
+    params = moe.init_moe_params(cfg, jax.random.PRNGKey(6))
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 32, cfg.d_model))
+    y1, _ = moe.moe_forward(params, cfg, x)
+    p2 = dict(params, w_down=params["w_down"] * 2.0)
+    y2, _ = moe.moe_forward(p2, cfg, x)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1), atol=1e-4)

@@ -1,0 +1,71 @@
+"""RFF mapping: kernel approximation quality, common-seed consistency,
+norm bounds (used by the convergence proof), both real-valued mappings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import rff
+
+
+@pytest.mark.parametrize("mapping", ["cos_bias", "cos_sin"])
+def test_kernel_approximation_improves_with_L(mapping):
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 5))
+    exact = rff.exact_gaussian_kernel(x, x, bandwidth=1.0)
+    errs = []
+    for L in (32, 512):
+        p = rff.draw_rff(jax.random.PRNGKey(2), 5, L, 1.0, mapping=mapping)
+        approx = rff.approx_kernel(p, x, x)
+        errs.append(float(jnp.max(jnp.abs(approx - exact))))
+    assert errs[1] < errs[0]
+    assert errs[1] < 0.25
+
+
+def test_common_seed_gives_identical_features():
+    pa = rff.draw_rff(jax.random.PRNGKey(7), 3, 64, 2.0)
+    pb = rff.draw_rff(jax.random.PRNGKey(7), 3, 64, 2.0)
+    np.testing.assert_array_equal(np.asarray(pa.omega), np.asarray(pb.omega))
+    np.testing.assert_array_equal(np.asarray(pa.bias), np.asarray(pb.bias))
+
+
+def test_unbiasedness_cos_bias():
+    """E[phi(x)'phi(y)] -> kappa(x,y) over feature draws."""
+    x = jnp.array([[0.3, -0.2]])
+    y = jnp.array([[-0.1, 0.5]])
+    exact = float(rff.exact_gaussian_kernel(x, y, 1.0)[0, 0])
+    p = rff.draw_rff(jax.random.PRNGKey(3), 2, 20000, 1.0)
+    approx = float(rff.approx_kernel(p, x, y)[0, 0])
+    assert abs(approx - exact) < 0.05
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 40), st.integers(2, 8),
+       st.floats(0.5, 4.0))
+def test_cos_sin_norm_exactly_one(T, d, bw):
+    """||phi_L(x)||_2 == 1 for the (12) mapping — the bound in Eq. (33)."""
+    p = rff.draw_rff(jax.random.PRNGKey(11), d, 32, bw, mapping="cos_sin")
+    x = jax.random.normal(jax.random.PRNGKey(T), (T, d))
+    norms = jnp.sum(rff.featurize(p, x) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(norms), 1.0, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 40), st.integers(2, 8))
+def test_cos_bias_norm_bounded(T, d):
+    """||phi_L(x)||^2 <= 2 for the (13) mapping."""
+    p = rff.draw_rff(jax.random.PRNGKey(13), d, 64, 1.0, mapping="cos_bias")
+    x = jax.random.normal(jax.random.PRNGKey(T + 100), (T, d))
+    norms = jnp.sum(rff.featurize(p, x) ** 2, -1)
+    assert float(jnp.max(norms)) <= 2.0 + 1e-5
+
+
+def test_feature_dims():
+    p12 = rff.draw_rff(jax.random.PRNGKey(0), 4, 64, 1.0, mapping="cos_sin")
+    p13 = rff.draw_rff(jax.random.PRNGKey(0), 4, 64, 1.0, mapping="cos_bias")
+    x = jnp.ones((3, 4))
+    assert rff.featurize(p12, x).shape == (3, 64)
+    assert rff.featurize(p13, x).shape == (3, 64)
+    assert p12.num_features == 64 and p12.omega.shape == (4, 32)
+    assert p13.num_features == 64 and p13.omega.shape == (4, 64)

@@ -1,0 +1,61 @@
+"""Centralized oracles: normal equations, RKHS-vs-RF consistency, d_K^lam."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rff, ridge
+
+
+def _toy(L=16, N=4, T=30, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(N, T, d)).astype(np.float32)
+    y = np.tanh(x.sum(-1)).astype(np.float32)
+    p = rff.draw_rff(jax.random.PRNGKey(seed), d, L, 1.0)
+    return rff.featurize(p, jnp.asarray(x)), jnp.asarray(y), x, y
+
+
+def test_rf_ridge_satisfies_normal_equations():
+    feats, labels, _, _ = _toy()
+    lam = 1e-2
+    theta = ridge.rf_ridge(feats, labels, lam)
+    phi, y = ridge._stack_scaled(feats, labels)
+    residual = phi.T @ (phi @ theta - y) + lam * theta
+    np.testing.assert_allclose(np.asarray(residual), 0.0, atol=1e-4)
+
+
+def test_rf_ridge_is_risk_minimizer():
+    """Perturbations can't beat theta* on the regularized objective."""
+    feats, labels, _, _ = _toy()
+    lam = 1e-2
+    theta = ridge.rf_ridge(feats, labels, lam)
+    phi, y = ridge._stack_scaled(feats, labels)
+
+    def obj(t):
+        return float(jnp.sum((phi @ t - y) ** 2) + lam * jnp.sum(t * t))
+
+    base = obj(theta)
+    key = jax.random.PRNGKey(5)
+    for i in range(5):
+        delta = 1e-2 * jax.random.normal(jax.random.fold_in(key, i),
+                                         theta.shape)
+        assert obj(theta + delta) >= base - 1e-6
+
+
+def test_effective_dof_bounds():
+    """0 < d_K^lam < T, decreasing in lambda (Thm 3's feature-count knob)."""
+    _, _, x, _ = _toy()
+    X = jnp.asarray(x.reshape(-1, x.shape[-1]))
+    K = rff.exact_gaussian_kernel(X, X, 1.0)
+    T = K.shape[0]
+    d1 = float(ridge.effective_degrees_of_freedom(K, 1e-4))
+    d2 = float(ridge.effective_degrees_of_freedom(K, 1e-1))
+    assert 0 < d2 < d1 < T
+
+
+def test_sufficient_features_monotone_in_lambda():
+    _, _, x, _ = _toy()
+    X = jnp.asarray(x.reshape(-1, x.shape[-1]))
+    K = rff.exact_gaussian_kernel(X, X, 1.0)
+    L1 = ridge.sufficient_features(K, 1e-3)
+    L2 = ridge.sufficient_features(K, 1e-1)
+    assert L1 > L2 > 0

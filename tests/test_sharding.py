@@ -1,0 +1,111 @@
+"""Sharding rules: every spec must be valid (divisible) for every arch on
+the production meshes — the invariant the dry-run relies on. Runs on a
+1-device host (specs are pure metadata; no allocation)."""
+import math
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.configs.registry import list_archs
+from repro.distributed import sharding as shd
+from repro.models import model as M
+
+
+class FakeMesh:
+    """Metadata-only mesh stand-in (axis sizes + names)."""
+
+    def __init__(self, shape_by_axis):
+        self.shape = shape_by_axis
+        self.axis_names = tuple(shape_by_axis)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_spec_divides(spec: P, shape, mesh, where: str):
+    assert len(spec) <= len(shape), f"{where}: spec longer than shape"
+    for dim, axis in zip(shape, spec):
+        if axis is None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        extent = math.prod(mesh.shape[a] for a in axes)
+        assert dim % extent == 0, \
+            f"{where}: dim {dim} not divisible by {axes}={extent}"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    shapes = M.param_shapes(cfg)
+    specs = shd.param_specs(cfg, shapes, mesh)
+    flat_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_specs = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat_shapes, flat_specs):
+        _check_spec_divides(spec, leaf.shape, mesh,
+                            f"{arch}:{jax.tree_util.keystr(path)}")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_decode_and_batch_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    rcfg, kind, specs = input_specs(cfg, shape_name)
+    if rcfg is None:
+        pytest.skip("pair skipped by design")
+    for mesh in (SINGLE, MULTI):
+        in_sp = shd.step_in_specs(rcfg, kind, specs, mesh)
+        tree = specs if kind != "decode" else specs
+        flat_shapes = jax.tree_util.tree_flatten_with_path(tree)[0]
+        flat_specs = jax.tree.leaves(
+            in_sp, is_leaf=lambda x: isinstance(x, P))
+        for (path, leaf), spec in zip(flat_shapes, flat_specs):
+            _check_spec_divides(spec, leaf.shape, mesh,
+                                f"{arch}:{shape_name}:"
+                                f"{jax.tree_util.keystr(path)}")
+
+
+def test_vocab_padding_divisible_by_model_axis():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 16 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_tensor_parallel_falls_back_to_replication():
+    """internvl2 has 14 heads (not divisible by 16): wq must replicate the
+    head dim rather than shard it."""
+    cfg = get_config("internvl2-1b")
+    shapes = M.param_shapes(cfg)
+    specs = shd.param_specs(cfg, shapes, SINGLE)
+    wq_spec = specs["blocks"]["attn"]["wq"]
+    assert wq_spec[1 + 1] is None  # (layer, d, H, Dh): H replicated
+
+
+def test_kv_cache_sequence_parallel_fallback():
+    """granite decode: 8 KV heads < 16 model shards -> cache length dim is
+    sharded over model instead (sequence-parallel KV)."""
+    cfg = get_config("granite-3-8b")
+    rcfg, kind, specs = input_specs(cfg, "decode_32k")
+    state_specs = shd.decode_state_specs(rcfg, specs["state"], SINGLE)
+    k_spec = state_specs["layers"].k
+    assert k_spec[3] is None      # KV heads replicated
+    assert k_spec[2] == "model"   # cache length sharded
+
+
+def test_long500k_window_variant_and_skips():
+    from repro.configs.shapes import long_context_mode
+    assert long_context_mode(get_config("mamba2-2.7b")) == "native"
+    assert long_context_mode(get_config("zamba2-2.7b")) == "native"
+    assert long_context_mode(get_config("mixtral-8x7b")) == "native"
+    assert long_context_mode(get_config("seamless-m4t-medium")) == "skip"
+    assert long_context_mode(get_config("llama3-405b")) == "window-variant"
+    rcfg, _, _ = input_specs(get_config("llama3-405b"), "long_500k")
+    assert rcfg.sliding_window == 4096
+    rcfg, kind, specs = input_specs(get_config("seamless-m4t-medium"),
+                                    "long_500k")
+    assert rcfg is None
