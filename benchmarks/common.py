@@ -1,4 +1,10 @@
-"""Shared benchmark plumbing: problem construction + timing helpers."""
+"""Shared benchmark plumbing, written against the `repro.api` surface.
+
+`build_problem` keeps its historical tuple signature for the benchmark
+scripts but delegates construction to `repro.api.build_problem`;
+`tune_censor` sweeps censor schedules through `fit()` — the thresholds are
+traced, so the whole grid reuses one compiled fit loop.
+"""
 from __future__ import annotations
 
 import time
@@ -6,30 +12,15 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs.coke_krr import KRRConfig
-from repro.core import admm, graph, rff
-from repro.data.synthetic import paper_synthetic, uci_standin
+from repro.api import FitConfig, KRRConfig, fit
+from repro.api import build_problem as api_build_problem
 
 
 def build_problem(cfg: KRRConfig, samples_override: int | None = None):
-    """-> (problem, graph, rffparams, dataset) for a paper setup."""
-    n = samples_override or cfg.samples_per_agent
-    if cfg.dataset == "synthetic":
-        ds = paper_synthetic(num_agents=cfg.num_agents, samples_per_agent=n,
-                            seed=cfg.seed)
-        g = graph.erdos_renyi(cfg.num_agents, cfg.graph_p, seed=cfg.seed)
-    else:
-        ds = uci_standin(cfg.dataset, num_agents=cfg.num_agents,
-                         subsample=n * cfg.num_agents)
-        g = graph.erdos_renyi(cfg.num_agents, cfg.graph_p, seed=cfg.seed + 1)
-    p = rff.draw_rff(jax.random.PRNGKey(cfg.seed), ds.input_dim,
-                     cfg.num_features, cfg.bandwidth, mapping=cfg.mapping)
-    feats = rff.featurize(p, jnp.asarray(ds.x))
-    labels = jnp.asarray(ds.y)
-    prob = admm.make_problem(feats, labels, g, lam=cfg.lam, rho=cfg.rho)
-    feats_test = rff.featurize(p, jnp.asarray(ds.x_test))
-    labels_test = jnp.asarray(ds.y_test)
-    return prob, g, p, (feats_test, labels_test)
+    """-> (problem, graph, rffparams, (feats_test, labels_test))."""
+    built = api_build_problem(cfg, samples_override=samples_override)
+    return (built.problem, built.graph, built.rff_params,
+            (built.feats_test, built.labels_test))
 
 
 def test_mse(theta_stack, feats_test, labels_test) -> float:
@@ -43,18 +34,20 @@ def tune_censor(prob, iters: int = 600, max_gap: float = 0.01,
     """Per-dataset censor-threshold tuning, mirroring the paper's protocol
     ("parameters ... tuned to achieve the best learning performance at
     nearly no performance loss"): pick the (v, mu) with the largest
-    communication saving whose final-MSE gap vs DKLA is <= max_gap."""
-    from repro.core.censor import CensorSchedule
-    res_d = admm.run(prob, admm.dkla_schedule(), iters)
+    communication saving whose final-MSE gap vs DKLA is <= max_gap.
+    Returns (best FitConfig, saving)."""
+    base = FitConfig(algorithm="dkla", num_iters=iters)
+    res_d = fit(base, problem=prob)
     final_d = float(res_d.train_mse[-1])
-    best = (0.0, 0.0, 0.5)  # (saving, v, mu): fallback = DKLA (v=0)
+    best = (0.0, base)  # (saving, config): fallback = DKLA
     for v, mu in grid:
-        r = admm.run(prob, CensorSchedule(v, mu), iters)
+        cfg = base.replace(algorithm="coke", censor_v=v, censor_mu=mu)
+        r = fit(cfg, problem=prob)
         gap = (float(r.train_mse[-1]) - final_d) / max(final_d, 1e-12)
         saving = 1.0 - int(r.comms[-1]) / max(int(res_d.comms[-1]), 1)
         if gap <= max_gap and saving > best[0]:
-            best = (saving, v, mu)
-    return CensorSchedule(best[1], best[2]), best[0]
+            best = (saving, cfg)
+    return best[1], best[0]
 
 
 def time_call(fn, *args, iters: int = 5, warmup: int = 1) -> float:

@@ -1,4 +1,6 @@
-"""Paper Fig. 3 + Tables 3/6: communication cost to reach a target MSE.
+"""Paper Fig. 3 + Tables 3/6: communication cost to reach a target MSE,
+driven entirely through `repro.api.fit` (the censor grid sweeps share one
+compiled fit loop — thresholds are traced, not static).
 
 Protocol (faithful to the paper's): censor thresholds are tuned per dataset
 and per accuracy requirement — "the parameters of the censoring function are
@@ -16,9 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import build_problem
-from repro.configs.coke_krr import PAPER_SETUPS
-from repro.core import admm, cta
-from repro.core.censor import CensorSchedule
+from repro.api import PAPER_SETUPS, FitConfig, fit
 
 GRID = ((0.5, 0.98), (0.5, 0.99), (0.1, 0.995), (0.05, 0.997),
         (0.02, 0.998), (0.01, 0.999), (0.05, 0.999))
@@ -32,10 +32,13 @@ def comms_to_reach(mse_hist, comms_hist, target: float):
 def run_setup(name: str, iters: int = 1200, samples: int = 600):
     cfg = PAPER_SETUPS[name]
     prob, g, _, _ = build_problem(cfg, samples_override=samples)
-    res_d = admm.run(prob, admm.dkla_schedule(), iters)
-    res_t = cta.run(prob, g, lr=0.9, num_iters=iters)
-    candidates = {(v, mu): admm.run(prob, CensorSchedule(v, mu), iters)
-                  for v, mu in GRID}
+    base = FitConfig(algorithm="dkla", num_iters=iters)
+    res_d = fit(base, problem=prob)
+    res_t = fit(base.replace(algorithm="cta", cta_lr=0.9), problem=prob)
+    candidates = {
+        (v, mu): fit(base.replace(algorithm="coke", censor_v=v,
+                                  censor_mu=mu), problem=prob)
+        for v, mu in GRID}
 
     final = float(res_d.train_mse[-1])
     first = float(res_d.train_mse[0])

@@ -1,5 +1,6 @@
 """Paper Figs. 1-2: functional consensus + training-MSE convergence of
-CTA / DKLA / COKE on the synthetic and a real-protocol dataset.
+CTA / DKLA / COKE on the synthetic and a real-protocol dataset, driven
+entirely through `repro.api.fit`.
 
 Claims validated:
   * every agent's functional converges to the centralized optimum (Fig 1),
@@ -10,25 +11,23 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import build_problem, test_mse
-from repro.configs.coke_krr import PAPER_SETUPS
-from repro.core import admm, cta, ridge
-from repro.core.censor import CensorSchedule
+from benchmarks.common import build_problem, test_mse, tune_censor
+from repro.api import PAPER_SETUPS, FitConfig, fit, rf_ridge
 
 
 def run_setup(name: str, iters: int = 600, samples: int = 400,
               checkpoints=(50, 100, 200, 400, 600)) -> list[dict]:
     cfg = PAPER_SETUPS[name]
     prob, g, _, (ft, lt) = build_problem(cfg, samples_override=samples)
-    theta_star = ridge.rf_ridge(prob.feats, prob.labels, cfg.lam)
+    theta_star = rf_ridge(prob.feats, prob.labels, cfg.lam)
     mse_star = float(jnp.mean(
         (prob.labels - jnp.einsum("ntd,d->nt", prob.feats, theta_star)) ** 2))
 
-    from benchmarks.common import tune_censor
-    schedule, _ = tune_censor(prob, iters=iters)
-    res_d = admm.run(prob, admm.dkla_schedule(), iters)
-    res_c = admm.run(prob, schedule, iters)
-    res_t = cta.run(prob, g, lr=0.9, num_iters=iters)
+    coke_cfg, _ = tune_censor(prob, iters=iters)
+    base = FitConfig(algorithm="dkla", num_iters=iters)
+    res_d = fit(base, problem=prob)
+    res_c = fit(coke_cfg.replace(num_iters=iters), problem=prob)
+    res_t = fit(base.replace(algorithm="cta", cta_lr=0.9), problem=prob)
 
     rows = []
     for k in checkpoints:
@@ -44,10 +43,9 @@ def run_setup(name: str, iters: int = 600, samples: int = 400,
             "dkla_comms": int(res_d.comms[i]),
             "coke_comms": int(res_c.comms[i]),
             "coke_consensus_gap": float(res_c.consensus_gap[i]),
-            "coke_dist_to_star": float(jnp.max(jnp.linalg.norm(
-                res_c.state.theta - theta_star, axis=-1))),
-            "coke_test_mse": test_mse(res_c.state.theta, ft, lt),
-            "dkla_test_mse": test_mse(res_d.state.theta, ft, lt),
+            "coke_dist_to_star": res_c.distance_to(theta_star),
+            "coke_test_mse": test_mse(res_c.theta, ft, lt),
+            "dkla_test_mse": test_mse(res_d.theta, ft, lt),
         })
     return rows
 

@@ -1,4 +1,5 @@
-"""Theorem 3: generalization vs number of random features.
+"""Theorem 3: generalization vs number of random features, with the COKE
+runs driven through `repro.api.fit`.
 
 Validates the trend the theorem predicts: test risk decreases (then
 saturates near the lambda floor) as L grows past the
@@ -8,13 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import build_problem, test_mse
-from repro.configs.coke_krr import PAPER_SETUPS
-from repro.core import admm, ridge, rff
-from repro.core.censor import CensorSchedule
+from repro.api import PAPER_SETUPS, FitConfig, fit
+from repro.core import rff, ridge
 
 
 def run(dataset: str = "synthetic", Ls=(10, 25, 50, 100, 200),
@@ -24,11 +23,11 @@ def run(dataset: str = "synthetic", Ls=(10, 25, 50, 100, 200),
     for L in Ls:
         cfg = dataclasses.replace(base, num_features=L)
         prob, _, _, (ft, lt) = build_problem(cfg, samples_override=samples)
-        res = admm.run(prob, CensorSchedule(cfg.censor_v, cfg.censor_mu),
-                       iters)
+        res = fit(FitConfig(algorithm="coke", krr=cfg, num_iters=iters),
+                  problem=prob)
         rows.append({"L": L,
                      "train_mse": float(res.train_mse[-1]),
-                     "test_mse": test_mse(res.state.theta, ft, lt)})
+                     "test_mse": test_mse(res.theta, ft, lt)})
     return rows
 
 

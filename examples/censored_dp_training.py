@@ -18,11 +18,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+# the deep-net consensus-DP surface is re-exported by repro.api so this
+# driver shares one import surface with the KRR fit() scripts
+from repro.api import ConsensusConfig, OptConfig, agent_batch, make_train_step
 from repro.configs import get_config
 from repro.data.tokens import TokenStream, TokenStreamConfig
-from repro.distributed.consensus import ConsensusConfig
-from repro.optim.optimizers import OptConfig
-from repro.train.steps import agent_batch, make_train_step
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)

@@ -1,60 +1,49 @@
-"""Quickstart: the paper in ~60 lines.
+"""Quickstart: the paper in ~40 lines, through the unified `repro.api`.
 
 Decentralized kernel ridge regression over 12 agents on a random connected
 graph — DKLA (Alg. 1), COKE (Alg. 2), the CTA diffusion baseline, and the
-centralized closed-form oracle they must all converge to.
+centralized closed-form oracle they must all converge to, all via one
+registry and one `fit()`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+from repro.api import FitConfig, KRRConfig, build_problem, fit, list_solvers
 
-from repro.configs.coke_krr import KRRConfig
-from repro.core import admm, cta, graph, rff, ridge
-from repro.core.censor import CensorSchedule
-from repro.data.synthetic import paper_synthetic
+base = FitConfig(
+    krr=KRRConfig(num_agents=12, samples_per_agent=300, num_features=64,
+                  lam=1e-3, rho=5e-2, seed=0),
+    censor_v=0.1, censor_mu=0.995, num_iters=500)
 
-cfg = KRRConfig(num_agents=12, samples_per_agent=300, num_features=64,
-                lam=1e-3, rho=5e-2, censor_v=0.1, censor_mu=0.995)
+# One problem (local data, graph, common-seed random features), shared by
+# every algorithm in the registry.
+built = build_problem(base)
+print(f"graph: N={built.graph.num_agents} agents, {built.graph.num_edges} "
+      f"edges, connected={built.graph.is_connected()}")
+print(f"registered solvers: {', '.join(list_solvers())}")
 
-# 1. Locally observed data — never exchanged between agents.
-ds = paper_synthetic(num_agents=cfg.num_agents,
-                     samples_per_agent=cfg.samples_per_agent, seed=0)
-g = graph.erdos_renyi(cfg.num_agents, cfg.graph_p, seed=1)
-print(f"graph: N={g.num_agents} agents, {g.num_edges} edges, "
-      f"connected={g.is_connected()}")
+# Centralized oracle (Eq. 26) — what decentralized learning must reach.
+theta_star = fit(base.replace(algorithm="ridge_oracle", num_iters=1),
+                 problem=built.problem).theta[0]
 
-# 2. Common-seed random features: the data-independent parameterization
-#    that makes consensus possible (Section 3.1).
-p = rff.draw_rff(jax.random.PRNGKey(cfg.seed), ds.input_dim,
-                 cfg.num_features, cfg.bandwidth)
-feats = rff.featurize(p, jnp.asarray(ds.x))      # (N, T_i, L)
-labels = jnp.asarray(ds.y)
-
-# 3. Centralized oracle (Eq. 26) — what decentralized learning must reach.
-theta_star = ridge.rf_ridge(feats, labels, cfg.lam)
-prob = admm.make_problem(feats, labels, g, lam=cfg.lam, rho=cfg.rho)
-
-# 4. Run all three algorithms.
-iters = 500
-res_dkla = admm.run(prob, admm.dkla_schedule(), iters)
-res_coke = admm.run(prob, CensorSchedule(cfg.censor_v, cfg.censor_mu),
-                    iters)
-res_cta = cta.run(prob, g, lr=0.9, num_iters=iters)
-
-
-def dist(theta_stack):
-    return float(jnp.max(jnp.linalg.norm(theta_stack - theta_star, -1)))
-
+results = {name: fit(base.replace(algorithm=name), problem=built.problem)
+           for name in ("dkla", "coke", "cta")}
 
 print(f"\n{'':10s}{'train MSE':>12s}{'dist to θ*':>12s}{'# transmissions':>18s}")
-for name, r in [("DKLA", res_dkla), ("COKE", res_coke)]:
-    print(f"{name:10s}{float(r.train_mse[-1]):12.3e}"
-          f"{dist(r.state.theta):12.3e}{int(r.comms[-1]):18d}")
-print(f"{'CTA':10s}{float(res_cta.train_mse[-1]):12.3e}"
-      f"{'—':>12s}{int(res_cta.comms[-1]):18d}")
+for name, r in results.items():
+    print(f"{name.upper():10s}{float(r.train_mse[-1]):12.3e}"
+          f"{r.distance_to(theta_star):12.3e}{int(r.comms[-1]):18d}")
 
-saving = 1 - int(res_coke.comms[-1]) / int(res_dkla.comms[-1])
+saving = 1 - int(results["coke"].comms[-1]) / int(results["dkla"].comms[-1])
 print(f"\nCOKE transmits {saving:.0%} less than DKLA at comparable accuracy "
       f"(paper reports ~45-55% on its datasets; benchmarks/paper_comm_cost.py"
       f"\nreproduces the tuned per-dataset protocol).")
+
+# the same COKE config on the SPMD ring runtime (collective-permute
+# semantics) — one config axis, not a different codebase:
+ring_cfg = base.replace(algorithm="coke", graph="ring", backend="spmd",
+                        primal="gradient", inner_steps=1, inner_lr=0.05,
+                        num_iters=200)
+ring = fit(ring_cfg, problem=build_problem(ring_cfg).problem)
+print(f"\nSPMD ring backend: COKE train MSE "
+      f"{float(ring.train_mse[-1]):.3e} with {int(ring.comms[-1])} "
+      f"transmissions in {len(ring.train_mse)} iters")

@@ -1,0 +1,36 @@
+"""repro.api — the canonical entry point for every algorithm in the repo.
+
+One registry, one `fit()`, pluggable backends:
+
+    from repro.api import FitConfig, fit
+
+    result = fit(FitConfig(algorithm="coke", num_iters=500))
+    print(result.train_mse[-1], result.comms[-1])
+
+Algorithms (see `list_solvers()`): dkla, coke, cta, online_coke,
+ridge_oracle. Backends: "simulator" (in-process reference), "spmd"
+(repro.distributed.consensus ring runtime), "fused" (spmd + Pallas
+`coke_update` kernel). The legacy drivers `core.admm.run` / `core.cta.run`
+remain as deprecation shims.
+
+The training-loop integration (consensus data-parallelism for deep nets)
+is re-exported here too, so downstream scripts need only this surface.
+"""
+from repro.api.config import (BACKENDS, FitConfig,  # noqa: F401
+                              FitResult, SolveContext)
+from repro.api.fit import fit  # noqa: F401
+from repro.api.problems import BuiltProblem, build_problem  # noqa: F401
+from repro.api.registry import (Solver, get_solver,  # noqa: F401
+                                list_solvers, register_solver)
+
+# the algorithm/problem vocabulary examples and benchmarks need, so they
+# can be written against repro.api alone
+from repro.configs.coke_krr import KRRConfig, PAPER_SETUPS  # noqa: F401
+from repro.core.admm import Problem, make_problem  # noqa: F401
+from repro.core.censor import CensorSchedule  # noqa: F401
+from repro.core.ridge import rf_ridge  # noqa: F401
+
+# consensus data-parallel training surface (deep-net workloads)
+from repro.distributed.consensus import ConsensusConfig  # noqa: F401
+from repro.optim.optimizers import OptConfig  # noqa: F401
+from repro.train.steps import agent_batch, make_train_step  # noqa: F401

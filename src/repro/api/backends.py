@@ -1,0 +1,109 @@
+"""Backend routing for `fit()`: the same FitConfig runs on
+
+  simulator — the in-process reference (all agents as a leading batch axis,
+              neighbor exchange = adjacency matmul); driven by the Solver
+              protocol directly from repro.api.fit.
+  spmd      — the repro.distributed.consensus runtime: agent axis sharded
+              over the mesh, neighbor exchange as jnp.roll (lowers to
+              collective-permute), inexact one-step primal update.
+  fused     — spmd with the augmented-gradient + censor-norm computation
+              routed through the Pallas `coke_update` kernel (interpret
+              mode on CPU hosts; the TPU hot path).
+
+The spmd/fused backends require a circulant graph family — the topology the
+ring collectives implement — and are validated against the problem's
+adjacency so a mismatched FitConfig fails loudly instead of silently
+solving a different consensus problem.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import FitConfig, SolveContext
+from repro.api.registry import Solver
+from repro.api.solvers import _stacked_metrics
+from repro.core import losses as losses_mod
+from repro.core.admm import Problem
+from repro.core.graph import circulant
+from repro.distributed import consensus as cns
+from repro.optim.optimizers import OptConfig
+
+
+def _validate_topology(problem: Problem, offsets: tuple[int, ...]) -> None:
+    N = problem.num_agents
+    want = circulant(N, offsets).adjacency
+    have = np.asarray(problem.adjacency)
+    if not np.array_equal(have, want):
+        raise ValueError(
+            "spmd/fused backends implement circulant topologies (ring "
+            f"collectives with offsets {offsets}); the problem's adjacency "
+            "does not match — build it with FitConfig(graph='ring'/"
+            "'circulant') or use backend='simulator'")
+
+
+def _local_grads(problem: Problem, theta: jax.Array) -> jax.Array:
+    N = problem.num_agents
+
+    def g1(theta_i, phi, y):
+        return jax.grad(losses_mod.local_empirical_risk)(
+            theta_i, phi, y, problem.lam / N, problem.loss)
+
+    return jax.vmap(g1)(theta, problem.feats, problem.labels)
+
+
+@partial(jax.jit, static_argnames=("ccfg", "opt_cfg", "num_iters"))
+def _consensus_chunk(problem, params, cstate, oracle, ccfg, opt_cfg,
+                     num_iters):
+    def body(carry, _):
+        params, cstate = carry
+        grads = {"theta": _local_grads(problem, params["theta"])}
+        params, cstate, extra = cns.consensus_update(ccfg, opt_cfg, params,
+                                                     grads, cstate)
+        m = _stacked_metrics(problem, params["theta"], cstate["comms"])
+        m.update(extra)
+        if oracle is not None:
+            m["dist_to_oracle"] = jnp.max(jnp.linalg.norm(
+                params["theta"] - oracle, axis=-1))
+        return (params, cstate), m
+
+    (params, cstate), hist = jax.lax.scan(body, (params, cstate), None,
+                                          length=num_iters)
+    return (params, cstate), hist
+
+
+def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
+                     ctx: SolveContext, oracle: jax.Array | None):
+    """-> (carry0, chunk_fn, theta_fn) for the spmd / fused backends."""
+    strategy = solver.consensus_strategy
+    if strategy is None:
+        raise ValueError(
+            f"solver {solver.name!r} has no distributed strategy; "
+            "use backend='simulator'")
+    offsets = config.graph_offsets
+    _validate_topology(problem, offsets)
+
+    v, mu = config.resolved_censor
+    k = len(offsets)
+    ccfg = cns.ConsensusConfig(
+        strategy=strategy, rho=problem.rho, censor_v=v, censor_mu=mu,
+        offsets=offsets,
+        # per-neighbor Metropolis weight on a 2k-regular circulant
+        mix_weight=k / (2.0 * k + 1.0),
+        use_fused_kernel=config.backend == "fused")
+    lr = ctx.cta_lr if strategy == "cta" else ctx.inner_lr
+    opt_cfg = OptConfig(kind="sgd", lr=lr)
+
+    N, _, D = problem.feats.shape
+    params = {"theta": jnp.zeros((N, D), problem.feats.dtype)}
+    cstate = cns.init_consensus_state(ccfg, opt_cfg, params)
+
+    def chunk_fn(carry, n):
+        params, cstate = carry
+        return _consensus_chunk(problem, params, cstate, oracle,
+                                ccfg=ccfg, opt_cfg=opt_cfg, num_iters=n)
+
+    return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]

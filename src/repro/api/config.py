@@ -1,0 +1,144 @@
+"""`FitConfig` / `FitResult` — the unified run description and run record.
+
+`FitConfig` composes the paper-level problem spec (`KRRConfig`), the censor
+schedule, the graph family, the algorithm name (a registry key) and the
+backend choice into one frozen object; `fit(config)` is the only driver.
+
+The censor thresholds (v, mu) are deliberately *traced* through the compiled
+fit loop (see `SolveContext.censor`): a sweep over schedules reuses one
+compiled scan instead of retracing per float pair, which the legacy
+`core.admm.run(static schedule)` entry point could not do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.coke_krr import KRRConfig
+
+BACKENDS = ("simulator", "spmd", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Everything `fit()` needs to run one algorithm on one problem."""
+
+    algorithm: str = "coke"          # registry key: see repro.api.list_solvers()
+    krr: KRRConfig = KRRConfig()     # dataset / RF / lam / rho / graph_p spec
+    backend: str = "simulator"       # simulator | spmd | fused
+
+    # censor schedule h(k) = v mu^k; None = inherit from krr
+    censor_v: float | None = None
+    censor_mu: float | None = None
+
+    num_iters: int | None = None     # None = krr.num_iters
+
+    # primal update: "auto" = closed-form Cholesky for the quadratic loss,
+    # "gradient" = force the inexact GD inner solver (what the SPMD runtime
+    # executes; use it for cross-backend parity)
+    primal: str = "auto"
+    inner_steps: int = 50            # gradient primal: GD steps per iteration
+    inner_lr: float = 0.1            # gradient primal / SPMD optimizer lr
+
+    cta_lr: float = 0.9              # CTA diffusion stepsize
+    online_lr: float = 0.3           # streaming COKE stepsize
+    online_batch: int = 16           # streaming COKE minibatch per round
+
+    # graph family ("erdos_renyi" uses krr.graph_p; spmd/fused backends
+    # require the circulant family — it is what lowers to collective-permute)
+    graph: str = "erdos_renyi"       # erdos_renyi | ring | circulant | full
+    graph_offsets: tuple[int, ...] = (1,)
+
+    # fit-loop plumbing
+    chunk_size: int | None = None    # scan chunk between host callbacks
+    record_oracle_distance: bool = False
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; choose from {BACKENDS}")
+        if self.chunk_size is not None and self.chunk_size < 1:
+            raise ValueError(
+                f"chunk_size must be >= 1 or None, got {self.chunk_size}")
+
+    # ---- resolved knobs --------------------------------------------------
+    @property
+    def resolved_censor(self) -> tuple[float, float]:
+        v = self.krr.censor_v if self.censor_v is None else self.censor_v
+        mu = self.krr.censor_mu if self.censor_mu is None else self.censor_mu
+        return float(v), float(mu)
+
+    @property
+    def resolved_iters(self) -> int:
+        return self.krr.num_iters if self.num_iters is None else self.num_iters
+
+    def replace(self, **kw) -> "FitConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("censor",),
+         meta_fields=("primal", "inner_steps", "inner_lr", "cta_lr",
+                      "online_lr", "online_batch"))
+@dataclasses.dataclass(frozen=True)
+class SolveContext:
+    """The solver-facing slice of a FitConfig, shaped for jit: the censor
+    thresholds are array *data* (traced — sweeps share one compilation);
+    everything else is static metadata."""
+
+    censor: jax.Array                # (2,) float32: [v, mu]
+    primal: str = "auto"
+    inner_steps: int = 50
+    inner_lr: float = 0.1
+    cta_lr: float = 0.9
+    online_lr: float = 0.3
+    online_batch: int = 16
+
+    @classmethod
+    def from_config(cls, config: FitConfig) -> "SolveContext":
+        v, mu = config.resolved_censor
+        return cls(censor=jnp.asarray([v, mu], jnp.float32),
+                   primal=config.primal,
+                   inner_steps=config.inner_steps,
+                   inner_lr=config.inner_lr,
+                   cta_lr=config.cta_lr,
+                   online_lr=config.online_lr,
+                   online_batch=config.online_batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    """What `fit()` returns for every algorithm and backend: the final
+    solver state plus per-iteration metric trajectories."""
+
+    config: FitConfig
+    state: Any
+    history: dict[str, jax.Array]    # each (num_iters,)
+    theta: jax.Array                 # (N, D) final per-agent parameters
+
+    # ---- trajectory accessors (the paper's evaluation quantities) --------
+    @property
+    def train_mse(self) -> jax.Array:
+        return self.history["train_mse"]
+
+    @property
+    def comms(self) -> jax.Array:
+        return self.history["comms"]
+
+    @property
+    def consensus_gap(self) -> jax.Array:
+        return self.history["consensus_gap"]
+
+    def distance_to(self, theta_star: jax.Array) -> float:
+        """max_i ||theta_i - theta*|| of the final iterate (Thm 1/2 metric)."""
+        return float(jnp.max(jnp.linalg.norm(self.theta - theta_star,
+                                             axis=-1)))
+
+    def summary(self) -> dict[str, float]:
+        out = {k: float(v[-1]) for k, v in self.history.items()}
+        out["num_iters"] = int(self.history["train_mse"].shape[0])
+        return out

@@ -1,0 +1,116 @@
+"""`fit(config) -> FitResult` — the one driver for every algorithm/backend.
+
+The driver owns the `lax.scan` iteration loop, the per-iteration metric
+recording (train MSE, cumulative transmissions, consensus gap, optional
+distance-to-oracle), and optional chunked host callbacks for streaming
+progress. Algorithm math lives in the registered solvers; distributed
+execution lives in repro.api.backends.
+
+Compilation contract: the censor thresholds (v, mu) enter the compiled loop
+as traced array data, so a sweep over censor schedules — the paper's tuning
+protocol — reuses ONE compiled fit loop per (problem shape, algorithm,
+num_iters) instead of retracing per float pair as the legacy
+`core.admm.run(schedule-as-static)` entry point did.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.backends import consensus_runner
+from repro.api.config import FitConfig, FitResult, SolveContext
+from repro.api.problems import build_problem
+from repro.api.registry import Solver, get_solver
+from repro.core import ridge
+from repro.core.admm import Problem
+
+ProgressCb = Callable[[int, dict], None]
+
+
+@partial(jax.jit, static_argnames=("solver", "num_iters"))
+def _simulator_chunk(solver: Solver, problem: Problem, ctx: SolveContext,
+                     host_aux, state, oracle, num_iters: int):
+    aux = solver.prepare_traced(problem, ctx, host_aux)
+
+    def body(state, _):
+        state = solver.step(problem, ctx, aux, state)
+        m = solver.metrics(problem, ctx, aux, state)
+        if oracle is not None:
+            m["dist_to_oracle"] = jnp.max(jnp.linalg.norm(
+                solver.theta_of(state) - oracle, axis=-1))
+        return state, m
+
+    return jax.lax.scan(body, state, None, length=num_iters)
+
+
+def _simulator_runner(config: FitConfig, solver: Solver, problem: Problem,
+                      ctx: SolveContext, oracle):
+    host_aux = solver.prepare_host(problem, ctx)
+    state0 = solver.init_state(problem, ctx)
+
+    def chunk_fn(state, n):
+        return _simulator_chunk(solver, problem, ctx, host_aux, state,
+                                oracle, num_iters=n)
+
+    return state0, chunk_fn, solver.theta_of
+
+
+def _chunked_scan(chunk_fn, carry, num_iters: int, chunk_size: int | None,
+                  progress_cb: ProgressCb | None):
+    """Run the scan in host-visible chunks; with chunk_size=None this is a
+    single scan, trajectory-identical to the legacy monolithic drivers."""
+    hists, done = [], 0
+    while True:
+        n = num_iters - done if chunk_size is None else min(
+            chunk_size, num_iters - done)
+        carry, h = chunk_fn(carry, n)  # n == 0 still yields (0,)-histories
+        done += n
+        hists.append(h)
+        if progress_cb is not None and n > 0:
+            progress_cb(done, jax.tree.map(lambda a: a[-1], h))
+        if done >= num_iters:
+            break
+    if len(hists) == 1:
+        return carry, hists[0]
+    return carry, jax.tree.map(lambda *xs: jnp.concatenate(xs), *hists)
+
+
+def fit(config: FitConfig, problem: Problem | None = None, *,
+        progress_cb: ProgressCb | None = None,
+        oracle: jax.Array | None = None) -> FitResult:
+    """Run `config.algorithm` on `config.backend` and record the paper's
+    evaluation trajectories.
+
+    problem     — an existing `admm.Problem`; None builds one from
+                  config.krr / config.graph (see repro.api.build_problem).
+    progress_cb — called as progress_cb(iters_done, last_metrics) after
+                  every `config.chunk_size` iterations.
+    oracle      — theta* (D,) for per-iteration distance-to-oracle; computed
+                  via the closed form when `config.record_oracle_distance`
+                  is set and no oracle is passed.
+    """
+    solver = get_solver(config.algorithm)
+    if config.backend not in solver.backends:
+        raise ValueError(
+            f"solver {config.algorithm!r} supports backends "
+            f"{solver.backends}, not {config.backend!r}")
+    if problem is None:
+        problem = build_problem(config).problem
+    if oracle is None and config.record_oracle_distance:
+        oracle = ridge.rf_ridge(problem.feats, problem.labels, problem.lam)
+
+    ctx = SolveContext.from_config(config)
+    if config.backend == "simulator":
+        carry0, chunk_fn, theta_fn = _simulator_runner(
+            config, solver, problem, ctx, oracle)
+    else:
+        carry0, chunk_fn, theta_fn = consensus_runner(
+            config, solver, problem, ctx, oracle)
+
+    carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
+                                   config.chunk_size, progress_cb)
+    return FitResult(config=config, state=carry, history=history,
+                     theta=theta_fn(carry))

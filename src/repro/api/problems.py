@@ -1,0 +1,74 @@
+"""Problem construction: FitConfig/KRRConfig -> the RF-space Problem.
+
+This is the single data path behind `fit(config)` (and, via delegation,
+`benchmarks.common.build_problem`): draw the dataset shards, the consensus
+graph, the common-seed random features, and assemble the `admm.Problem`
+pytree plus the held-out test split.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import FitConfig
+from repro.configs.coke_krr import KRRConfig
+from repro.core import graph as graph_mod
+from repro.core import rff
+from repro.core.admm import Problem, make_problem
+from repro.data.synthetic import paper_synthetic, uci_standin
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltProblem:
+    problem: Problem
+    graph: graph_mod.Graph
+    rff_params: rff.RFFParams
+    feats_test: jax.Array
+    labels_test: jax.Array
+
+
+def build_graph(config: FitConfig, num_agents: int,
+                seed: int) -> graph_mod.Graph:
+    if config.graph == "erdos_renyi":
+        return graph_mod.erdos_renyi(num_agents, config.krr.graph_p,
+                                     seed=seed)
+    if config.graph == "ring":
+        return graph_mod.ring(num_agents)
+    if config.graph == "circulant":
+        return graph_mod.circulant(num_agents, config.graph_offsets)
+    if config.graph == "full":
+        return graph_mod.fully_connected(num_agents)
+    raise ValueError(f"unknown graph family {config.graph!r}")
+
+
+def build_problem(config: FitConfig | KRRConfig,
+                  samples_override: int | None = None) -> BuiltProblem:
+    """Construct the decentralized learning problem a config describes.
+
+    Accepts a bare KRRConfig for the legacy ER-graph protocol, or a full
+    FitConfig (whose graph family may be ring/circulant for the SPMD
+    backends).
+    """
+    if isinstance(config, KRRConfig):
+        config = FitConfig(krr=config)
+    cfg = config.krr
+    n = samples_override or cfg.samples_per_agent
+    if cfg.dataset == "synthetic":
+        ds = paper_synthetic(num_agents=cfg.num_agents, samples_per_agent=n,
+                             seed=cfg.seed)
+        g = build_graph(config, cfg.num_agents, seed=cfg.seed)
+    else:
+        ds = uci_standin(cfg.dataset, num_agents=cfg.num_agents,
+                         subsample=n * cfg.num_agents)
+        g = build_graph(config, cfg.num_agents, seed=cfg.seed + 1)
+    p = rff.draw_rff(jax.random.PRNGKey(cfg.seed), ds.input_dim,
+                     cfg.num_features, cfg.bandwidth, mapping=cfg.mapping)
+    feats = rff.featurize(p, jnp.asarray(ds.x))
+    labels = jnp.asarray(ds.y)
+    prob = make_problem(feats, labels, g, lam=cfg.lam, rho=cfg.rho)
+    return BuiltProblem(
+        problem=prob, graph=g, rff_params=p,
+        feats_test=rff.featurize(p, jnp.asarray(ds.x_test)),
+        labels_test=jnp.asarray(ds.y_test))

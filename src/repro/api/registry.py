@@ -1,0 +1,82 @@
+"""Solver registry — the single place an algorithm plugs into `repro.api`.
+
+A *solver* adapts one of the repo's algorithm implementations (DKLA Alg. 1,
+COKE Alg. 2, the CTA diffusion baseline, streaming COKE, the centralized
+ridge oracle) to a shared `init_state / step / metrics` contract so the one
+`fit()` driver can run any of them. New algorithms register themselves with
+`@register_solver("name")` and immediately gain every backend, the metric
+recorder, and the sweep-friendly compiled fit loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """The contract every registered algorithm implements.
+
+    `prepare_host` runs once, eagerly, on the concrete problem (numpy-level
+    precomputation such as Metropolis mixing weights); `prepare_traced` runs
+    inside the jitted fit loop (e.g. the per-agent Cholesky factors) so its
+    output lives in the compiled graph exactly as the legacy entry points
+    built it. `step` and `metrics` are traced under `lax.scan`.
+    """
+
+    #: registry key, filled in by @register_solver
+    name: str
+    #: subset of {"simulator", "spmd", "fused"} this solver can run on
+    backends: tuple[str, ...]
+    #: repro.distributed.consensus strategy string for the SPMD/fused
+    #: backends, or None when only the simulator applies
+    consensus_strategy: str | None
+
+    def prepare_host(self, problem: Any, ctx: Any) -> Any: ...
+
+    def prepare_traced(self, problem: Any, ctx: Any, host_aux: Any) -> Any: ...
+
+    def init_state(self, problem: Any, ctx: Any) -> Any: ...
+
+    def step(self, problem: Any, ctx: Any, aux: Any, state: Any) -> Any: ...
+
+    def metrics(self, problem: Any, ctx: Any, aux: Any,
+                state: Any) -> dict[str, jax.Array]: ...
+
+    def theta_of(self, state: Any) -> jax.Array: ...
+
+
+_REGISTRY: dict[str, Solver] = {}
+
+
+def register_solver(name: str):
+    """Class decorator: instantiate the class and file it under `name`."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def _ensure_builtin_solvers() -> None:
+    # Importing the module runs its @register_solver decorators. Lazy so
+    # `repro.api.registry` has no import cycle with `repro.api.solvers`.
+    from repro.api import solvers  # noqa: F401
+
+
+def get_solver(name: str) -> Solver:
+    _ensure_builtin_solvers()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver {name!r}; registered solvers: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def list_solvers() -> list[str]:
+    _ensure_builtin_solvers()
+    return sorted(_REGISTRY)

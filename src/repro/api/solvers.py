@@ -1,0 +1,216 @@
+"""Built-in solver adapters: the repo's five algorithm implementations
+behind the one `Solver` contract.
+
+Each adapter delegates to the existing math (`core.admm.coke_step`,
+`core.cta.cta_step`, `core.online.online_coke_step`, `core.ridge.rf_ridge`)
+without changing it — `fit()` reproduces the legacy drivers' trajectories
+bit-for-bit (see tests/test_api.py) while giving every algorithm the same
+state/metric/backend conventions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import SolveContext
+from repro.api.registry import register_solver
+from repro.core import admm, cta, online, ridge
+from repro.core.admm import Problem
+from repro.core.censor import CensorSchedule
+from repro.core.graph import Graph, metropolis_weights
+
+
+def _stacked_metrics(problem: Problem, theta: jax.Array,
+                     comms: jax.Array) -> dict[str, jax.Array]:
+    """The paper's per-iteration evaluation triple, computed exactly as the
+    legacy `admm.run` recorder did (bit-parity contract)."""
+    preds = jnp.einsum("ntd,nd->nt", problem.feats, theta)
+    mse = jnp.mean((problem.labels - preds) ** 2)
+    mean_theta = jnp.mean(theta, axis=0, keepdims=True)
+    gap = jnp.max(jnp.sqrt(jnp.sum((theta - mean_theta) ** 2, axis=-1)))
+    return {"train_mse": mse, "comms": comms, "consensus_gap": gap}
+
+
+# ---------------------------------------------------------------------------
+# DKLA (Alg. 1) and COKE (Alg. 2): the ADMM family
+# ---------------------------------------------------------------------------
+
+class _ADMMSolver:
+    backends = ("simulator", "spmd", "fused")
+
+    def _schedule(self, ctx: SolveContext) -> CensorSchedule:
+        raise NotImplementedError
+
+    def prepare_host(self, problem: Problem, ctx: SolveContext):
+        return None
+
+    def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
+        # Cholesky factors inside the compiled loop, exactly where the
+        # legacy jitted `admm.run` built them.
+        use_chol = problem.loss == "quadratic" and ctx.primal != "gradient"
+        return admm._ridge_factors(problem) if use_chol else None
+
+    def init_state(self, problem: Problem, ctx: SolveContext):
+        return admm.init_state(problem)
+
+    def step(self, problem: Problem, ctx: SolveContext, aux, state):
+        return admm.coke_step(problem, self._schedule(ctx), state, aux,
+                              ctx.inner_steps, ctx.inner_lr)
+
+    def metrics(self, problem: Problem, ctx: SolveContext, aux, state):
+        return _stacked_metrics(problem, state.theta, state.comms)
+
+    def theta_of(self, state) -> jax.Array:
+        return state.theta
+
+
+@register_solver("dkla")
+class DKLASolver(_ADMMSolver):
+    """Algorithm 1: COKE's update with the always-transmit h == 0 schedule."""
+
+    consensus_strategy = "dkla"
+
+    def _schedule(self, ctx: SolveContext) -> CensorSchedule:
+        return admm.dkla_schedule()
+
+
+@register_solver("coke")
+class COKESolver(_ADMMSolver):
+    """Algorithm 2: censored transmissions, h(k) = v mu^k with traced v, mu."""
+
+    consensus_strategy = "coke"
+
+    def _schedule(self, ctx: SolveContext) -> CensorSchedule:
+        return CensorSchedule(v=ctx.censor[0], mu=ctx.censor[1])
+
+
+# ---------------------------------------------------------------------------
+# CTA diffusion baseline
+# ---------------------------------------------------------------------------
+
+@register_solver("cta")
+class CTASolver:
+    """Combine-then-adapt diffusion (Section 5 baseline): Metropolis mixing
+    then a local gradient step; transmits every iteration."""
+
+    backends = ("simulator", "spmd")
+    consensus_strategy = "cta"
+
+    def prepare_host(self, problem: Problem, ctx: SolveContext):
+        g = Graph(adjacency=np.asarray(problem.adjacency, np.float64))
+        return jnp.asarray(metropolis_weights(g), problem.feats.dtype)
+
+    def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
+        return host_aux  # the mixing matrix
+
+    def init_state(self, problem: Problem, ctx: SolveContext):
+        return cta.init_state(problem)
+
+    def step(self, problem: Problem, ctx: SolveContext, aux, state):
+        return cta.cta_step(problem, aux, ctx.cta_lr, state)
+
+    def metrics(self, problem: Problem, ctx: SolveContext, aux, state):
+        return _stacked_metrics(problem, state.theta, state.comms)
+
+    def theta_of(self, state) -> jax.Array:
+        return state.theta
+
+
+# ---------------------------------------------------------------------------
+# Streaming (online) COKE
+# ---------------------------------------------------------------------------
+
+class OnlineFitState(NamedTuple):
+    inner: online.OnlineState
+    inst_mse: jax.Array   # pre-update MSE on the round's incoming minibatch
+
+
+@register_solver("online_coke")
+class OnlineCOKESolver:
+    """Streaming COKE over the problem's local shards: round k feeds each
+    agent a rotating `online_batch`-sized window of its own data as the
+    fresh minibatch, takes one censored streaming-ADMM step, and records
+    the online-protocol regret metric (pre-update instantaneous MSE)."""
+
+    backends = ("simulator",)
+    consensus_strategy = None
+
+    def prepare_host(self, problem: Problem, ctx: SolveContext):
+        return None
+
+    def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
+        return None
+
+    def init_state(self, problem: Problem, ctx: SolveContext):
+        N, D = problem.num_agents, problem.feature_dim
+        inner = online.init_state(N, D, problem.feats.dtype)
+        return OnlineFitState(inner, jnp.zeros((), problem.feats.dtype))
+
+    def step(self, problem: Problem, ctx: SolveContext, aux,
+             state: OnlineFitState):
+        b, Ti = ctx.online_batch, problem.feats.shape[1]
+        idx = (state.inner.step * b + jnp.arange(b)) % Ti
+        feats = jnp.take(problem.feats, idx, axis=1)
+        labels = jnp.take(problem.labels, idx, axis=1)
+        schedule = CensorSchedule(v=ctx.censor[0], mu=ctx.censor[1])
+        inner, inst = online.online_coke_step(
+            state.inner, feats, labels, problem.adjacency, schedule,
+            lam=problem.lam, rho=problem.rho, lr=ctx.online_lr)
+        return OnlineFitState(inner, inst)
+
+    def metrics(self, problem: Problem, ctx: SolveContext, aux,
+                state: OnlineFitState):
+        m = _stacked_metrics(problem, state.inner.theta, state.inner.comms)
+        m["instant_mse"] = state.inst_mse
+        return m
+
+    def theta_of(self, state: OnlineFitState) -> jax.Array:
+        return state.inner.theta
+
+
+# ---------------------------------------------------------------------------
+# Centralized closed-form oracle (Eq. 26)
+# ---------------------------------------------------------------------------
+
+class OracleState(NamedTuple):
+    theta: jax.Array   # (N, D) — theta* broadcast to every agent
+    step: jax.Array
+    comms: jax.Array
+
+
+@register_solver("ridge_oracle")
+class RidgeOracleSolver:
+    """The centralized RF-ridge optimum the decentralized algorithms must
+    converge to, exposed through the same fit surface (run num_iters=1).
+    Its `comms` metric is 0: the oracle sees all data, exchanges nothing."""
+
+    backends = ("simulator",)
+    consensus_strategy = None
+
+    def prepare_host(self, problem: Problem, ctx: SolveContext):
+        return None
+
+    def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
+        return ridge.rf_ridge(problem.feats, problem.labels, problem.lam)
+
+    def init_state(self, problem: Problem, ctx: SolveContext):
+        N, D = problem.num_agents, problem.feature_dim
+        return OracleState(jnp.zeros((N, D), problem.feats.dtype),
+                           jnp.zeros((), jnp.int32),
+                           jnp.zeros((), jnp.int32))
+
+    def step(self, problem: Problem, ctx: SolveContext, aux,
+             state: OracleState):
+        theta = jnp.broadcast_to(aux[None], state.theta.shape)
+        return OracleState(theta.astype(state.theta.dtype),
+                           state.step + 1, state.comms)
+
+    def metrics(self, problem: Problem, ctx: SolveContext, aux,
+                state: OracleState):
+        return _stacked_metrics(problem, state.theta, state.comms)
+
+    def theta_of(self, state: OracleState) -> jax.Array:
+        return state.theta

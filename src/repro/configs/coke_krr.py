@@ -1,5 +1,10 @@
 """The paper's own workload as a first-class config: decentralized kernel
-ridge regression (COKE / DKLA / CTA) — Section 5 setups."""
+ridge regression (COKE / DKLA / CTA) — Section 5 setups.
+
+`KRRConfig` is the problem half of the unified run description: compose it
+into a `repro.api.FitConfig` (which adds algorithm, backend, graph family
+and censor overrides) and run it with `repro.api.fit`.
+"""
 from __future__ import annotations
 
 import dataclasses

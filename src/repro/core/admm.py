@@ -21,6 +21,7 @@ argmin (inexact ADMM) — `inner_steps` controls this.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -211,7 +212,7 @@ class RunResult(NamedTuple):
 
 
 @partial(jax.jit, static_argnames=("num_iters", "schedule", "inner_steps"))
-def run(
+def _run(
     problem: Problem,
     schedule: CensorSchedule,
     num_iters: int,
@@ -240,6 +241,26 @@ def run(
     state, (mse, comms, gap) = jax.lax.scan(body, state0, None,
                                             length=num_iters)
     return RunResult(state, mse, comms, gap)
+
+
+def run(
+    problem: Problem,
+    schedule: CensorSchedule,
+    num_iters: int,
+    inner_steps: int = 50,
+    inner_lr: float = 0.1,
+) -> RunResult:
+    """Deprecated entry point — use `repro.api.fit(FitConfig(...))`.
+
+    Note this shim retraces per distinct `schedule` (it is a static jit
+    argument); `repro.api.fit` traces the thresholds so censor sweeps share
+    one compiled loop.
+    """
+    warnings.warn(
+        "repro.core.admm.run is deprecated; use repro.api.fit("
+        "FitConfig(algorithm='coke'|'dkla', ...))",
+        DeprecationWarning, stacklevel=2)
+    return _run(problem, schedule, num_iters, inner_steps, inner_lr)
 
 
 def dkla_schedule() -> CensorSchedule:

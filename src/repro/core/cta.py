@@ -7,6 +7,7 @@ every iteration (no censoring), so its communication cost is N per step.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -69,5 +70,11 @@ def _run(problem: Problem, mixing: jax.Array, lr: float,
 
 def run(problem: Problem, graph: Graph, lr: float,
         num_iters: int) -> CTAResult:
+    """Deprecated entry point — use
+    `repro.api.fit(FitConfig(algorithm='cta', ...))`."""
+    warnings.warn(
+        "repro.core.cta.run is deprecated; use repro.api.fit("
+        "FitConfig(algorithm='cta', ...))",
+        DeprecationWarning, stacklevel=2)
     mixing = jnp.asarray(metropolis_weights(graph), problem.feats.dtype)
     return _run(problem, mixing, lr, num_iters)

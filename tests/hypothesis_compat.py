@@ -1,0 +1,50 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+The tier-1 environment does not guarantee `hypothesis` is installed
+(`pip install -r requirements-dev.txt` provides it). Test modules import
+`given / settings / st / hnp` from here: with hypothesis present these are
+the real objects; without it, `@given(...)` replaces the property test with
+a skipped placeholder so the rest of the module's tests still collect and
+run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            # zero-arg placeholder: the original property test's parameters
+            # must not be mistaken for pytest fixtures
+            @pytest.mark.skip(reason="hypothesis not installed "
+                              "(pip install -r requirements-dev.txt)")
+            def skipped():  # pragma: no cover - never executed
+                pass
+
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+
+        return deco
+
+    class _StrategyStub:
+        """Answers any strategy-building call with an inert placeholder, so
+        module-level `st.floats(...)` / `hnp.arrays(...)` expressions in
+        skipped tests still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+    hnp = _StrategyStub()

@@ -1,9 +1,7 @@
 """Censoring primitives (Eqs. 19-20) — property-based."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra import numpy as hnp
+from hypothesis_compat import given, hnp, settings, st
 
 from repro.core.censor import (CensorSchedule, censor_decision,
                                masked_broadcast)

@@ -2,8 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.data.synthetic import UCI_SPECS, paper_synthetic, uci_standin
 from repro.data.tokens import TokenStream, TokenStreamConfig

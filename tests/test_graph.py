@@ -1,8 +1,7 @@
 """Topology substrate: connectivity, incidence spectra, Thm-2 rho bound."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import graph as G
 
