@@ -24,6 +24,9 @@ def build_problem(cfg: KRRConfig, samples_override: int | None = None):
 
 
 def test_mse(theta_stack, feats_test, labels_test) -> float:
+    """Per-agent test MSE from precomputed features. New code should prefer
+    `FitResult.to_model().evaluate(x_test, y_test)` — same numbers from raw
+    inputs (parity pinned in tests/test_model.py)."""
     preds = jnp.einsum("ntd,nd->nt", feats_test, theta_stack)
     return float(jnp.mean((labels_test - preds) ** 2))
 

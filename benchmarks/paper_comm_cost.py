@@ -1,6 +1,7 @@
 """Paper Fig. 3 + Tables 3/6: communication cost to reach a target MSE,
-driven entirely through `repro.api.fit` (the censor grid sweeps share one
-compiled fit loop — thresholds are traced, not static).
+driven entirely through `repro.api` — the whole censor grid runs as ONE
+vmapped fit via `sweep()` (thresholds are traced array data), and the
+no-loss operating point is picked from the per-cell trajectories.
 
 Protocol (faithful to the paper's): censor thresholds are tuned per dataset
 and per accuracy requirement — "the parameters of the censoring function are
@@ -17,8 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import build_problem
-from repro.api import PAPER_SETUPS, FitConfig, fit
+from repro.api import PAPER_SETUPS, FitConfig, build_problem, fit, sweep
 
 GRID = ((0.5, 0.98), (0.5, 0.99), (0.1, 0.995), (0.05, 0.997),
         (0.02, 0.998), (0.01, 0.999), (0.05, 0.999))
@@ -31,14 +31,15 @@ def comms_to_reach(mse_hist, comms_hist, target: float):
 
 def run_setup(name: str, iters: int = 1200, samples: int = 600):
     cfg = PAPER_SETUPS[name]
-    prob, g, _, _ = build_problem(cfg, samples_override=samples)
-    base = FitConfig(algorithm="dkla", num_iters=iters)
+    base = FitConfig(algorithm="dkla", krr=cfg, num_iters=iters)
+    built = build_problem(base, samples_override=samples)
+    prob = built.problem
     res_d = fit(base, problem=prob)
     res_t = fit(base.replace(algorithm="cta", cta_lr=0.9), problem=prob)
-    candidates = {
-        (v, mu): fit(base.replace(algorithm="coke", censor_v=v,
-                                  censor_mu=mu), problem=prob)
-        for v, mu in GRID}
+    # the censor grid: one vmapped scan over traced (v, mu) thresholds
+    sw = sweep(base.replace(algorithm="coke"), GRID, problem=prob)
+    coke_mse = np.asarray(sw.history["train_mse"])   # (G, iters)
+    coke_comms = np.asarray(sw.history["comms"])     # (G, iters)
 
     final = float(res_d.train_mse[-1])
     first = float(res_d.train_mse[0])
@@ -47,8 +48,8 @@ def run_setup(name: str, iters: int = 1200, samples: int = 600):
         tgt = final + (first - final) * frac
         cd = comms_to_reach(res_d.train_mse, res_d.comms, tgt)
         best = None
-        for (v, mu), r in candidates.items():
-            cc = comms_to_reach(r.train_mse, r.comms, tgt)
+        for gi, (v, mu) in enumerate(GRID):
+            cc = comms_to_reach(coke_mse[gi], coke_comms[gi], tgt)
             if cc is not None and (best is None or cc < best[0]):
                 best = (cc, v, mu)
         rows.append({
@@ -60,10 +61,10 @@ def run_setup(name: str, iters: int = 1200, samples: int = 600):
             "saving": (1 - best[0] / cd) if (best and cd) else None,
         })
 
-    # no-loss summary: best total saving among candidates with <=1% gap
-    no_loss = [(1 - int(r.comms[-1]) / int(res_d.comms[-1]), v, mu)
-               for (v, mu), r in candidates.items()
-               if (float(r.train_mse[-1]) - final) / max(final, 1e-12)
+    # no-loss summary: best total saving among cells with <=1% final-MSE gap
+    no_loss = [(1 - int(coke_comms[gi, -1]) / int(res_d.comms[-1]), v, mu)
+               for gi, (v, mu) in enumerate(GRID)
+               if (float(coke_mse[gi, -1]) - final) / max(final, 1e-12)
                <= 0.01]
     no_loss.sort(reverse=True)
     summary = {"no_loss_saving": no_loss[0][0] if no_loss else 0.0,

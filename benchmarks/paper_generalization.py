@@ -1,5 +1,6 @@
 """Theorem 3: generalization vs number of random features, with the COKE
-runs driven through `repro.api.fit`.
+runs driven through `repro.api.fit` and scored through the deployable
+`KernelModel` surface (`FitResult.to_model()` → `evaluate`).
 
 Validates the trend the theorem predicts: test risk decreases (then
 saturates near the lambda floor) as L grows past the
@@ -11,8 +12,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from benchmarks.common import build_problem, test_mse
-from repro.api import PAPER_SETUPS, FitConfig, fit
+from repro.api import PAPER_SETUPS, FitConfig, build_problem, fit
 from repro.core import rff, ridge
 
 
@@ -21,13 +21,16 @@ def run(dataset: str = "synthetic", Ls=(10, 25, 50, 100, 200),
     base = PAPER_SETUPS[dataset]
     rows = []
     for L in Ls:
-        cfg = dataclasses.replace(base, num_features=L)
-        prob, _, _, (ft, lt) = build_problem(cfg, samples_override=samples)
-        res = fit(FitConfig(algorithm="coke", krr=cfg, num_iters=iters),
-                  problem=prob)
+        cfg = FitConfig(algorithm="coke",
+                        krr=dataclasses.replace(base, num_features=L),
+                        num_iters=iters)
+        built = build_problem(cfg, samples_override=samples)
+        res = fit(cfg, problem=built.problem)
+        model = res.to_model(built.rff_params)
+        metrics = model.evaluate(built.x_test, built.y_test)
         rows.append({"L": L,
                      "train_mse": float(res.train_mse[-1]),
-                     "test_mse": test_mse(res.theta, ft, lt)})
+                     "test_mse": metrics["test_mse"]})
     return rows
 
 

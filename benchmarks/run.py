@@ -14,13 +14,14 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (kernel_bench, paper_comm_cost,
                             paper_convergence, paper_generalization,
-                            roofline)
+                            roofline, serve_kernel_bench)
 
     suites = [
         ("paper_convergence", paper_convergence.main),   # Figs 1-2, Tab 1/2/4/5
         ("paper_comm_cost", paper_comm_cost.main),       # Fig 3, Tab 3/6
         ("paper_generalization", paper_generalization.main),  # Thm 3
         ("kernels", kernel_bench.main),
+        ("serve_kernel", serve_kernel_bench.main),       # deployment surface
         ("roofline", roofline.main),                     # from dry-run cache
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -1,0 +1,85 @@
+"""KernelServer latency/throughput smoke benchmark.
+
+Measures the deployment surface end-to-end: per-request latency percentiles
+and aggregate rows/s through the microbatching server, for the ref and
+fused (Pallas rff) scoring backends, plus the raw jitted scorer's
+single-call throughput as the no-batching ceiling.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.api import FitConfig, KRRConfig, fit
+from repro.serve import KernelServeConfig, KernelServer
+
+
+def _fit_model(L: int = 128):
+    cfg = FitConfig(
+        krr=KRRConfig(num_agents=8, samples_per_agent=200, num_features=L,
+                      lam=1e-3, rho=5e-2, seed=0),
+        algorithm="coke", censor_v=0.1, censor_mu=0.995, num_iters=200)
+    return fit(cfg).to_model()
+
+
+def _drive(server: KernelServer, queries) -> dict:
+    latencies = []
+
+    def client(x):
+        t0 = time.perf_counter()
+        server.submit(x).result()
+        latencies.append((time.perf_counter() - t0) * 1e3)
+
+    threads = [threading.Thread(target=client, args=(q,)) for q in queries]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat = sorted(latencies)
+    rows = sum(q.shape[0] for q in queries)
+    return {"rows_per_s": rows / wall,
+            "p50_ms": lat[len(lat) // 2],
+            "p95_ms": lat[int(len(lat) * 0.95)],
+            "batches": server.stats()["batches"],
+            "requests": len(queries)}
+
+
+def run(num_requests: int = 64, backends=("ref", "fused")):
+    model = _fit_model()
+    rng = np.random.default_rng(0)
+    queries = [rng.uniform(size=(int(b), model.input_dim)).astype(np.float32)
+               for b in rng.integers(1, 32, size=num_requests)]
+    rows = {}
+    for backend in backends:
+        with KernelServer(model,
+                          KernelServeConfig(max_delay_ms=2.0,
+                                            backend=backend)) as server:
+            server.predict(queries[0])  # warm jit before timing
+            rows[backend] = _drive(server, queries)
+    # no-batching ceiling: one fused device call on the full row set
+    x = np.concatenate(queries)
+    us = time_call(lambda: model.predict(x, backend="ref"))
+    rows["raw_single_call"] = {"rows_per_s": x.shape[0] / (us / 1e6),
+                               "rows": x.shape[0]}
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for backend in ("ref", "fused"):
+        r = rows[backend]
+        emit(f"serve_kernel/{backend}", r["p50_ms"] * 1e3,
+             f"rows_per_s={r['rows_per_s']:.0f};p95_ms={r['p95_ms']:.2f};"
+             f"batches={r['batches']};requests={r['requests']}")
+    r = rows["raw_single_call"]
+    emit("serve_kernel/raw_single_call", 0.0,
+         f"rows_per_s={r['rows_per_s']:.0f};rows={r['rows']}")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"))

@@ -1,11 +1,16 @@
 """repro.api — the canonical entry point for every algorithm in the repo.
 
-One registry, one `fit()`, pluggable backends:
+One registry, one `fit()`, pluggable backends — and the deployment half:
+`FitResult.to_model()` exports a `KernelModel` with `predict` / `evaluate`
+/ `save` / `load`, `sweep()` fits a whole censor grid in one vmapped scan,
+and `repro.serve.KernelServer` microbatches scoring traffic over a mesh.
 
     from repro.api import FitConfig, fit
 
     result = fit(FitConfig(algorithm="coke", num_iters=500))
-    print(result.train_mse[-1], result.comms[-1])
+    model = result.to_model()
+    y_hat = model.predict(x_new)            # ref or fused (Pallas) backend
+    model.save("artifacts/coke")
 
 Algorithms (see `list_solvers()`): dkla, coke, cta, online_coke,
 ridge_oracle. Backends: "simulator" (in-process reference), "spmd"
@@ -19,9 +24,12 @@ is re-exported here too, so downstream scripts need only this surface.
 from repro.api.config import (BACKENDS, FitConfig,  # noqa: F401
                               FitResult, SolveContext)
 from repro.api.fit import fit  # noqa: F401
+from repro.api.model import (KernelModel, PREDICT_BACKENDS,  # noqa: F401
+                             predict)
 from repro.api.problems import BuiltProblem, build_problem  # noqa: F401
 from repro.api.registry import (Solver, get_solver,  # noqa: F401
                                 list_solvers, register_solver)
+from repro.api.sweep import SweepResult, sweep  # noqa: F401
 
 # the algorithm/problem vocabulary examples and benchmarks need, so they
 # can be written against repro.api alone

@@ -119,6 +119,9 @@ class FitResult:
     state: Any
     history: dict[str, jax.Array]    # each (num_iters,)
     theta: jax.Array                 # (N, D) final per-agent parameters
+    # the RFF map the thetas were trained against; populated when fit()
+    # built the problem itself (pass it to to_model() otherwise)
+    rff_params: Any = None
 
     # ---- trajectory accessors (the paper's evaluation quantities) --------
     @property
@@ -142,3 +145,39 @@ class FitResult:
         out = {k: float(v[-1]) for k, v in self.history.items()}
         out["num_iters"] = int(self.history["train_mse"].shape[0])
         return out
+
+    def to_model(self, rff_params=None, *, include_per_agent: bool = True):
+        """Package the fitted thetas with their RFF map into a deployable
+        `repro.api.KernelModel` (predict / evaluate / save / serve).
+
+        rff_params — required when fit() was handed a pre-built problem
+                     (take it from `build_problem(...).rff_params`);
+                     inferred automatically when fit() built the problem.
+        include_per_agent — keep the (N, D) per-agent stack alongside the
+                     consensus average (needed for the paper's per-agent
+                     test protocol; drop it for a minimal serving artifact).
+        """
+        from repro.api.model import KernelModel  # local: avoid import cycle
+
+        params = self.rff_params if rff_params is None else rff_params
+        if params is None:
+            raise ValueError(
+                "this FitResult has no RFF parameters (fit() was given a "
+                "pre-built problem); pass them explicitly: "
+                "result.to_model(built.rff_params)")
+        krr = self.config.krr
+        v, mu = self.config.resolved_censor
+        meta = {
+            "algorithm": self.config.algorithm,
+            "backend": self.config.backend,
+            "num_iters": self.config.resolved_iters,
+            "censor_v": v, "censor_mu": mu,
+            "dataset": krr.dataset, "num_agents": krr.num_agents,
+            "num_features": krr.num_features, "lam": krr.lam,
+            "rho": krr.rho, "seed": krr.seed, "graph": self.config.graph,
+        }
+        return KernelModel(
+            rff_params=params,
+            theta=jnp.mean(self.theta, axis=0),
+            thetas=self.theta if include_per_agent else None,
+            bandwidth=krr.bandwidth, kernel="gaussian", meta=meta)

@@ -97,8 +97,10 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
         raise ValueError(
             f"solver {config.algorithm!r} supports backends "
             f"{solver.backends}, not {config.backend!r}")
+    rff_params = None
     if problem is None:
-        problem = build_problem(config).problem
+        built = build_problem(config)
+        problem, rff_params = built.problem, built.rff_params
     if oracle is None and config.record_oracle_distance:
         oracle = ridge.rf_ridge(problem.feats, problem.labels, problem.lam)
 
@@ -113,4 +115,4 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
     carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
                                    config.chunk_size, progress_cb)
     return FitResult(config=config, state=carry, history=history,
-                     theta=theta_fn(carry))
+                     theta=theta_fn(carry), rff_params=rff_params)

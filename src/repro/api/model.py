@@ -1,0 +1,220 @@
+"""`KernelModel` — the deployable artifact that closes the fit→deploy loop.
+
+`fit()` ends at a `FitResult` whose theta is a raw (N, D) array;
+`FitResult.to_model()` packages it with the random-feature map that gives it
+meaning: the common-seed RFF parameters (omega, bias, mapping), the kernel
+family/bandwidth, the consensus-averaged theta (plus the per-agent stack for
+the paper's Section-5 test protocol), and the originating `FitConfig`
+metadata. The artifact is what the paper's construction promises: because
+random features are data-independent, the fitted function is a pair
+(RFF map, theta) that *any* node can score with — no training data, graph,
+or ADMM state needed at inference time.
+
+    model = fit(config).to_model()
+    y_hat = model.predict(x_new)              # chunked, ref or fused backend
+    model.evaluate(x_test, y_test)            # the paper's test-MSE metrics
+    model.save("artifacts/coke")              # npz + JSON sidecar
+    model = KernelModel.load("artifacts/coke")
+
+Scoring backends: "ref" is the eager `repro.core.rff` reference path
+(bit-identical to what training recorded); "fused" routes featurization
+through the Pallas `kernels/rff` kernel (one VMEM pass for matmul + cosine —
+the TPU hot path; interpret mode on CPU). Parity is tested in
+tests/test_model.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import rff
+from repro.kernels.rff.ops import featurize_fused
+
+PREDICT_BACKENDS = ("ref", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelModel:
+    """A fitted decentralized-kernel-learning function, ready to deploy.
+
+    rff_params — the common-seed random-feature map (omega (d, L), bias (L,),
+                 mapping) every agent trained against.
+    theta      — (D,) consensus-averaged parameters: the deployable function
+                 f(x) = phi(x)' theta.
+    thetas     — optional (N, D) per-agent stack; kept so `evaluate` can
+                 reproduce the paper's per-agent test protocol and so the
+                 consensus gap remains inspectable post-hoc.
+    bandwidth  — Gaussian-kernel bandwidth the spectral samples were drawn
+                 for (metadata; omega already encodes it).
+    kernel     — kernel family name (only "gaussian" is drawn today).
+    meta       — JSON-serializable provenance from the originating FitConfig
+                 (algorithm, censor schedule, iterations, dataset, ...).
+    """
+
+    rff_params: rff.RFFParams
+    theta: jax.Array
+    thetas: jax.Array | None = None
+    bandwidth: float = 1.0
+    kernel: str = "gaussian"
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ---- shape accessors -------------------------------------------------
+    @property
+    def input_dim(self) -> int:
+        return self.rff_params.input_dim
+
+    @property
+    def num_features(self) -> int:
+        return self.rff_params.num_features
+
+    @property
+    def num_agents(self) -> int | None:
+        return None if self.thetas is None else self.thetas.shape[0]
+
+    # ---- scoring ---------------------------------------------------------
+    def featurize(self, x: jax.Array, backend: str = "ref") -> jax.Array:
+        """phi(x) on the chosen backend — the one routing point for every
+        scoring path (predict, evaluate, KernelServer)."""
+        if backend == "ref":
+            return rff.featurize(self.rff_params, x)
+        if backend == "fused":
+            if self.rff_params.mapping != "cos_bias":
+                raise ValueError(
+                    "the fused Pallas featurizer implements the 'cos_bias' "
+                    f"mapping (Eq. 13); this model uses "
+                    f"{self.rff_params.mapping!r} — use backend='ref'")
+            return featurize_fused(self.rff_params, x)
+        raise ValueError(
+            f"unknown predict backend {backend!r}; choose from "
+            f"{PREDICT_BACKENDS}")
+
+    def predict(self, x: jax.Array, *, batch_size: int | None = None,
+                backend: str = "ref", agent: int | None = None) -> jax.Array:
+        """Score inputs: f(x) = phi(x)' theta.
+
+        x          — (..., d) inputs; leading dims are preserved (a bare (d,)
+                     vector returns a scalar).
+        batch_size — chunk the flattened batch through the featurizer in
+                     host-visible pieces (bounds peak memory for the
+                     "millions of users" scoring path); None = one pass.
+        backend    — "ref" (eager reference) or "fused" (Pallas rff kernel).
+        agent      — score with agent i's theta instead of the consensus
+                     average (requires the per-agent stack).
+        """
+        if agent is None:
+            theta = self.theta
+        elif self.thetas is None:
+            raise ValueError("this model was exported without per-agent "
+                             "thetas; re-export with include_per_agent=True")
+        else:
+            theta = self.thetas[agent]
+
+        x = jnp.asarray(x)
+        scalar = x.ndim == 1
+        if scalar:
+            x = x[None]
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+
+        n = flat.shape[0]
+        if batch_size is None or batch_size >= n:
+            preds = self.featurize(flat, backend) @ theta
+        else:
+            if batch_size < 1:
+                raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+            chunks = [self.featurize(flat[i:i + batch_size], backend) @ theta
+                      for i in range(0, n, batch_size)]
+            preds = jnp.concatenate(chunks)
+        preds = preds.reshape(lead)
+        return preds[0] if scalar else preds
+
+    def evaluate(self, x: jax.Array, y: jax.Array, *,
+                 backend: str = "ref") -> dict[str, Any]:
+        """The paper's generalization metrics on held-out data.
+
+        With per-agent inputs x (N, S, d) / y (N, S) and a per-agent theta
+        stack, `test_mse` is the Section-5 protocol — agent i scores its own
+        shard with theta_i — computed exactly as the pre-KernelModel
+        benchmarks did; `consensus_mse` scores every shard with the averaged
+        theta (what a deployed node actually serves). With flat x (S, d) the
+        two coincide.
+        """
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        out: dict[str, Any] = {}
+        if x.ndim == 3 and self.thetas is not None:
+            phi = self.featurize(x, backend)                # (N, S, D)
+            preds = jnp.einsum("nsd,nd->ns", phi, self.thetas)
+            err = (y - preds) ** 2
+            out["test_mse"] = float(jnp.mean(err))
+            out["per_agent_mse"] = jnp.mean(err, axis=-1)
+            consensus_preds = phi @ self.theta               # (N, S)
+            out["consensus_mse"] = float(jnp.mean((y - consensus_preds) ** 2))
+        else:
+            preds = self.predict(x, backend=backend)
+            out["test_mse"] = float(jnp.mean((y - preds) ** 2))
+            out["consensus_mse"] = out["test_mse"]
+        out["rmse"] = out["test_mse"] ** 0.5
+        return out
+
+    # ---- persistence -----------------------------------------------------
+    def _array_tree(self) -> dict[str, jax.Array]:
+        tree = {"omega": self.rff_params.omega,
+                "bias": self.rff_params.bias,
+                "theta": self.theta}
+        if self.thetas is not None:
+            tree["thetas"] = self.thetas
+        return tree
+
+    def save(self, path: str) -> None:
+        """Write `<path>.npz` (arrays, via repro.ckpt) + `<path>.model.json`
+        (mapping/kernel/bandwidth/meta + shapes for reload)."""
+        ckpt.save(path, self._array_tree())
+        sidecar = {
+            "format": "repro.api.KernelModel/v1",
+            "mapping": self.rff_params.mapping,
+            "kernel": self.kernel,
+            "bandwidth": self.bandwidth,
+            "meta": self.meta,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in self._array_tree().items()},
+        }
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path + ".model.json", "w") as f:
+            json.dump(sidecar, f)
+
+    @classmethod
+    def load(cls, path: str) -> "KernelModel":
+        with open(path + ".model.json") as f:
+            sidecar = json.load(f)
+        if sidecar.get("format") != "repro.api.KernelModel/v1":
+            raise ValueError(
+                f"{path}.model.json is not a KernelModel artifact "
+                f"(format={sidecar.get('format')!r})")
+        like = {k: jax.ShapeDtypeStruct(tuple(s["shape"]), s["dtype"])
+                for k, s in sidecar["arrays"].items()}
+        tree, _ = ckpt.restore(path, like)
+        params = rff.RFFParams(omega=jnp.asarray(tree["omega"]),
+                               bias=jnp.asarray(tree["bias"]),
+                               mapping=sidecar["mapping"])
+        thetas = tree.get("thetas")
+        return cls(rff_params=params,
+                   theta=jnp.asarray(tree["theta"]),
+                   thetas=None if thetas is None else jnp.asarray(thetas),
+                   bandwidth=float(sidecar["bandwidth"]),
+                   kernel=sidecar["kernel"],
+                   meta=sidecar["meta"])
+
+
+def predict(model_or_result, x: jax.Array, **kw) -> jax.Array:
+    """`repro.api.predict` — score inputs with a KernelModel or, as a
+    convenience, directly with a FitResult (exported via `to_model()`)."""
+    model = (model_or_result if isinstance(model_or_result, KernelModel)
+             else model_or_result.to_model())
+    return model.predict(x, **kw)

@@ -27,6 +27,10 @@ class BuiltProblem:
     rff_params: rff.RFFParams
     feats_test: jax.Array
     labels_test: jax.Array
+    # raw held-out inputs (N, S, d) / (N, S): what `KernelModel.evaluate`
+    # consumes — the model owns featurization at inference time
+    x_test: jax.Array | None = None
+    y_test: jax.Array | None = None
 
 
 def build_graph(config: FitConfig, num_agents: int,
@@ -68,7 +72,9 @@ def build_problem(config: FitConfig | KRRConfig,
     feats = rff.featurize(p, jnp.asarray(ds.x))
     labels = jnp.asarray(ds.y)
     prob = make_problem(feats, labels, g, lam=cfg.lam, rho=cfg.rho)
+    x_test = jnp.asarray(ds.x_test)
+    y_test = jnp.asarray(ds.y_test)
     return BuiltProblem(
         problem=prob, graph=g, rff_params=p,
-        feats_test=rff.featurize(p, jnp.asarray(ds.x_test)),
-        labels_test=jnp.asarray(ds.y_test))
+        feats_test=rff.featurize(p, x_test),
+        labels_test=y_test, x_test=x_test, y_test=y_test)

@@ -1,0 +1,183 @@
+"""`sweep` — vmapped censor-grid fitting with per-cell deployable models.
+
+The paper's tuning protocol ("the parameters of the censoring function are
+tuned to achieve the best learning performance at nearly no performance
+loss") is a grid search over h(k) = v mu^k. Because `fit()` traces the
+censor thresholds as array data, the whole grid is *one* program: `sweep`
+vmaps the simulator fit loop over a (G, 2) threshold array, so 64 censor
+settings compile once and run as a single batched scan.
+
+    sw = sweep(FitConfig(algorithm="coke", num_iters=500), grid)
+    mses = sw.evaluate(x_test, y_test)["test_mse"]        # (G,)
+    idx, model = sw.select(x_test, y_test)                # operating point
+
+`SweepResult.models()` exports every cell as a `KernelModel`, making
+"train G censor settings, evaluate all on test data, pick the operating
+point" a three-line script.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import FitConfig, SolveContext
+from repro.api.model import KernelModel
+from repro.api.problems import build_problem
+from repro.api.registry import Solver, get_solver
+from repro.core.admm import Problem
+
+
+@partial(jax.jit, static_argnames=("solver", "num_iters"))
+def _sweep_scan(solver: Solver, problem: Problem, ctx: SolveContext,
+                host_aux, state0, censors, num_iters: int):
+    def run_one(censor):
+        c = dataclasses.replace(ctx, censor=censor)
+        aux = solver.prepare_traced(problem, c, host_aux)
+
+        def body(state, _):
+            state = solver.step(problem, c, aux, state)
+            return state, solver.metrics(problem, c, aux, state)
+
+        return jax.lax.scan(body, state0, None, length=num_iters)
+
+    return jax.vmap(run_one)(censors)
+
+
+def _grid_from_configs(configs: Sequence[FitConfig]):
+    base = configs[0]
+    for c in configs[1:]:
+        if c.replace(censor_v=base.censor_v,
+                     censor_mu=base.censor_mu) != base:
+            raise ValueError(
+                "sweep over a config list requires the configs to differ "
+                "only in (censor_v, censor_mu); differing cell: "
+                f"{c}")
+    return base, [c.resolved_censor for c in configs]
+
+
+def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
+          grid: Iterable[tuple[float, float]] | None = None, *,
+          problem: Problem | None = None) -> "SweepResult":
+    """Fit one problem under a grid of censor schedules in a single vmapped
+    scan.
+
+    configs_or_base — a base `FitConfig` (censor thresholds come from
+                      `grid`), or a sequence of FitConfigs that differ only
+                      in their censor thresholds.
+    grid            — iterable of (v, mu) pairs; required with a base config.
+    problem         — an existing `admm.Problem`; None builds one from the
+                      base config (and the per-cell models inherit its RFF
+                      map automatically).
+    """
+    if isinstance(configs_or_base, FitConfig):
+        if grid is None:
+            raise ValueError("sweep(base_config) requires a (v, mu) grid")
+        base = configs_or_base
+        cells = [(float(v), float(mu)) for v, mu in grid]
+    else:
+        if grid is not None:
+            raise ValueError("pass either a config list or a base config "
+                             "with a grid, not both")
+        base, cells = _grid_from_configs(list(configs_or_base))
+    if not cells:
+        raise ValueError("empty censor grid")
+    if base.backend != "simulator":
+        raise ValueError(
+            "sweep vmaps the in-process simulator loop; run backend="
+            f"{base.backend!r} cells individually through fit()")
+
+    solver = get_solver(base.algorithm)
+    rff_params = None
+    if problem is None:
+        built = build_problem(base)
+        problem, rff_params = built.problem, built.rff_params
+
+    ctx = SolveContext.from_config(base)
+    host_aux = solver.prepare_host(problem, ctx)
+    state0 = solver.init_state(problem, ctx)
+    censors = jnp.asarray(cells, jnp.float32)           # (G, 2)
+
+    states, history = _sweep_scan(solver, problem, ctx, host_aux, state0,
+                                  censors, num_iters=base.resolved_iters)
+    thetas = jax.vmap(solver.theta_of)(states)          # (G, N, D)
+    return SweepResult(config=base, censors=censors, thetas=thetas,
+                       history=history, rff_params=rff_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """G censor-schedule cells fitted on one problem, ready to compare."""
+
+    config: FitConfig
+    censors: jax.Array                  # (G, 2): [v, mu] per cell
+    thetas: jax.Array                   # (G, N, D) final per-agent params
+    history: dict[str, jax.Array]       # each (G, num_iters)
+    rff_params: Any = None
+
+    def __len__(self) -> int:
+        return self.censors.shape[0]
+
+    def cell_config(self, i: int) -> FitConfig:
+        v, mu = (float(x) for x in self.censors[i])
+        return self.config.replace(censor_v=v, censor_mu=mu)
+
+    def model(self, i: int, rff_params=None, *,
+              include_per_agent: bool = True) -> KernelModel:
+        """Export cell i as a deployable `KernelModel`."""
+        from repro.api.config import FitResult
+
+        params = self.rff_params if rff_params is None else rff_params
+        res = FitResult(config=self.cell_config(i), state=None,
+                        history={k: v[i] for k, v in self.history.items()},
+                        theta=self.thetas[i], rff_params=params)
+        return res.to_model(include_per_agent=include_per_agent)
+
+    def models(self, rff_params=None, *,
+               include_per_agent: bool = True) -> list[KernelModel]:
+        """Export every cell as a deployable `KernelModel`."""
+        return [self.model(i, rff_params,
+                           include_per_agent=include_per_agent)
+                for i in range(len(self))]
+
+    def evaluate(self, x: jax.Array, y: jax.Array, *,
+                 backend: str = "ref",
+                 rff_params=None) -> dict[str, jax.Array]:
+        """Per-cell held-out metrics: test_mse (G,), final train_mse (G,),
+        final cumulative comms (G,).
+
+        The test set is featurized ONCE and scored against the stacked
+        (G, N, D) thetas — not once per cell (every cell shares the same
+        common-seed RFF map)."""
+        probe = self.model(0, rff_params)    # carries the shared RFF map
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        phi = probe.featurize(x, backend)
+        if x.ndim == 3:
+            # per-agent protocol: agent n scores its shard with theta_{g,n}
+            preds = jnp.einsum("nsd,gnd->gns", phi, self.thetas)
+        else:
+            theta_bar = jnp.mean(self.thetas, axis=1)        # (G, D)
+            preds = jnp.einsum("sd,gd->gs", phi, theta_bar)
+        mses = jnp.mean((y[None] - preds) ** 2,
+                        axis=tuple(range(1, preds.ndim)))
+        return {"test_mse": mses,
+                "train_mse": self.history["train_mse"][:, -1],
+                "comms": self.history["comms"][:, -1]}
+
+    def select(self, x: jax.Array, y: jax.Array, *,
+               max_mse_gap: float = 0.01,
+               rff_params=None) -> tuple[int, KernelModel]:
+        """The paper's operating-point rule: among cells whose test MSE is
+        within `max_mse_gap` (relative) of the best cell, pick the one that
+        transmitted least. Returns (cell index, its KernelModel)."""
+        ev = self.evaluate(x, y, rff_params=rff_params)
+        mses, comms = ev["test_mse"], ev["comms"]
+        best = float(jnp.min(mses))
+        ok = mses <= best * (1.0 + max_mse_gap) + 1e-12
+        comms_masked = jnp.where(ok, comms, jnp.inf)
+        idx = int(jnp.argmin(comms_masked))
+        return idx, self.model(idx, rff_params)

@@ -105,7 +105,10 @@ def uci_standin(
     if subsample is not None:
         total = min(total, subsample)
     per_agent = total // num_agents
-    rng = np.random.default_rng(seed + hash(name) % 2**16)
+    # zlib.crc32, not hash(): str hashing is salted per process, which made
+    # every stand-in dataset (and all UCI benchmark numbers) differ run-to-run
+    import zlib
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 2**16)
 
     # Smooth nonlinear surface: random low-rank features + sinusoidal response.
     proj = rng.normal(size=(dim, 8)) / np.sqrt(dim)

@@ -1,1 +1,3 @@
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+from repro.serve.kernel_server import (KernelServeConfig,  # noqa: F401
+                                       KernelServer)

@@ -1,4 +1,5 @@
-"""Batched serving engine: prefill once, decode greedily.
+"""Batched serving engine: prefill once, then decode — greedy argmax or
+temperature sampling per `ServeConfig`.
 
 Host-side loop over jit'd prefill / decode_step; the decode step is the same
 function the dry-run lowers for `decode_32k` / `long_500k`.
@@ -19,8 +20,14 @@ from repro.models.common import ModelConfig
 class ServeConfig:
     max_new_tokens: int = 16
     cache_len: int = 256
-    greedy: bool = True
-    temperature: float = 1.0
+    greedy: bool = True              # argmax decode; False = sample
+    temperature: float = 1.0         # sampling softmax temperature
+
+    def __post_init__(self):
+        if not self.greedy and self.temperature <= 0.0:
+            raise ValueError(
+                f"sampling requires temperature > 0, got {self.temperature}"
+                " (use greedy=True for argmax decoding)")
 
 
 class Engine:
@@ -59,16 +66,35 @@ class Engine:
                                          state, jnp.asarray(t, jnp.int32))
         return logits, state, S
 
-    def generate(self, prompts: np.ndarray) -> np.ndarray:
+    def _select(self, logits: jax.Array, key: jax.Array | None) -> jax.Array:
+        """Next-token choice from (B, 1, V') logits per the ServeConfig:
+        greedy argmax, or temperature-scaled categorical sampling."""
+        logits = logits[:, :, :self.cfg.vocab_size]
+        if self.scfg.greedy:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.scfg.temperature, axis=-1)
+
+    def generate(self, prompts: np.ndarray,
+                 key: jax.Array | None = None) -> np.ndarray:
+        """Decode max_new_tokens continuations. `key` seeds sampling when
+        greedy=False (defaults to PRNGKey(0) for reproducibility); it is
+        ignored for greedy decoding."""
         prompts = jnp.asarray(prompts, jnp.int32)
         logits, state, pos = self._prefill_state(prompts)
+        if self.scfg.greedy:
+            keys = [None] * self.scfg.max_new_tokens
+        else:
+            if key is None:
+                key = jax.random.PRNGKey(0)
+            keys = list(jax.random.split(key, self.scfg.max_new_tokens))
         out = []
-        token = jnp.argmax(logits[:, -1:, :self.cfg.vocab_size], axis=-1)
+        token = self._select(logits[:, -1:, :], keys[0])
         out.append(token)
         for i in range(self.scfg.max_new_tokens - 1):
             logits, state = self._decode(self.params, token.astype(jnp.int32),
                                          state, jnp.asarray(pos + i, jnp.int32))
-            token = jnp.argmax(logits[:, :, :self.cfg.vocab_size], axis=-1)
+            token = self._select(logits, keys[i + 1])
             out.append(token)
         return np.asarray(jnp.concatenate(out, axis=1))
 

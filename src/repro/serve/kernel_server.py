@@ -1,0 +1,248 @@
+"""`KernelServer` — microbatched scoring for `KernelModel` artifacts.
+
+Sibling to the LLM `Engine`: where the Engine amortizes decode steps over a
+batch of sequences, the KernelServer amortizes RFF scoring over concurrent
+requests. Callers `submit()` arbitrarily-sized query batches from any
+thread; a collector thread coalesces everything waiting (up to `max_batch`
+rows or `max_delay_ms`), pads the merged batch to a bucketed shape (so the
+jitted scorer never retraces on ragged traffic), scores it in one device
+call sharded over the mesh's data axes via `distributed.sharding`-style
+NamedShardings, and scatters the rows back to each request's future.
+
+This is the "serve heavy traffic" path the random-feature construction
+makes cheap: the whole model is (omega, bias, theta) — a few hundred KB —
+and scoring is one matmul + cosine + matvec, data-parallel in the batch
+dimension with zero cross-request state.
+
+    server = KernelServer(model)                  # host mesh by default
+    fut = server.submit(x)                        # (b, d) -> Future[(b,)]
+    y = fut.result()
+    server.stop()
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.api.model import PREDICT_BACKENDS, KernelModel
+from repro.distributed.sharding import batch_specs
+from repro.launch.mesh import batch_axes, make_host_mesh
+
+_STOP = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelServeConfig:
+    """Microbatching policy for the scoring server."""
+
+    max_batch: int = 1024            # rows per device call
+    max_delay_ms: float = 2.0        # collector wait for co-batchable work
+    buckets: tuple[int, ...] = (32, 128, 512, 1024)  # padded batch shapes
+    backend: str = "ref"             # "ref" | "fused" (Pallas featurizer)
+
+    def __post_init__(self):
+        if self.backend not in PREDICT_BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; choose from "
+                f"{PREDICT_BACKENDS}")
+        if not self.buckets or tuple(sorted(self.buckets)) != self.buckets:
+            raise ValueError("buckets must be a non-empty ascending tuple")
+
+
+@dataclasses.dataclass
+class _Request:
+    x: np.ndarray                    # (b, d)
+    future: Future
+
+
+class KernelServer:
+    """Thread-safe microbatching front-end over one jitted scoring call."""
+
+    def __init__(self, model: KernelModel,
+                 config: KernelServeConfig | None = None,
+                 mesh=None, *, autostart: bool = True):
+        self.model = model
+        self.cfg = config or KernelServeConfig()
+        self.mesh = make_host_mesh() if mesh is None else mesh
+        ba = batch_axes(self.mesh)
+        self._extent = (math.prod(self.mesh.shape[a] for a in ba)
+                        if ba else 1)
+        # every padded shape must divide over the data axes
+        self._buckets = tuple(-(-b // self._extent) * self._extent
+                              for b in self.cfg.buckets)
+        self._max_batch = -(-self.cfg.max_batch // self._extent) \
+            * self._extent
+
+        # eager backend/mapping validation at construction, through the one
+        # routing point all scoring paths share
+        model.featurize(jnp.zeros((1, model.input_dim), jnp.float32),
+                        self.cfg.backend)
+        theta = model.theta
+
+        def score(x):
+            return model.featurize(x, self.cfg.backend) @ theta
+
+        # batch-dim data parallelism from the repo's one sharding rule-set:
+        # queries and predictions shard their leading dim over the batch axes
+        probe = self._buckets[-1]
+        x_spec, y_spec = batch_specs(None, (
+            jax.ShapeDtypeStruct((probe, model.input_dim), jnp.float32),
+            jax.ShapeDtypeStruct((probe,), jnp.float32)), self.mesh)
+        self._score = jax.jit(
+            score, in_shardings=NamedSharding(self.mesh, x_spec),
+            out_shardings=NamedSharding(self.mesh, y_spec))
+
+        self._queue: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        self._stats = {"requests": 0, "rows": 0, "batches": 0,
+                       "padded_rows": 0}
+        self._worker: threading.Thread | None = None
+        self._stopped = False
+        if autostart:
+            self.start()
+
+    # ---- lifecycle -------------------------------------------------------
+    def start(self) -> None:
+        if self._worker is not None:
+            return
+        self._stopped = False
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="kernel-server")
+        self._worker.start()
+
+    def stop(self) -> None:
+        """Drain outstanding requests, then stop the collector thread."""
+        with self._lock:
+            # same lock as submit(): every request that passed the _stopped
+            # check is on the queue before the sentinel, so none is lost
+            if self._stopped:
+                return
+            self._stopped = True
+            self._queue.put(_STOP)
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        self._drain_inline()
+
+    def _drain_inline(self) -> None:
+        """Score anything still queued (requests enqueued while the worker
+        was shutting down, or with no worker ever started)."""
+        leftover = []
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _STOP:
+                leftover.append(item)
+        if leftover:
+            self._flush(leftover)
+
+    def __enter__(self) -> "KernelServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---- request path ----------------------------------------------------
+    def submit(self, x) -> Future:
+        """Enqueue a query batch; resolves to (b,) predictions ((,) for a
+        bare (d,) vector)."""
+        x = np.asarray(x, np.float32)
+        scalar = x.ndim == 1
+        if scalar:
+            x = x[None]
+        if x.ndim != 2 or x.shape[-1] != self.model.input_dim:
+            raise ValueError(
+                f"expected (b, {self.model.input_dim}) queries, got "
+                f"{x.shape}")
+        fut: Future = Future()
+        if scalar:
+            inner, fut = fut, Future()
+            inner.add_done_callback(
+                lambda f: fut.set_exception(f.exception())
+                if f.exception() else fut.set_result(f.result()[0]))
+            req = _Request(x, inner)
+        else:
+            req = _Request(x, fut)
+        with self._lock:
+            # check-and-enqueue under the stop() lock: either this request
+            # lands on the queue ahead of the _STOP sentinel, or it raises
+            if self._stopped:
+                raise RuntimeError("KernelServer is stopped")
+            self._queue.put(req)
+            self._stats["requests"] += 1
+        return fut
+
+    def predict(self, x) -> np.ndarray:
+        """Synchronous convenience wrapper around submit()."""
+        return self.submit(x).result()
+
+    def stats(self) -> dict:
+        with self._lock:
+            s = dict(self._stats)
+        s["mean_rows_per_batch"] = (s["rows"] / s["batches"]
+                                    if s["batches"] else 0.0)
+        return s
+
+    # ---- collector -------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                return
+            batch = [item]
+            rows = item.x.shape[0]
+            deadline = time.monotonic() + self.cfg.max_delay_ms / 1e3
+            while rows < self._max_batch:
+                timeout = deadline - time.monotonic()
+                try:
+                    nxt = (self._queue.get_nowait() if timeout <= 0
+                           else self._queue.get(timeout=timeout))
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    self._flush(batch)
+                    return
+                batch.append(nxt)
+                rows += nxt.x.shape[0]
+            self._flush(batch)
+
+    def _pad_to_bucket(self, n: int) -> int:
+        for b in self._buckets:
+            if n <= b:
+                return b
+        return -(-n // self._buckets[-1]) * self._buckets[-1]
+
+    def _flush(self, batch: list[_Request]) -> None:
+        xs = np.concatenate([r.x for r in batch])
+        n = xs.shape[0]
+        padded = self._pad_to_bucket(n)
+        if padded != n:
+            xs = np.concatenate(
+                [xs, np.zeros((padded - n, xs.shape[1]), xs.dtype)])
+        try:
+            preds = np.asarray(jax.device_get(self._score(jnp.asarray(xs))))
+        except Exception as e:  # scoring failed: fail every caller, keep serving
+            for r in batch:
+                r.future.set_exception(e)
+            return
+        with self._lock:
+            self._stats["batches"] += 1
+            self._stats["rows"] += n
+            self._stats["padded_rows"] += padded - n
+        off = 0
+        for r in batch:
+            b = r.x.shape[0]
+            r.future.set_result(preds[off:off + b])
+            off += b

@@ -187,6 +187,30 @@ def test_chunked_fit_trajectory_identical_and_callbacks_fire(built):
                                   np.asarray(chunked.comms))
 
 
+def test_chunk_boundary_parity_bit_identical(built):
+    """chunk_size None / divisor / non-divisor must yield bit-identical
+    trajectories and final thetas, and progress_cb must fire once per chunk
+    with the running iteration count."""
+    runs = {}
+    fired = {}
+    # 60 iters: None = one scan; 20 divides; 25 leaves a short tail chunk
+    for cs, expected in ((None, [60]), (20, [20, 40, 60]), (25, [25, 50, 60])):
+        seen = []
+        runs[cs] = fit(BASE.replace(chunk_size=cs), problem=built.problem,
+                       progress_cb=lambda k, m: seen.append(k))
+        fired[cs] = seen
+        assert seen == expected, (cs, seen)
+    ref = runs[None]
+    for cs in (20, 25):
+        r = runs[cs]
+        for key in ref.history:
+            np.testing.assert_array_equal(np.asarray(ref.history[key]),
+                                          np.asarray(r.history[key]),
+                                          err_msg=f"chunk_size={cs}:{key}")
+        np.testing.assert_array_equal(np.asarray(ref.theta),
+                                      np.asarray(r.theta))
+
+
 def test_oracle_distance_recorded_and_shrinks(built):
     r = fit(BASE.replace(algorithm="dkla", num_iters=600,
                          record_oracle_distance=True),

@@ -1,0 +1,59 @@
+"""Deprecation-shim contract for the legacy drivers.
+
+Pins two properties before any future removal: `core.admm.run` and
+`core.cta.run` (1) emit a DeprecationWarning that names the replacement,
+and (2) still produce bit-identical trajectories and final iterates to
+`repro.api.fit` on the same problem. If a future PR deletes the shims,
+delete this file with them.
+"""
+import numpy as np
+import pytest
+
+from repro.api import FitConfig, KRRConfig, build_problem, fit
+from repro.core import admm, cta
+from repro.core.censor import CensorSchedule
+
+BASE = FitConfig(
+    krr=KRRConfig(num_agents=4, samples_per_agent=30, num_features=8,
+                  lam=1e-2, rho=0.5, seed=3),
+    algorithm="coke", censor_v=0.4, censor_mu=0.96, num_iters=25)
+
+
+@pytest.fixture(scope="module")
+def built():
+    return build_problem(BASE)
+
+
+def _assert_matches_fit(legacy, result):
+    np.testing.assert_array_equal(np.asarray(legacy.train_mse),
+                                  np.asarray(result.train_mse))
+    np.testing.assert_array_equal(np.asarray(legacy.comms),
+                                  np.asarray(result.comms))
+    if hasattr(legacy, "consensus_gap"):  # the CTA result records only 2
+        np.testing.assert_array_equal(np.asarray(legacy.consensus_gap),
+                                      np.asarray(result.consensus_gap))
+
+
+def test_admm_run_coke_warns_and_matches_fit(built):
+    with pytest.warns(DeprecationWarning, match=r"repro\.api\.fit"):
+        legacy = admm.run(built.problem, CensorSchedule(0.4, 0.96), 25)
+    _assert_matches_fit(legacy, fit(BASE, problem=built.problem))
+    np.testing.assert_array_equal(
+        np.asarray(legacy.state.theta),
+        np.asarray(fit(BASE, problem=built.problem).theta))
+
+
+def test_admm_run_dkla_warns_and_matches_fit(built):
+    with pytest.warns(DeprecationWarning, match=r"repro\.api\.fit"):
+        legacy = admm.run(built.problem, admm.dkla_schedule(), 25)
+    _assert_matches_fit(legacy,
+                        fit(BASE.replace(algorithm="dkla"),
+                            problem=built.problem))
+
+
+def test_cta_run_warns_and_matches_fit(built):
+    with pytest.warns(DeprecationWarning, match=r"repro\.api\.fit"):
+        legacy = cta.run(built.problem, built.graph, lr=0.85, num_iters=25)
+    _assert_matches_fit(legacy,
+                        fit(BASE.replace(algorithm="cta", cta_lr=0.85),
+                            problem=built.problem))

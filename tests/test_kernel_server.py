@@ -1,0 +1,130 @@
+"""`repro.serve.KernelServer`: microbatch coalescing, padding-bucket
+correctness, backend parity, error isolation, and lifecycle."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import FitConfig, KRRConfig, fit
+from repro.serve import KernelServeConfig, KernelServer
+
+BASE = FitConfig(
+    krr=KRRConfig(num_agents=4, samples_per_agent=30, num_features=16,
+                  lam=1e-2, rho=0.5, seed=0),
+    algorithm="coke", censor_v=0.5, censor_mu=0.97, num_iters=30)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return fit(BASE).to_model()
+
+
+@pytest.fixture(scope="module")
+def queries(model):
+    rng = np.random.default_rng(0)
+    return rng.uniform(size=(64, model.input_dim)).astype(np.float32)
+
+
+def test_served_predictions_match_model(model, queries):
+    direct = np.asarray(model.predict(queries))
+    with KernelServer(model) as server:
+        out = server.predict(queries)
+        np.testing.assert_allclose(out, direct, atol=1e-6)
+        # scalar requests resolve to scalars
+        assert np.asarray(server.predict(queries[0])).shape == ()
+
+
+def test_microbatching_coalesces_queued_requests(model, queries):
+    """Requests enqueued before the collector starts are scored in one
+    padded device call, each future receiving exactly its rows."""
+    server = KernelServer(model, KernelServeConfig(max_delay_ms=1.0),
+                          autostart=False)
+    futs = [server.submit(queries[i:i + 3]) for i in range(0, 63, 3)]
+    server.start()
+    outs = np.concatenate([f.result() for f in futs])
+    server.stop()
+    np.testing.assert_allclose(outs, np.asarray(model.predict(queries[:63])),
+                               atol=1e-6)
+    stats = server.stats()
+    assert stats["requests"] == 21
+    assert stats["batches"] == 1          # all 21 coalesced
+    assert stats["rows"] == 63
+    assert stats["padded_rows"] == 128 - 63  # padded up to the 128 bucket
+
+
+def test_concurrent_submitters_all_get_correct_rows(model, queries):
+    direct = np.asarray(model.predict(queries))
+    results = {}
+
+    def client(i, server):
+        results[i] = server.submit(queries[i * 8:(i + 1) * 8]).result()
+
+    with KernelServer(model, KernelServeConfig(max_delay_ms=5.0)) as server:
+        threads = [threading.Thread(target=client, args=(i, server))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for i in range(8):
+        np.testing.assert_allclose(results[i], direct[i * 8:(i + 1) * 8],
+                                   atol=1e-6)
+
+
+def test_fused_backend_parity(model, queries):
+    with KernelServer(model) as ref_srv:
+        ref = ref_srv.predict(queries)
+    with KernelServer(model,
+                      KernelServeConfig(backend="fused")) as fused_srv:
+        fused = fused_srv.predict(queries)
+    np.testing.assert_allclose(ref, fused, atol=1e-5)
+
+
+def test_oversized_batch_spills_past_largest_bucket(model):
+    rng = np.random.default_rng(1)
+    big = rng.uniform(size=(40, model.input_dim)).astype(np.float32)
+    cfg = KernelServeConfig(max_batch=16, buckets=(8, 16))
+    server = KernelServer(model, cfg, autostart=False)
+    fut = server.submit(big)  # single request larger than max_batch
+    server.start()
+    out = fut.result()
+    server.stop()
+    np.testing.assert_allclose(out, np.asarray(model.predict(big)),
+                               atol=1e-6)
+
+
+def test_bad_request_fails_its_future_only(model, queries):
+    with KernelServer(model) as server:
+        with pytest.raises(ValueError, match="queries"):
+            server.submit(np.zeros((2, 99), np.float32))
+        # the server keeps serving after the rejected request
+        np.testing.assert_allclose(server.predict(queries[:4]),
+                                   np.asarray(model.predict(queries[:4])),
+                                   atol=1e-6)
+
+
+def test_stop_drains_queued_requests(model, queries):
+    """Requests accepted before stop() must resolve even if the collector
+    never picked them up — stop() scores the queue remainder inline."""
+    server = KernelServer(model, autostart=False)
+    futs = [server.submit(queries[i:i + 2]) for i in range(0, 10, 2)]
+    server.stop()  # worker never started; drain must resolve every future
+    outs = np.concatenate([f.result(timeout=5) for f in futs])
+    np.testing.assert_allclose(outs, np.asarray(model.predict(queries[:10])),
+                               atol=1e-6)
+
+
+def test_stopped_server_rejects_submissions(model, queries):
+    server = KernelServer(model)
+    server.predict(queries[:2])
+    server.stop()
+    server.stop()  # idempotent
+    with pytest.raises(RuntimeError, match="stopped"):
+        server.submit(queries[:2])
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="backend"):
+        KernelServeConfig(backend="quantum")
+    with pytest.raises(ValueError, match="buckets"):
+        KernelServeConfig(buckets=(128, 32))

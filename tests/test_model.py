@@ -1,0 +1,236 @@
+"""The deployment surface: `FitResult.to_model()` → `KernelModel`
+predict/evaluate/save/load, ref↔fused backend parity, the acceptance
+contract that `evaluate` reproduces the pre-refactor benchmark test-MSE,
+and the vmapped censor-grid `sweep`."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (FitConfig, KernelModel, KRRConfig, build_problem,
+                       fit, predict, sweep)
+from repro.core import rff
+
+KRR = KRRConfig(num_agents=5, samples_per_agent=40, num_features=16,
+                lam=1e-2, rho=0.5, seed=0)
+BASE = FitConfig(krr=KRR, algorithm="coke", censor_v=0.5, censor_mu=0.97,
+                 num_iters=40)
+
+
+@pytest.fixture(scope="module")
+def built():
+    return build_problem(BASE)
+
+
+@pytest.fixture(scope="module")
+def result(built):
+    return fit(BASE, problem=built.problem)
+
+
+@pytest.fixture(scope="module")
+def model(built, result):
+    return result.to_model(built.rff_params)
+
+
+# ---------------------------------------------------------------------------
+# to_model construction
+# ---------------------------------------------------------------------------
+
+def test_fit_attaches_rff_params_when_building_problem():
+    res = fit(BASE)
+    m = res.to_model()  # no explicit rff_params needed
+    assert m.num_features == KRR.num_features
+    assert m.meta["algorithm"] == "coke"
+    assert m.meta["censor_v"] == 0.5 and m.meta["censor_mu"] == 0.97
+
+
+def test_to_model_requires_rff_params_for_prebuilt_problem(built, result):
+    assert result.rff_params is None  # fit() was handed the problem
+    with pytest.raises(ValueError, match="rff_params"):
+        result.to_model()
+
+
+def test_to_model_consensus_average_and_per_agent(built, result, model):
+    np.testing.assert_array_equal(
+        np.asarray(model.theta), np.asarray(jnp.mean(result.theta, axis=0)))
+    np.testing.assert_array_equal(np.asarray(model.thetas),
+                                  np.asarray(result.theta))
+    assert model.num_agents == KRR.num_agents
+    lean = result.to_model(built.rff_params, include_per_agent=False)
+    assert lean.thetas is None and lean.num_agents is None
+    with pytest.raises(ValueError, match="per-agent"):
+        lean.predict(jnp.ones((2, model.input_dim)), agent=0)
+
+
+# ---------------------------------------------------------------------------
+# predict: shapes, chunking, backends
+# ---------------------------------------------------------------------------
+
+def test_predict_matches_manual_scoring(built, model):
+    x = built.x_test[0]  # (S, d)
+    manual = rff.featurize(model.rff_params, x) @ model.theta
+    np.testing.assert_array_equal(np.asarray(model.predict(x)),
+                                  np.asarray(manual))
+    # a bare vector scores to a scalar
+    assert model.predict(x[0]).shape == ()
+    # agent-specific scoring uses that agent's theta
+    manual2 = rff.featurize(model.rff_params, x) @ model.thetas[2]
+    np.testing.assert_array_equal(np.asarray(model.predict(x, agent=2)),
+                                  np.asarray(manual2))
+
+
+def test_predict_chunked_matches_single_pass(built, model):
+    x = built.x_test  # (N, S, d): leading dims preserved
+    full = model.predict(x)
+    assert full.shape == x.shape[:-1]
+    for bs in (1, 7, 10_000):
+        np.testing.assert_allclose(np.asarray(model.predict(x, batch_size=bs)),
+                                   np.asarray(full), atol=1e-6)
+    with pytest.raises(ValueError, match="batch_size"):
+        model.predict(x, batch_size=0)
+
+
+def test_predict_ref_fused_backend_parity(built, model):
+    """Acceptance: ref vs fused (Pallas rff) parity on the scoring path."""
+    x = built.x_test
+    ref = model.predict(x, backend="ref")
+    fused = model.predict(x, backend="fused")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(fused), atol=1e-5)
+    with pytest.raises(ValueError, match="backend"):
+        model.predict(x, backend="tpu_v9")
+
+
+def test_fused_backend_rejects_cos_sin_mapping(model):
+    import jax
+    p = rff.draw_rff(jax.random.PRNGKey(0), 3, 8, mapping="cos_sin")
+    m = KernelModel(rff_params=p, theta=jnp.zeros(8))
+    with pytest.raises(ValueError, match="cos_bias"):
+        m.predict(jnp.ones((2, 3)), backend="fused")
+
+
+def test_api_predict_accepts_model_and_fitresult(model):
+    res = fit(BASE)
+    x = jnp.ones((3, model.input_dim))
+    np.testing.assert_array_equal(
+        np.asarray(predict(res, x)),
+        np.asarray(res.to_model().predict(x)))
+    np.testing.assert_array_equal(np.asarray(predict(model, x)),
+                                  np.asarray(model.predict(x)))
+
+
+# ---------------------------------------------------------------------------
+# evaluate: the paper's test protocol
+# ---------------------------------------------------------------------------
+
+def test_evaluate_reproduces_legacy_benchmark_test_mse(built, result, model):
+    """Acceptance: KernelModel.evaluate == the pre-refactor benchmark
+    formula (per-agent einsum over precomputed test features)."""
+    preds = jnp.einsum("ntd,nd->nt", built.feats_test, result.theta)
+    legacy = float(jnp.mean((built.labels_test - preds) ** 2))
+    metrics = model.evaluate(built.x_test, built.y_test)
+    assert metrics["test_mse"] == legacy
+    assert metrics["per_agent_mse"].shape == (KRR.num_agents,)
+    assert metrics["rmse"] == pytest.approx(legacy ** 0.5)
+    # consensus scoring is also reported (what a deployed node serves)
+    assert metrics["consensus_mse"] > 0.0
+
+
+def test_evaluate_flat_inputs_use_consensus_theta(built, model):
+    x = built.x_test.reshape(-1, model.input_dim)
+    y = built.y_test.reshape(-1)
+    metrics = model.evaluate(x, y)
+    preds = model.predict(x)
+    assert metrics["test_mse"] == pytest.approx(
+        float(jnp.mean((y - preds) ** 2)))
+    assert metrics["consensus_mse"] == metrics["test_mse"]
+
+
+# ---------------------------------------------------------------------------
+# save / load
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrips_bit_identically(tmp_path, built, model):
+    path = str(tmp_path / "artifacts" / "coke_model")
+    model.save(path)
+    loaded = KernelModel.load(path)
+    for a, b in ((model.theta, loaded.theta),
+                 (model.thetas, loaded.thetas),
+                 (model.rff_params.omega, loaded.rff_params.omega),
+                 (model.rff_params.bias, loaded.rff_params.bias)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert loaded.rff_params.mapping == model.rff_params.mapping
+    assert loaded.bandwidth == model.bandwidth
+    assert loaded.meta == model.meta
+    x = built.x_test[0]
+    np.testing.assert_array_equal(np.asarray(model.predict(x)),
+                                  np.asarray(loaded.predict(x)))
+
+
+def test_save_load_without_per_agent_thetas(tmp_path, built, result):
+    lean = result.to_model(built.rff_params, include_per_agent=False)
+    path = str(tmp_path / "lean")
+    lean.save(path)
+    assert KernelModel.load(path).thetas is None
+
+
+def test_load_rejects_foreign_artifact(tmp_path):
+    import json
+    path = str(tmp_path / "other")
+    with open(path + ".model.json", "w") as f:
+        json.dump({"format": "something/else"}, f)
+    with pytest.raises(ValueError, match="not a KernelModel"):
+        KernelModel.load(path)
+
+
+# ---------------------------------------------------------------------------
+# sweep: the vmapped censor grid
+# ---------------------------------------------------------------------------
+
+GRID = ((0.1, 0.99), (0.5, 0.97), (1.5, 0.95))
+
+
+def test_sweep_matches_individual_fits(built):
+    sw = sweep(BASE, GRID, problem=built.problem)
+    assert len(sw) == 3
+    assert sw.history["train_mse"].shape == (3, BASE.num_iters)
+    for gi, (v, mu) in enumerate(GRID):
+        r = fit(BASE.replace(censor_v=v, censor_mu=mu),
+                problem=built.problem)
+        np.testing.assert_allclose(np.asarray(sw.history["train_mse"][gi]),
+                                   np.asarray(r.train_mse), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(sw.history["comms"][gi]),
+                                      np.asarray(r.comms))
+        # vmapped Cholesky solves differ from the scalar loop at float32 lsb
+        np.testing.assert_allclose(np.asarray(sw.thetas[gi]),
+                                   np.asarray(r.theta), atol=1e-5)
+
+
+def test_sweep_accepts_config_list_and_exports_models():
+    configs = [BASE.replace(censor_v=v, censor_mu=mu) for v, mu in GRID]
+    sw = sweep(configs)  # builds the problem itself -> models need no params
+    models = sw.models()
+    assert len(models) == 3
+    assert all(isinstance(m, KernelModel) for m in models)
+    assert models[1].meta["censor_v"] == pytest.approx(0.5)
+    with pytest.raises(ValueError, match="censor"):
+        sweep([BASE, BASE.replace(num_iters=10)])
+
+
+def test_sweep_select_picks_cheapest_good_cell(built):
+    sw = sweep(BASE, GRID, problem=built.problem)
+    ev = sw.evaluate(built.x_test, built.y_test,
+                     rff_params=built.rff_params)
+    assert ev["test_mse"].shape == (3,)
+    idx, m = sw.select(built.x_test, built.y_test, max_mse_gap=10.0,
+                       rff_params=built.rff_params)
+    # with a huge allowed gap, the cheapest-comms cell wins outright
+    assert idx == int(jnp.argmin(ev["comms"]))
+    assert isinstance(m, KernelModel)
+
+
+def test_sweep_rejects_spmd_backend_and_empty_grid(built):
+    with pytest.raises(ValueError, match="simulator"):
+        sweep(BASE.replace(backend="spmd", graph="ring"), GRID)
+    with pytest.raises(ValueError, match="empty"):
+        sweep(BASE, ())
+    with pytest.raises(ValueError, match="grid"):
+        sweep(BASE)

@@ -101,6 +101,34 @@ def test_engine_generates_deterministically():
     assert (out1 < cfg.vocab_size).all()
 
 
+def test_engine_honors_temperature_sampling():
+    """ServeConfig.greedy/temperature drive decoding: near-zero temperature
+    sampling collapses to the greedy path, same key reproduces, and the
+    sampled continuation actually depends on the key."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    prompts = np.array([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+
+    greedy = Engine(cfg, params, ServeConfig(max_new_tokens=6, cache_len=32,
+                                             greedy=True)).generate(prompts)
+    cold = Engine(cfg, params,
+                  ServeConfig(max_new_tokens=6, cache_len=32, greedy=False,
+                              temperature=1e-4))
+    np.testing.assert_array_equal(cold.generate(prompts), greedy)
+
+    warm = Engine(cfg, params,
+                  ServeConfig(max_new_tokens=6, cache_len=32, greedy=False,
+                              temperature=5.0))
+    k1, k2 = jax.random.PRNGKey(11), jax.random.PRNGKey(12)
+    out1 = warm.generate(prompts, key=k1)
+    np.testing.assert_array_equal(out1, warm.generate(prompts, key=k1))
+    assert (out1 != warm.generate(prompts, key=k2)).any()
+    assert (out1 < cfg.vocab_size).all()
+
+    with pytest.raises(ValueError, match="temperature"):
+        ServeConfig(greedy=False, temperature=0.0)
+
+
 def test_engine_encdec():
     cfg = get_config("seamless-m4t-medium").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(4))
