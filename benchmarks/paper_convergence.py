@@ -42,6 +42,8 @@ def run_setup(name: str, iters: int = 600, samples: int = 400,
             "cta_comms": int(res_t.comms[i]),
             "dkla_comms": int(res_d.comms[i]),
             "coke_comms": int(res_c.comms[i]),
+            "coke_bits": int(res_c.bits[i]),
+            "dkla_bits": int(res_d.bits[i]),
             "coke_consensus_gap": float(res_c.consensus_gap[i]),
             "coke_dist_to_star": res_c.distance_to(theta_star),
             "coke_test_mse": test_mse(res_c.theta, ft, lt),
@@ -62,7 +64,8 @@ def main(emit):
         for r in rows:
             emit(f"paper_convergence/{name}/k{r['iteration']}", 0.0,
                  f"cta={r['cta_mse']:.3e};dkla={r['dkla_mse']:.3e};"
-                 f"coke={r['coke_mse']:.3e};comms={r['coke_comms']}")
+                 f"coke={r['coke_mse']:.3e};comms={r['coke_comms']};"
+                 f"bits={r['coke_bits']}")
         emit(f"paper_convergence/{name}/claims", 0.0,
              f"admm_beats_cta={admm_beats_cta};coke_matches_dkla={coke_matches};"
              f"comm_saving={saving:.2%};gap={last['coke_consensus_gap']:.2e}")

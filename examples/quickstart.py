@@ -10,8 +10,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import tempfile
 
-from repro.api import (FitConfig, KernelModel, KRRConfig, build_problem,
-                       fit, list_solvers)
+from repro.api import (Censor, Chain, Drop, FitConfig, KernelModel,
+                       KRRConfig, Quantize, build_problem, fit,
+                       list_solvers)
 
 base = FitConfig(
     krr=KRRConfig(num_agents=12, samples_per_agent=300, num_features=64,
@@ -41,6 +42,18 @@ saving = 1 - int(results["coke"].comms[-1]) / int(results["dkla"].comms[-1])
 print(f"\nCOKE transmits {saving:.0%} less than DKLA at comparable accuracy "
       f"(paper reports ~45-55% on its datasets; benchmarks/paper_comm_cost.py"
       f"\nreproduces the tuned per-dataset protocol).")
+
+# communication is a composable POLICY axis: the same censor rule stacked
+# with 4-bit stochastic innovation quantization and 5% link drops, with
+# the cost metric moved from transmissions to bits
+q4 = fit(base.replace(
+    censor_v=None, censor_mu=None, algorithm="coke",
+    comm=Chain([Censor(v=0.1, mu=0.995), Quantize(bits=4), Drop(p=0.05)])),
+    problem=built.problem)
+bits_saving = 1 - float(q4.bits[-1]) / float(results["coke"].bits[-1])
+print(f"censor+4-bit+drops: train MSE {float(q4.train_mse[-1]):.3e} at "
+      f"{int(q4.bits[-1]):,} bits\n— {bits_saving:.0%} fewer bits than "
+      f"full-precision COKE ({int(results['coke'].bits[-1]):,}).")
 
 # fit → deploy: package the fitted function as a KernelModel — the RFF map
 # plus the consensus theta is everything a serving node needs.

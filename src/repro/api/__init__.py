@@ -2,12 +2,17 @@
 
 One registry, one `fit()`, pluggable backends — and the deployment half:
 `FitResult.to_model()` exports a `KernelModel` with `predict` / `evaluate`
-/ `save` / `load`, `sweep()` fits a whole censor grid in one vmapped scan,
+/ `save` / `load`, `sweep()` fits a whole policy grid in one vmapped scan,
 and `repro.serve.KernelServer` microbatches scoring traffic over a mesh.
 
-    from repro.api import FitConfig, fit
+    from repro.api import Censor, Chain, Drop, FitConfig, Quantize, fit
 
-    result = fit(FitConfig(algorithm="coke", num_iters=500))
+    result = fit(FitConfig(
+        algorithm="coke", num_iters=500,
+        comm=Chain([Censor(v=0.5, mu=0.97),   # h(k) = v mu^k (the paper)
+                    Quantize(bits=4),         # QC-ODKLA-style innovations
+                    Drop(p=0.05)])))          # unreliable links
+    result.bits                             # per-iteration cumulative bits
     model = result.to_model()
     y_hat = model.predict(x_new)            # ref or fused (Pallas) backend
     model.save("artifacts/coke")
@@ -36,6 +41,9 @@ from repro.api.sweep import SweepResult, sweep  # noqa: F401
 from repro.configs.coke_krr import KRRConfig, PAPER_SETUPS  # noqa: F401
 from repro.core.admm import Problem, make_problem  # noqa: F401
 from repro.core.censor import CensorSchedule  # noqa: F401
+from repro.core.comm import (Censor, Chain, CommState,  # noqa: F401
+                             Drop, Quantize)
+from repro.core.graph import TopologySchedule  # noqa: F401
 from repro.core.ridge import rf_ridge  # noqa: F401
 
 # consensus data-parallel training surface (deep-net workloads)

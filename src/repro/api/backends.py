@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.api.config import FitConfig, SolveContext
 from repro.api.registry import Solver
-from repro.api.solvers import _stacked_metrics
+from repro.api.solvers import _stacked_metrics, _uncompressed_bits
 from repro.core import losses as losses_mod
 from repro.core.admm import Problem
 from repro.core.graph import circulant
@@ -45,6 +45,32 @@ def _validate_topology(problem: Problem, offsets: tuple[int, ...]) -> None:
             "'circulant') or use backend='simulator'")
 
 
+def _validate_schedule(problem: Problem, topology) -> None:
+    """Each scheduled graph must be the circulant its offsets claim —
+    otherwise the ring runtime silently solves a different consensus
+    problem than the simulator."""
+    N = problem.num_agents
+    for i, off in enumerate(topology.offsets):
+        off = tuple(off)
+        seen = set()
+        for o in off:
+            pair = frozenset(((o % N), (-o) % N))
+            if (2 * o) % N == 0 or pair in seen:
+                raise ValueError(
+                    f"offset {o} is degenerate on N={N} agents (the ±{o} "
+                    "permutes alias the same neighbor, double-counting it "
+                    "in the ring runtime); choose offsets with 2*o % N != 0")
+            seen.add(pair)
+        want = circulant(N, off).adjacency
+        have = np.asarray(topology.adjacencies[i])
+        if not np.array_equal(have, want):
+            raise ValueError(
+                f"topology schedule graph {i} does not match the circulant "
+                f"with offsets {tuple(off)}; build the schedule with "
+                "TopologySchedule.circulant_cycle or use "
+                "backend='simulator'")
+
+
 def _local_grads(problem: Problem, theta: jax.Array) -> jax.Array:
     N = problem.num_agents
 
@@ -56,14 +82,19 @@ def _local_grads(problem: Problem, theta: jax.Array) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("ccfg", "opt_cfg", "num_iters"))
-def _consensus_chunk(problem, params, cstate, oracle, ccfg, opt_cfg,
+def _consensus_chunk(problem, params, cstate, oracle, comm, ccfg, opt_cfg,
                      num_iters):
     def body(carry, _):
         params, cstate = carry
         grads = {"theta": _local_grads(problem, params["theta"])}
         params, cstate, extra = cns.consensus_update(ccfg, opt_cfg, params,
-                                                     grads, cstate)
-        m = _stacked_metrics(problem, params["theta"], cstate["comms"])
+                                                     grads, cstate,
+                                                     comm=comm)
+        bits = extra.get("bits")
+        if bits is None:  # policy-unaware strategy (cta): full precision
+            bits = _uncompressed_bits(problem, cstate["comms"])
+        m = _stacked_metrics(problem, params["theta"], cstate["comms"],
+                             bits)
         m.update(extra)
         if oracle is not None:
             m["dist_to_oracle"] = jnp.max(jnp.linalg.norm(
@@ -83,27 +114,44 @@ def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
         raise ValueError(
             f"solver {solver.name!r} has no distributed strategy; "
             "use backend='simulator'")
-    offsets = config.graph_offsets
-    _validate_topology(problem, offsets)
+    offset_schedule = None
+    if config.topology is not None:
+        offset_schedule = config.topology.offsets
+        if offset_schedule is None:
+            raise ValueError(
+                "the spmd/fused backends implement circulant topologies; "
+                "give the TopologySchedule its per-graph `offsets` (e.g. "
+                "TopologySchedule.circulant_cycle) or use "
+                "backend='simulator'")
+        _validate_schedule(problem, config.topology)
+        offsets = offset_schedule[0]
+    else:
+        offsets = config.graph_offsets
+        _validate_topology(problem, offsets)
 
     v, mu = config.resolved_censor
     k = len(offsets)
     ccfg = cns.ConsensusConfig(
         strategy=strategy, rho=problem.rho, censor_v=v, censor_mu=mu,
-        offsets=offsets,
+        offsets=offsets, offset_schedule=offset_schedule,
         # per-neighbor Metropolis weight on a 2k-regular circulant
         mix_weight=k / (2.0 * k + 1.0),
         use_fused_kernel=config.backend == "fused")
     lr = ctx.cta_lr if strategy == "cta" else ctx.inner_lr
     opt_cfg = OptConfig(kind="sgd", lr=lr)
 
+    # the solver's policy view of the configured chain (e.g. DKLA strips
+    # the censor thresholds), traced into the compiled chunk
+    chain = (solver._policy(ctx) if getattr(solver, "comm_aware", False)
+             else None)
+
     N, _, D = problem.feats.shape
     params = {"theta": jnp.zeros((N, D), problem.feats.dtype)}
-    cstate = cns.init_consensus_state(ccfg, opt_cfg, params)
+    cstate = cns.init_consensus_state(ccfg, opt_cfg, params, comm=chain)
 
     def chunk_fn(carry, n):
         params, cstate = carry
-        return _consensus_chunk(problem, params, cstate, oracle,
+        return _consensus_chunk(problem, params, cstate, oracle, chain,
                                 ccfg=ccfg, opt_cfg=opt_cfg, num_iters=n)
 
     return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]

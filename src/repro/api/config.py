@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.coke_krr import KRRConfig
+from repro.core import comm as comm_mod
+from repro.core.graph import TopologySchedule
 
 BACKENDS = ("simulator", "spmd", "fused")
 
@@ -31,9 +33,18 @@ class FitConfig:
     krr: KRRConfig = KRRConfig()     # dataset / RF / lam / rho / graph_p spec
     backend: str = "simulator"       # simulator | spmd | fused
 
-    # censor schedule h(k) = v mu^k; None = inherit from krr
+    # communication policy: a core.comm Chain / stage / CensorSchedule.
+    # None = the legacy censor knobs below, i.e. Chain([Censor(v, mu)]).
+    comm: object | None = None
+
+    # DEPRECATED spelling of comm=Chain([Censor(v, mu)]); None = inherit
+    # from krr. Mutually exclusive with `comm`.
     censor_v: float | None = None
     censor_mu: float | None = None
+
+    # time-varying consensus graph; None = the static `graph` family below.
+    # The spmd/fused backends require schedule.offsets (circulant lowering).
+    topology: TopologySchedule | None = None
 
     num_iters: int | None = None     # None = krr.num_iters
 
@@ -64,10 +75,38 @@ class FitConfig:
         if self.chunk_size is not None and self.chunk_size < 1:
             raise ValueError(
                 f"chunk_size must be >= 1 or None, got {self.chunk_size}")
+        if self.comm is not None:
+            if self.censor_v is not None or self.censor_mu is not None:
+                raise ValueError(
+                    "censor_v/censor_mu are the legacy spelling of "
+                    "comm=Chain([Censor(v, mu)]); pass one or the other, "
+                    "not both")
+            comm_mod.as_chain(self.comm)  # fail fast on non-policies
 
     # ---- resolved knobs --------------------------------------------------
     @property
+    def resolved_comm(self) -> "comm_mod.Chain":
+        """The communication policy as a Chain (the one the solvers run).
+
+        `comm` wins when set; otherwise the legacy (censor_v, censor_mu)
+        knobs — themselves defaulting to the KRRConfig — map onto the
+        equivalent Chain([Censor(v, mu)]) migration shim.
+        """
+        if self.comm is not None:
+            return comm_mod.as_chain(self.comm)
+        v, mu = self.resolved_censor
+        return comm_mod.Chain((comm_mod.Censor(v, mu),))
+
+    @property
     def resolved_censor(self) -> tuple[float, float]:
+        """(v, mu) of the policy's first Censor stage ((0, 0) when the
+        policy does not censor) — kept for provenance metadata and the
+        legacy accessors."""
+        if self.comm is not None:
+            for s in comm_mod.as_chain(self.comm).stages:
+                if isinstance(s, comm_mod.Censor):
+                    return float(s.v), float(s.mu)
+            return 0.0, 0.0
         v = self.krr.censor_v if self.censor_v is None else self.censor_v
         mu = self.krr.censor_mu if self.censor_mu is None else self.censor_mu
         return float(v), float(mu)
@@ -81,16 +120,18 @@ class FitConfig:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("censor",),
+         data_fields=("comm", "topology"),
          meta_fields=("primal", "inner_steps", "inner_lr", "cta_lr",
                       "online_lr", "online_batch"))
 @dataclasses.dataclass(frozen=True)
 class SolveContext:
-    """The solver-facing slice of a FitConfig, shaped for jit: the censor
-    thresholds are array *data* (traced — sweeps share one compilation);
-    everything else is static metadata."""
+    """The solver-facing slice of a FitConfig, shaped for jit: the comm
+    policy's numeric knobs (v, mu, bits, p) and the topology schedule's
+    adjacency stack are array *data* (traced — policy sweeps share one
+    compilation); everything else is static metadata."""
 
-    censor: jax.Array                # (2,) float32: [v, mu]
+    comm: comm_mod.Chain             # policy with float32 array leaves
+    topology: TopologySchedule | None = None
     primal: str = "auto"
     inner_steps: int = 50
     inner_lr: float = 0.1
@@ -100,8 +141,10 @@ class SolveContext:
 
     @classmethod
     def from_config(cls, config: FitConfig) -> "SolveContext":
-        v, mu = config.resolved_censor
-        return cls(censor=jnp.asarray([v, mu], jnp.float32),
+        chain = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                             config.resolved_comm)
+        return cls(comm=chain,
+                   topology=config.topology,
                    primal=config.primal,
                    inner_steps=config.inner_steps,
                    inner_lr=config.inner_lr,
@@ -131,6 +174,12 @@ class FitResult:
     @property
     def comms(self) -> jax.Array:
         return self.history["comms"]
+
+    @property
+    def bits(self) -> jax.Array:
+        """Cumulative bits transmitted network-wide per iteration — the
+        cost axis the accuracy-vs-bits tradeoff curves are drawn in."""
+        return self.history["bits"]
 
     @property
     def consensus_gap(self) -> jax.Array:
@@ -172,6 +221,7 @@ class FitResult:
             "backend": self.config.backend,
             "num_iters": self.config.resolved_iters,
             "censor_v": v, "censor_mu": mu,
+            "comm": self.config.resolved_comm.describe(),
             "dataset": krr.dataset, "num_agents": krr.num_agents,
             "num_features": krr.num_features, "lam": krr.lam,
             "rho": krr.rho, "seed": krr.seed, "graph": self.config.graph,

@@ -97,12 +97,27 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
         raise ValueError(
             f"solver {config.algorithm!r} supports backends "
             f"{solver.backends}, not {config.backend!r}")
+    if config.comm is not None and not getattr(solver, "comm_aware", False):
+        raise ValueError(
+            f"solver {config.algorithm!r} does not thread a communication "
+            "policy (it transmits unconditionally); drop FitConfig.comm or "
+            "pick a comm-aware algorithm (dkla/coke/online_coke)")
+    if config.topology is not None and not getattr(solver, "topology_aware",
+                                                   False):
+        raise ValueError(
+            f"solver {config.algorithm!r} does not support a time-varying "
+            "topology schedule; drop FitConfig.topology or pick dkla/coke")
     rff_params = None
     if problem is None:
         built = build_problem(config)
         problem, rff_params = built.problem, built.rff_params
     if oracle is None and config.record_oracle_distance:
         oracle = ridge.rf_ridge(problem.feats, problem.labels, problem.lam)
+    if config.topology is not None and (
+            config.topology.num_agents != problem.num_agents):
+        raise ValueError(
+            f"topology schedule is over {config.topology.num_agents} "
+            f"agents but the problem has {problem.num_agents}")
 
     ctx = SolveContext.from_config(config)
     if config.backend == "simulator":

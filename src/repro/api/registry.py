@@ -32,6 +32,9 @@ class Solver(Protocol):
     #: repro.distributed.consensus strategy string for the SPMD/fused
     #: backends, or None when only the simulator applies
     consensus_strategy: str | None
+    #: whether the solver threads a core.comm policy through its broadcast
+    #: step; fit() rejects an explicit FitConfig.comm on unaware solvers
+    comm_aware: bool
 
     def prepare_host(self, problem: Any, ctx: Any) -> Any: ...
 

@@ -9,6 +9,7 @@ state/metric/backend conventions.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -17,21 +18,29 @@ import numpy as np
 
 from repro.api.config import SolveContext
 from repro.api.registry import register_solver
-from repro.core import admm, cta, online, ridge
+from repro.core import admm, comm as comm_mod, cta, online, ridge
 from repro.core.admm import Problem
-from repro.core.censor import CensorSchedule
 from repro.core.graph import Graph, metropolis_weights
 
 
-def _stacked_metrics(problem: Problem, theta: jax.Array,
-                     comms: jax.Array) -> dict[str, jax.Array]:
-    """The paper's per-iteration evaluation triple, computed exactly as the
-    legacy `admm.run` recorder did (bit-parity contract)."""
+def _stacked_metrics(problem: Problem, theta: jax.Array, comms: jax.Array,
+                     bits: jax.Array) -> dict[str, jax.Array]:
+    """The paper's per-iteration evaluation triple plus cumulative bits,
+    the MSE/comms/gap computed exactly as the legacy `admm.run` recorder
+    did (bit-parity contract)."""
     preds = jnp.einsum("ntd,nd->nt", problem.feats, theta)
     mse = jnp.mean((problem.labels - preds) ** 2)
     mean_theta = jnp.mean(theta, axis=0, keepdims=True)
     gap = jnp.max(jnp.sqrt(jnp.sum((theta - mean_theta) ** 2, axis=-1)))
-    return {"train_mse": mse, "comms": comms, "consensus_gap": gap}
+    return {"train_mse": mse, "comms": comms, "consensus_gap": gap,
+            "bits": jnp.asarray(bits, jnp.float32)}
+
+
+def _uncompressed_bits(problem: Problem, comms: jax.Array) -> jax.Array:
+    """Bits for `comms` full-precision D-vector transmissions (the policy-
+    unaware solvers: CTA broadcasts every iteration, uncompressed)."""
+    return comms.astype(jnp.float32) * jnp.float32(
+        comm_mod.FP_BITS * problem.feature_dim)
 
 
 # ---------------------------------------------------------------------------
@@ -40,8 +49,10 @@ def _stacked_metrics(problem: Problem, theta: jax.Array,
 
 class _ADMMSolver:
     backends = ("simulator", "spmd", "fused")
+    comm_aware = True
+    topology_aware = True
 
-    def _schedule(self, ctx: SolveContext) -> CensorSchedule:
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
         raise NotImplementedError
 
     def prepare_host(self, problem: Problem, ctx: SolveContext):
@@ -49,19 +60,29 @@ class _ADMMSolver:
 
     def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
         # Cholesky factors inside the compiled loop, exactly where the
-        # legacy jitted `admm.run` built them.
+        # legacy jitted `admm.run` built them. Under a topology schedule
+        # the (18a) normal matrix depends on the per-graph degrees, so a
+        # (M, N, D, D) stack is factored and coke_step gathers per k.
         use_chol = problem.loss == "quadratic" and ctx.primal != "gradient"
-        return admm._ridge_factors(problem) if use_chol else None
+        if not use_chol:
+            return None
+        if ctx.topology is None:
+            return admm._ridge_factors(problem)
+        return jax.vmap(lambda A: admm._ridge_factors(
+            dataclasses.replace(problem, adjacency=A)))(
+                ctx.topology.adjacencies)
 
     def init_state(self, problem: Problem, ctx: SolveContext):
-        return admm.init_state(problem)
+        return admm.init_state(problem, policy=self._policy(ctx))
 
     def step(self, problem: Problem, ctx: SolveContext, aux, state):
-        return admm.coke_step(problem, self._schedule(ctx), state, aux,
-                              ctx.inner_steps, ctx.inner_lr)
+        return admm.coke_step(problem, self._policy(ctx), state, aux,
+                              ctx.inner_steps, ctx.inner_lr,
+                              topology=ctx.topology)
 
     def metrics(self, problem: Problem, ctx: SolveContext, aux, state):
-        return _stacked_metrics(problem, state.theta, state.comms)
+        return _stacked_metrics(problem, state.theta, state.comms,
+                                jnp.sum(state.comm.bits))
 
     def theta_of(self, state) -> jax.Array:
         return state.theta
@@ -69,22 +90,25 @@ class _ADMMSolver:
 
 @register_solver("dkla")
 class DKLASolver(_ADMMSolver):
-    """Algorithm 1: COKE's update with the always-transmit h == 0 schedule."""
+    """Algorithm 1: COKE's update with the always-transmit h == 0 policy.
+    Non-censor stages of the configured policy (quantize, drop) still
+    apply — quantized DKLA is the Q-ODKLA ablation."""
 
     consensus_strategy = "dkla"
 
-    def _schedule(self, ctx: SolveContext) -> CensorSchedule:
-        return admm.dkla_schedule()
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
+        return comm_mod.uncensored(ctx.comm)
 
 
 @register_solver("coke")
 class COKESolver(_ADMMSolver):
-    """Algorithm 2: censored transmissions, h(k) = v mu^k with traced v, mu."""
+    """Algorithm 2: censored transmissions, h(k) = v mu^k with traced v, mu
+    (plus any composed quantize/drop stages of the configured policy)."""
 
     consensus_strategy = "coke"
 
-    def _schedule(self, ctx: SolveContext) -> CensorSchedule:
-        return CensorSchedule(v=ctx.censor[0], mu=ctx.censor[1])
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
+        return ctx.comm
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +122,8 @@ class CTASolver:
 
     backends = ("simulator", "spmd")
     consensus_strategy = "cta"
+    comm_aware = False  # diffusion transmits uncensored every iteration
+    topology_aware = False
 
     def prepare_host(self, problem: Problem, ctx: SolveContext):
         g = Graph(adjacency=np.asarray(problem.adjacency, np.float64))
@@ -113,7 +139,8 @@ class CTASolver:
         return cta.cta_step(problem, aux, ctx.cta_lr, state)
 
     def metrics(self, problem: Problem, ctx: SolveContext, aux, state):
-        return _stacked_metrics(problem, state.theta, state.comms)
+        return _stacked_metrics(problem, state.theta, state.comms,
+                                _uncompressed_bits(problem, state.comms))
 
     def theta_of(self, state) -> jax.Array:
         return state.theta
@@ -137,6 +164,8 @@ class OnlineCOKESolver:
 
     backends = ("simulator",)
     consensus_strategy = None
+    comm_aware = True
+    topology_aware = False
 
     def prepare_host(self, problem: Problem, ctx: SolveContext):
         return None
@@ -146,7 +175,8 @@ class OnlineCOKESolver:
 
     def init_state(self, problem: Problem, ctx: SolveContext):
         N, D = problem.num_agents, problem.feature_dim
-        inner = online.init_state(N, D, problem.feats.dtype)
+        inner = online.init_state(N, D, problem.feats.dtype,
+                                  policy=ctx.comm)
         return OnlineFitState(inner, jnp.zeros((), problem.feats.dtype))
 
     def step(self, problem: Problem, ctx: SolveContext, aux,
@@ -155,15 +185,15 @@ class OnlineCOKESolver:
         idx = (state.inner.step * b + jnp.arange(b)) % Ti
         feats = jnp.take(problem.feats, idx, axis=1)
         labels = jnp.take(problem.labels, idx, axis=1)
-        schedule = CensorSchedule(v=ctx.censor[0], mu=ctx.censor[1])
         inner, inst = online.online_coke_step(
-            state.inner, feats, labels, problem.adjacency, schedule,
+            state.inner, feats, labels, problem.adjacency, ctx.comm,
             lam=problem.lam, rho=problem.rho, lr=ctx.online_lr)
         return OnlineFitState(inner, inst)
 
     def metrics(self, problem: Problem, ctx: SolveContext, aux,
                 state: OnlineFitState):
-        m = _stacked_metrics(problem, state.inner.theta, state.inner.comms)
+        m = _stacked_metrics(problem, state.inner.theta, state.inner.comms,
+                             jnp.sum(state.inner.comm.bits))
         m["instant_mse"] = state.inst_mse
         return m
 
@@ -189,6 +219,8 @@ class RidgeOracleSolver:
 
     backends = ("simulator",)
     consensus_strategy = None
+    comm_aware = False  # sees all data, exchanges nothing
+    topology_aware = False
 
     def prepare_host(self, problem: Problem, ctx: SolveContext):
         return None
@@ -210,7 +242,8 @@ class RidgeOracleSolver:
 
     def metrics(self, problem: Problem, ctx: SolveContext, aux,
                 state: OracleState):
-        return _stacked_metrics(problem, state.theta, state.comms)
+        return _stacked_metrics(problem, state.theta, state.comms,
+                                jnp.zeros((), jnp.int32))
 
     def theta_of(self, state: OracleState) -> jax.Array:
         return state.theta

@@ -1,42 +1,48 @@
-"""`sweep` — vmapped censor-grid fitting with per-cell deployable models.
+"""`sweep` — vmapped communication-policy grids with per-cell models.
 
 The paper's tuning protocol ("the parameters of the censoring function are
 tuned to achieve the best learning performance at nearly no performance
-loss") is a grid search over h(k) = v mu^k. Because `fit()` traces the
-censor thresholds as array data, the whole grid is *one* program: `sweep`
-vmaps the simulator fit loop over a (G, 2) threshold array, so 64 censor
-settings compile once and run as a single batched scan.
+loss") is a grid search over h(k) = v mu^k; QC-ODKLA adds a quantization
+axis. Because `fit()` traces every numeric policy knob as array data, a
+whole (v, mu, bits, ...) grid is *one* program: `sweep` vmaps the simulator
+fit loop over a stacked policy pytree, so 64 policy settings compile once
+and run as a single batched scan.
 
     sw = sweep(FitConfig(algorithm="coke", num_iters=500), grid)
     mses = sw.evaluate(x_test, y_test)["test_mse"]        # (G,)
     idx, model = sw.select(x_test, y_test)                # operating point
 
-`SweepResult.models()` exports every cell as a `KernelModel`, making
-"train G censor settings, evaluate all on test data, pick the operating
-point" a three-line script.
+Grid cells may be (v, mu) pairs, (v, mu, bits) triples, or explicit
+`core.comm` policies (Chain / stage / stage sequence) — all cells must
+share one policy structure (that is what makes the grid one compiled
+program). `SweepResult.models()` exports every cell as a `KernelModel`.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from numbers import Number
 from typing import Any, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.config import FitConfig, SolveContext
 from repro.api.model import KernelModel
 from repro.api.problems import build_problem
 from repro.api.registry import Solver, get_solver
+from repro.core import comm as comm_mod
 from repro.core.admm import Problem
 
 
 @partial(jax.jit, static_argnames=("solver", "num_iters"))
 def _sweep_scan(solver: Solver, problem: Problem, ctx: SolveContext,
-                host_aux, state0, censors, num_iters: int):
-    def run_one(censor):
-        c = dataclasses.replace(ctx, censor=censor)
+                host_aux, policies, num_iters: int):
+    def run_one(chain):
+        c = dataclasses.replace(ctx, comm=chain)
         aux = solver.prepare_traced(problem, c, host_aux)
+        state0 = solver.init_state(problem, c)
 
         def body(state, _):
             state = solver.step(problem, c, aux, state)
@@ -44,47 +50,90 @@ def _sweep_scan(solver: Solver, problem: Problem, ctx: SolveContext,
 
         return jax.lax.scan(body, state0, None, length=num_iters)
 
-    return jax.vmap(run_one)(censors)
+    return jax.vmap(run_one)(policies)
+
+
+def _cell_to_policy(cell) -> comm_mod.Chain:
+    """One grid cell -> a Chain. (v, mu) pairs and (v, mu, bits) triples
+    are shorthand for Censor / Censor+Quantize chains."""
+    if isinstance(cell, (comm_mod.Chain, *comm_mod.STAGE_TYPES)):
+        return comm_mod.as_chain(cell)
+    if isinstance(cell, (tuple, list)):
+        cell = tuple(cell)
+        if cell and all(isinstance(x, Number) for x in cell):
+            if len(cell) == 2:
+                v, mu = cell
+                return comm_mod.Chain((comm_mod.Censor(float(v),
+                                                       float(mu)),))
+            if len(cell) == 3:
+                v, mu, bits = cell
+                return comm_mod.Chain((comm_mod.Censor(float(v), float(mu)),
+                                       comm_mod.Quantize(float(bits))))
+            raise ValueError(
+                f"numeric grid cells must be (v, mu) or (v, mu, bits), "
+                f"got {cell!r}")
+        return comm_mod.as_chain(cell)  # a sequence of stages
+    try:
+        return comm_mod.as_chain(cell)  # CensorSchedule, None, ...
+    except TypeError:
+        raise ValueError(
+            f"not a sweepable policy cell: {cell!r}") from None
+
+
+def _stack_policies(policies: Sequence[comm_mod.Chain]):
+    """Stack same-structure chains leaf-wise into one vmappable pytree."""
+    structures = {jax.tree.structure(p) for p in policies}
+    if len(structures) != 1:
+        raise ValueError(
+            "all sweep cells must share one policy structure (same stages "
+            f"in the same order); got {len(structures)} distinct "
+            "structures — mixing e.g. censor-only and censor+quantize "
+            "cells would need separate compiled programs")
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+        *policies)
 
 
 def _grid_from_configs(configs: Sequence[FitConfig]):
     base = configs[0]
     for c in configs[1:]:
-        if c.replace(censor_v=base.censor_v,
-                     censor_mu=base.censor_mu) != base:
+        if c.replace(censor_v=base.censor_v, censor_mu=base.censor_mu,
+                     comm=base.comm) != base:
             raise ValueError(
                 "sweep over a config list requires the configs to differ "
-                "only in (censor_v, censor_mu); differing cell: "
-                f"{c}")
-    return base, [c.resolved_censor for c in configs]
+                "only in their communication policy (censor_v/censor_mu/"
+                f"comm); differing cell: {c}")
+    return base, [c.resolved_comm for c in configs]
 
 
 def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
-          grid: Iterable[tuple[float, float]] | None = None, *,
+          grid: Iterable | None = None, *,
           problem: Problem | None = None) -> "SweepResult":
-    """Fit one problem under a grid of censor schedules in a single vmapped
-    scan.
+    """Fit one problem under a grid of communication policies in a single
+    vmapped scan.
 
-    configs_or_base — a base `FitConfig` (censor thresholds come from
-                      `grid`), or a sequence of FitConfigs that differ only
-                      in their censor thresholds.
-    grid            — iterable of (v, mu) pairs; required with a base config.
+    configs_or_base — a base `FitConfig` (policies come from `grid`), or a
+                      sequence of FitConfigs that differ only in their
+                      communication policy.
+    grid            — iterable of cells: (v, mu) pairs, (v, mu, bits)
+                      triples, or `core.comm` policies with one shared
+                      structure; required with a base config.
     problem         — an existing `admm.Problem`; None builds one from the
                       base config (and the per-cell models inherit its RFF
                       map automatically).
     """
     if isinstance(configs_or_base, FitConfig):
         if grid is None:
-            raise ValueError("sweep(base_config) requires a (v, mu) grid")
+            raise ValueError("sweep(base_config) requires a policy grid")
         base = configs_or_base
-        cells = [(float(v), float(mu)) for v, mu in grid]
+        cells = [_cell_to_policy(c) for c in grid]
     else:
         if grid is not None:
             raise ValueError("pass either a config list or a base config "
                              "with a grid, not both")
         base, cells = _grid_from_configs(list(configs_or_base))
     if not cells:
-        raise ValueError("empty censor grid")
+        raise ValueError("empty policy grid")
     if base.backend != "simulator":
         raise ValueError(
             "sweep vmaps the in-process simulator loop; run backend="
@@ -98,30 +147,37 @@ def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
 
     ctx = SolveContext.from_config(base)
     host_aux = solver.prepare_host(problem, ctx)
-    state0 = solver.init_state(problem, ctx)
-    censors = jnp.asarray(cells, jnp.float32)           # (G, 2)
+    policies = _stack_policies(cells)
 
-    states, history = _sweep_scan(solver, problem, ctx, host_aux, state0,
-                                  censors, num_iters=base.resolved_iters)
+    states, history = _sweep_scan(solver, problem, ctx, host_aux, policies,
+                                  num_iters=base.resolved_iters)
     thetas = jax.vmap(solver.theta_of)(states)          # (G, N, D)
+    censors = jnp.asarray(
+        [FitConfig(krr=base.krr, comm=c).resolved_censor for c in cells],
+        jnp.float32)
     return SweepResult(config=base, censors=censors, thetas=thetas,
-                       history=history, rff_params=rff_params)
+                       history=history, rff_params=rff_params,
+                       policies=tuple(cells))
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """G censor-schedule cells fitted on one problem, ready to compare."""
+    """G policy cells fitted on one problem, ready to compare."""
 
     config: FitConfig
     censors: jax.Array                  # (G, 2): [v, mu] per cell
     thetas: jax.Array                   # (G, N, D) final per-agent params
     history: dict[str, jax.Array]       # each (G, num_iters)
     rff_params: Any = None
+    policies: tuple = ()                # (G,) core.comm.Chain per cell
 
     def __len__(self) -> int:
-        return self.censors.shape[0]
+        return self.thetas.shape[0]
 
     def cell_config(self, i: int) -> FitConfig:
+        if self.policies:
+            return self.config.replace(comm=self.policies[i],
+                                       censor_v=None, censor_mu=None)
         v, mu = (float(x) for x in self.censors[i])
         return self.config.replace(censor_v=v, censor_mu=mu)
 
@@ -147,7 +203,7 @@ class SweepResult:
                  backend: str = "ref",
                  rff_params=None) -> dict[str, jax.Array]:
         """Per-cell held-out metrics: test_mse (G,), final train_mse (G,),
-        final cumulative comms (G,).
+        final cumulative comms (G,) and bits (G,).
 
         The test set is featurized ONCE and scored against the stacked
         (G, N, D) thetas — not once per cell (every cell shares the same
@@ -164,20 +220,35 @@ class SweepResult:
             preds = jnp.einsum("sd,gd->gs", phi, theta_bar)
         mses = jnp.mean((y[None] - preds) ** 2,
                         axis=tuple(range(1, preds.ndim)))
-        return {"test_mse": mses,
-                "train_mse": self.history["train_mse"][:, -1],
-                "comms": self.history["comms"][:, -1]}
+        out = {"test_mse": mses,
+               "train_mse": self.history["train_mse"][:, -1],
+               "comms": self.history["comms"][:, -1]}
+        if "bits" in self.history:
+            out["bits"] = self.history["bits"][:, -1]
+        return out
 
     def select(self, x: jax.Array, y: jax.Array, *,
                max_mse_gap: float = 0.01,
                rff_params=None) -> tuple[int, KernelModel]:
-        """The paper's operating-point rule: among cells whose test MSE is
-        within `max_mse_gap` (relative) of the best cell, pick the one that
-        transmitted least. Returns (cell index, its KernelModel)."""
+        """The paper's operating-point rule, extended to the bits axis:
+        among cells whose test MSE is within `max_mse_gap` (relative) of
+        the best cell, pick the one that paid the fewest cumulative bits;
+        ties break on fewest transmissions, then on the lowest cell index
+        (deterministic across runs and grid orderings of equal cells)."""
         ev = self.evaluate(x, y, rff_params=rff_params)
-        mses, comms = ev["test_mse"], ev["comms"]
+        mses = ev["test_mse"]
+        comms = ev["comms"]
+        bits = ev.get("bits", ev["comms"])
         best = float(jnp.min(mses))
-        ok = mses <= best * (1.0 + max_mse_gap) + 1e-12
-        comms_masked = jnp.where(ok, comms, jnp.inf)
-        idx = int(jnp.argmin(comms_masked))
+        cutoff = best * (1.0 + max_mse_gap) + 1e-12
+        candidates = [(float(bits[i]), float(comms[i]), i)
+                      for i in range(len(self))
+                      if float(mses[i]) <= cutoff]
+        if not candidates:
+            raise ValueError(
+                "no sweep cell qualifies for selection — every test MSE is "
+                f"non-finite or above the cutoff ({cutoff!r}); the fits "
+                "likely diverged (check rho / learning rates): "
+                f"test_mse={np.asarray(mses)!r}")
+        idx = min(candidates)[2]
         return idx, self.model(idx, rff_params)

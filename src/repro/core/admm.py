@@ -28,9 +28,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import comm as comm_mod
 from repro.core import losses as losses_mod
-from repro.core.censor import CensorSchedule, censor_decision, masked_broadcast
-from repro.core.graph import Graph
+from repro.core.censor import CensorSchedule
+from repro.core.graph import Graph, TopologySchedule
 
 
 class COKEState(NamedTuple):
@@ -41,6 +42,8 @@ class COKEState(NamedTuple):
     gamma: jax.Array      # (N, D) local dual variables
     step: jax.Array       # scalar iteration counter k
     comms: jax.Array      # scalar cumulative number of transmissions
+    comm: comm_mod.CommState = comm_mod.CommState(
+        bits=jnp.zeros((0,), jnp.float32))  # policy state (per-agent bits)
 
 
 @partial(
@@ -91,11 +94,18 @@ def make_problem(
     )
 
 
-def init_state(problem: Problem) -> COKEState:
-    """theta^0 = theta_hat^0 = gamma^0 = 0 (Algorithms 1/2)."""
+def init_state(problem: Problem, policy=None) -> COKEState:
+    """theta^0 = theta_hat^0 = gamma^0 = 0 (Algorithms 1/2).
+
+    policy — the communication policy whose persistent state rides in the
+    returned COKEState (None = empty chain; `coke_step` re-initializes a
+    mismatched structure for eager legacy callers).
+    """
     N, D = problem.num_agents, problem.feature_dim
     z = jnp.zeros((N, D), problem.feats.dtype)
-    return COKEState(z, z, z, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    return COKEState(z, z, z, jnp.zeros((), jnp.int32),
+                     jnp.zeros((), jnp.int32),
+                     comm_mod.as_chain(policy).init_state(N))
 
 
 # --------------------------------------------------------------------------
@@ -116,14 +126,17 @@ def _ridge_factors(problem: Problem):
     return jax.vmap(factor)(problem.feats, deg)
 
 
-def _primal_closed_form(problem: Problem, chol, gamma, theta_ref, nbr_sum):
+def _primal_closed_form(problem: Problem, chol, gamma, theta_ref, nbr_sum,
+                        deg=None):
     """Solve (21a) exactly per agent via the prefactored Cholesky system.
 
     theta_ref / nbr_sum: the (theta_hat_i, sum_n theta_hat_n) pair; DKLA
-    passes (theta_i, sum_n theta_n).
+    passes (theta_i, sum_n theta_n). deg overrides problem.degrees for
+    time-varying topologies (the chol factors must match).
     """
     N, Ti, D = problem.feats.shape
-    deg = problem.degrees
+    if deg is None:
+        deg = problem.degrees
 
     def solve(phi, y, L, g, t_ref, nb, d_i):
         rhs = (2.0 / Ti) * phi.T @ y - g + problem.rho * (d_i * t_ref + nb)
@@ -135,11 +148,12 @@ def _primal_closed_form(problem: Problem, chol, gamma, theta_ref, nbr_sum):
 
 
 def _primal_gradient(problem: Problem, inner_steps: int, inner_lr: float,
-                     theta0, gamma, theta_ref, nbr_sum):
+                     theta0, gamma, theta_ref, nbr_sum, deg=None):
     """Inexact (21a) for general convex losses: `inner_steps` GD steps on the
     augmented local objective."""
     N = problem.num_agents
-    deg = problem.degrees
+    if deg is None:
+        deg = problem.degrees
 
     def aug(theta_i, phi, y, g, t_ref, nb, d_i):
         r = losses_mod.local_empirical_risk(theta_i, phi, y,
@@ -164,36 +178,53 @@ def _primal_gradient(problem: Problem, inner_steps: int, inner_lr: float,
 
 def coke_step(
     problem: Problem,
-    schedule: CensorSchedule,
+    policy,
     state: COKEState,
     chol: jax.Array | None = None,
     inner_steps: int = 50,
     inner_lr: float = 0.1,
+    topology: TopologySchedule | None = None,
 ) -> COKEState:
     """One iteration of Algorithm 2 for every agent.
 
-    With schedule.v == 0 this is exactly Algorithm 1 (DKLA): the censor test
-    ||theta_hat - theta|| >= 0 always passes and theta_hat == theta.
+    policy — a `core.comm` policy (Chain / stage / CensorSchedule / None):
+    the broadcast step is `policy.apply(theta, theta_hat_prev, k)`, which
+    covers the paper's censoring (Censor), QC-ODKLA-style quantization
+    (Quantize) and unreliable links (Drop). A CensorSchedule with v == 0
+    (or an empty Chain) is exactly Algorithm 1 (DKLA).
+
+    topology — optional time-varying graph schedule; iteration k runs on
+    `topology.at(k)`. With the closed-form primal, pass the per-graph
+    Cholesky stack (M, N, D, D) as `chol` and the step selects the factor
+    matching the active graph.
     """
-    A = problem.adjacency
+    chain = comm_mod.as_chain(policy)
+    k = state.step + 1
+    if topology is None:
+        A, deg = problem.adjacency, problem.degrees
+    else:
+        A = topology.at(k)
+        deg = jnp.sum(A, axis=1)
+        if chol is not None and chol.ndim == 4:
+            chol = chol[topology.index(k)]
     nbr_sum_hat = A @ state.theta_hat  # (N, D): sum_n theta_hat_n
 
     if problem.loss == "quadratic" and chol is not None:
         theta = _primal_closed_form(problem, chol, state.gamma,
-                                    state.theta_hat, nbr_sum_hat)
+                                    state.theta_hat, nbr_sum_hat, deg)
     else:
         theta = _primal_gradient(problem, inner_steps, inner_lr,
                                  state.theta, state.gamma,
-                                 state.theta_hat, nbr_sum_hat)
+                                 state.theta_hat, nbr_sum_hat, deg)
 
-    k = state.step + 1
-    h_k = schedule(k).astype(theta.dtype)
-    send = censor_decision(theta, state.theta_hat, h_k)
-    theta_hat = masked_broadcast(theta, state.theta_hat, send)
+    # communication: censor / quantize / drop, with stale-value fallback
+    comm_state = chain.ensure_state(state.comm, theta.shape[0])
+    theta_hat, send, comm_state = chain.apply(theta, state.theta_hat, k,
+                                              comm_state)
 
     # Dual update (21b): gamma_i += rho * sum_n (theta_hat_i - theta_hat_n)
-    deg = problem.degrees[:, None]
-    gamma = state.gamma + problem.rho * (deg * theta_hat - A @ theta_hat)
+    gamma = state.gamma + problem.rho * (deg[:, None] * theta_hat
+                                         - A @ theta_hat)
 
     return COKEState(
         theta=theta,
@@ -201,6 +232,7 @@ def coke_step(
         gamma=gamma,
         step=k,
         comms=state.comms + jnp.sum(send.astype(jnp.int32)),
+        comm=comm_state,
     )
 
 
@@ -222,7 +254,7 @@ def _run(
     """Run COKE (or DKLA when schedule.v == 0) for `num_iters` iterations,
     recording the paper's evaluation metrics (MSE(k), cumulative comms)."""
     chol = _ridge_factors(problem) if problem.loss == "quadratic" else None
-    state0 = init_state(problem)
+    state0 = init_state(problem, policy=schedule)
 
     def metrics(state: COKEState):
         preds = jnp.einsum("ntd,nd->nt", problem.feats, state.theta)

@@ -30,9 +30,10 @@ class CensorSchedule:
     def __call__(self, k: jax.Array | int) -> jax.Array:
         return jnp.asarray(self.v) * jnp.asarray(self.mu) ** k
 
-    @property
-    def enabled(self) -> bool:
-        return self.v > 0.0
+    # NOTE: there is deliberately no `enabled` property here. v is traced
+    # through the compiled fit loop, so a static `v > 0` check is at best
+    # dead and at worst a silent lie under tracing; enablement is structural
+    # — a policy censors iff it contains a Censor stage (core.comm.censored).
 
 
 def censor_decision(
@@ -49,5 +50,33 @@ def censor_decision(
 def masked_broadcast(
     theta: jax.Array, theta_hat_prev: jax.Array, send: jax.Array
 ) -> jax.Array:
-    """theta_hat^k = theta^k where transmitted, else the stale copy."""
+    """theta_hat^k = theta^k where transmitted, else the stale copy.
+
+    theta / theta_hat_prev: (..., D) with matching shape and dtype;
+    send: boolean (...,) — one decision per agent, masking the trailing
+    feature axis wholesale (an agent transmits its full vector or nothing).
+    """
+    theta = jnp.asarray(theta)
+    theta_hat_prev = jnp.asarray(theta_hat_prev)
+    send = jnp.asarray(send)
+    if theta.ndim < 1:
+        raise ValueError(
+            f"masked_broadcast needs a trailing feature axis; got scalar "
+            f"theta of shape {theta.shape}")
+    if theta.shape != theta_hat_prev.shape:
+        raise ValueError(
+            f"theta {theta.shape} and theta_hat_prev "
+            f"{theta_hat_prev.shape} must match")
+    if theta.dtype != theta_hat_prev.dtype:
+        raise ValueError(
+            f"theta dtype {theta.dtype} != theta_hat_prev dtype "
+            f"{theta_hat_prev.dtype}: a silent upcast would desynchronize "
+            "the replicas' broadcast values")
+    if send.shape != theta.shape[:-1]:
+        raise ValueError(
+            f"send {send.shape} must be theta's batch shape "
+            f"{theta.shape[:-1]} (one decision per agent, not per "
+            "coordinate)")
+    if send.dtype != jnp.bool_:
+        raise ValueError(f"send must be boolean, got {send.dtype}")
     return jnp.where(send[..., None], theta, theta_hat_prev)

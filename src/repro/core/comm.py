@@ -1,0 +1,311 @@
+"""Composable communication policies — the communication *rule* as a
+first-class axis of the API, decoupled from the solvers.
+
+COKE's contribution is a rule about *when* to transmit (censoring); QC-ODKLA
+(Xu et al., 2022) shows it composes with *what* to transmit (quantized
+innovations); unreliable networks add *whether the link carries it* (drops).
+This module expresses all three as stages of one pipeline over a broadcast
+message:
+
+    policy = Chain([Censor(v=0.5, mu=0.97),   # Eq. 19-20: h(k) = v mu^k
+                    Quantize(bits=4),         # stochastic b-bit innovations
+                    Drop(p=0.05)])            # Bernoulli link failures
+
+Each stage implements the protocol
+
+    init_state(num_agents)        -> persistent per-stage pytree state
+    transform(msg, state, k)      -> (msg, state)
+
+and a `Chain` runs the message through every stage, finalizes the masked
+broadcast (stale-value fallback), and accounts the **bits** each transmitter
+paid — the cost metric the accuracy-vs-bits tradeoff curves are drawn in.
+All numeric stage parameters (v, mu, bits, p) are pytree *data*, so policy
+grids trace through one compiled fit loop and `sweep()` can vmap over
+stacked policies.
+
+Semantics (bulk-synchronous value-masking, see DESIGN.md §3):
+  * `send` is the transmitter's decision — a censored agent pays nothing;
+  * `delivered` models the network — a dropped broadcast was *paid for* by
+    the transmitter but receivers keep the stale value (per-broadcast drops:
+    the agent's whole round is lost, matching the one-theta_hat-per-agent
+    state both the simulator and the ring runtime carry);
+  * receivers adopt `payload` (possibly quantized) iff send AND delivered.
+
+With `Chain([Censor(v, mu), Quantize(bits=inf), Drop(p=0)])` every stage is
+exactly the identity extension of the paper's rule, and trajectories are
+bit-identical to COKE (pinned in tests/test_comm.py and tests/test_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.censor import (CensorSchedule, censor_decision,
+                               masked_broadcast)
+
+#: uncompressed payload precision: float32 coordinates
+FP_BITS = 32.0
+
+
+class Msg(NamedTuple):
+    """One broadcast round in flight through the policy pipeline."""
+
+    payload: jax.Array         # (N, D) values receivers adopt if delivered
+    prev: jax.Array            # (N, D) stale broadcast the receivers hold
+    send: jax.Array            # (N,) bool: transmitter decisions (paid)
+    delivered: jax.Array       # (N,) bool: links that carried the message
+    bits_per_value: jax.Array  # scalar f32: per-coordinate payload width
+    overhead_bits: jax.Array   # scalar f32: per-message header (e.g. scale)
+
+
+class CommState(NamedTuple):
+    """Persistent policy state threaded through the fit loop's scan.
+
+    bits is float32, not int32: a 100M-param broadcast is 3.2e9 bits — one
+    step would overflow int32, while f32 stays exact through 2^24 and keeps
+    ~1e-7 relative accuracy at deep-net scales (and both backends compute
+    it identically, so cross-backend equality tests remain exact)."""
+
+    bits: jax.Array     # (N,) float32 cumulative bits paid by each agent
+    stages: tuple = ()  # per-stage persistent states (matches Chain.stages)
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("v", "mu"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class Censor:
+    """The CO in COKE: transmit iff ||payload - prev|| >= v * mu^k."""
+
+    v: float = 1.0
+    mu: float = 0.95
+
+    def init_state(self, num_agents: int):
+        return ()
+
+    def transform(self, msg: Msg, state, k) -> tuple[Msg, tuple]:
+        h_k = (jnp.asarray(self.v) * jnp.asarray(self.mu) ** k).astype(
+            msg.payload.dtype)
+        send = censor_decision(msg.payload, msg.prev, h_k)
+        return msg._replace(send=msg.send & send), state
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("bits",), meta_fields=("seed", "stochastic"))
+@dataclasses.dataclass(frozen=True)
+class Quantize:
+    """The Q in QC-ODKLA: b-bit uniform quantization of the *innovation*
+    (payload - prev), stochastically rounded (unbiased), with a per-agent
+    float32 scale shipped as message overhead. bits=inf is the exact
+    identity (full-precision payload, FP_BITS accounting)."""
+
+    bits: float = 8.0
+    seed: int = 0
+    stochastic: bool = True
+
+    def init_state(self, num_agents: int):
+        return ()
+
+    def transform(self, msg: Msg, state, k) -> tuple[Msg, tuple]:
+        b = jnp.asarray(self.bits, jnp.float32)
+        innov = msg.payload - msg.prev
+        levels = 2.0 ** (b - 1.0) - 1.0           # signed symmetric range
+        scale = jnp.max(jnp.abs(innov), axis=-1, keepdims=True)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        x = innov / safe * levels                 # in [-levels, levels]
+        if self.stochastic:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
+            lo = jnp.floor(x)
+            x = lo + (jax.random.uniform(key, x.shape) < (x - lo)).astype(
+                x.dtype)
+        else:
+            x = jnp.round(x)
+        deq = msg.prev + x / levels * safe
+        finite = jnp.isfinite(levels)             # bits=inf -> identity
+        return msg._replace(
+            payload=jnp.where(finite, deq, msg.payload),
+            bits_per_value=jnp.where(finite, b, msg.bits_per_value),
+            overhead_bits=msg.overhead_bits + jnp.where(finite, FP_BITS,
+                                                        0.0)), state
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("p",), meta_fields=("seed",))
+@dataclasses.dataclass(frozen=True)
+class Drop:
+    """Bernoulli(p) link failure per broadcast: the transmitter pays, the
+    receivers keep the stale value. p=0 is the exact identity."""
+
+    p: float = 0.0
+    seed: int = 1
+
+    def init_state(self, num_agents: int):
+        return ()
+
+    def transform(self, msg: Msg, state, k) -> tuple[Msg, tuple]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
+        keep = jax.random.uniform(key, msg.delivered.shape) >= jnp.asarray(
+            self.p, jnp.float32)
+        return msg._replace(delivered=msg.delivered & keep), state
+
+
+STAGE_TYPES = (Censor, Quantize, Drop)
+
+
+# ---------------------------------------------------------------------------
+# Chain: the composed policy
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("stages",), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class Chain:
+    """Ordered composition of stages; Chain(()) is the always-transmit
+    full-precision broadcast (DKLA's policy)."""
+
+    stages: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", tuple(self.stages))
+
+    def init_state(self, num_agents: int) -> CommState:
+        return CommState(
+            bits=jnp.zeros((num_agents,), jnp.float32),
+            stages=tuple(s.init_state(num_agents) for s in self.stages))
+
+    def ensure_state(self, state: CommState | None,
+                     num_agents: int) -> CommState:
+        """Re-initialize per-stage states when `state` was built for a
+        different chain structure or agent count (legacy eager callers);
+        preserves the cumulative bits when their shape still fits. A no-op
+        for matching structures, so scan carries stay stable."""
+        if state is None:
+            return self.init_state(num_agents)
+        if state.bits.shape != (num_agents,):
+            return self.init_state(num_agents)
+        if len(state.stages) != len(self.stages):
+            return CommState(bits=state.bits, stages=tuple(
+                s.init_state(num_agents) for s in self.stages))
+        return state
+
+    def apply(self, theta: jax.Array, prev: jax.Array, k,
+              state: CommState) -> tuple[jax.Array, jax.Array, CommState]:
+        """Run one broadcast round: (N, D) candidate values against the
+        (N, D) stale copies. Returns (theta_hat, send, new_state)."""
+        num_agents = theta.shape[0]
+        dim = theta.shape[-1]
+        msg = Msg(payload=theta, prev=prev,
+                  send=jnp.ones((num_agents,), bool),
+                  delivered=jnp.ones((num_agents,), bool),
+                  bits_per_value=jnp.asarray(FP_BITS, jnp.float32),
+                  overhead_bits=jnp.zeros((), jnp.float32))
+        sstates = []
+        for stage, ss in zip(self.stages, state.stages):
+            msg, ss = stage.transform(msg, ss, k)
+            sstates.append(ss)
+        effective = msg.send & msg.delivered
+        theta_hat = masked_broadcast(msg.payload, prev, effective)
+        per_msg = dim * msg.bits_per_value + msg.overhead_bits
+        paid = jnp.where(msg.send, per_msg, 0.0)
+        return theta_hat, msg.send, CommState(bits=state.bits + paid,
+                                              stages=tuple(sstates))
+
+    def describe(self) -> str:
+        """Human/JSON-friendly one-liner, e.g. 'censor(v=0.5,mu=0.97)|
+        quantize(bits=4)|drop(p=0.05)'; 'broadcast' for the empty chain."""
+        if not self.stages:
+            return "broadcast"
+        parts = []
+        for s in self.stages:
+            if isinstance(s, Censor):
+                parts.append(f"censor(v={s.v},mu={s.mu})")
+            elif isinstance(s, Quantize):
+                parts.append(f"quantize(bits={s.bits})")
+            elif isinstance(s, Drop):
+                parts.append(f"drop(p={s.p})")
+            else:
+                parts.append(type(s).__name__.lower())
+        return "|".join(parts)
+
+
+def as_chain(policy) -> Chain:
+    """Normalize any policy spelling to a Chain: None -> always-broadcast,
+    a CensorSchedule -> the paper's rule, a bare stage -> singleton chain."""
+    if policy is None:
+        return Chain(())
+    if isinstance(policy, Chain):
+        return policy
+    if isinstance(policy, CensorSchedule):
+        return Chain((Censor(policy.v, policy.mu),))
+    if isinstance(policy, STAGE_TYPES):
+        return Chain((policy,))
+    if isinstance(policy, (list, tuple)):
+        return Chain(tuple(policy))
+    raise TypeError(
+        f"not a communication policy: {policy!r} (expected Chain, a stage, "
+        "a CensorSchedule, a stage sequence, or None)")
+
+
+def censored(policy) -> bool:
+    """Structural enablement: does the policy contain a Censor stage?
+    (Derived from the config, NOT from the float threshold — the thresholds
+    are traced and cannot drive Python control flow.)"""
+    return any(isinstance(s, Censor) for s in as_chain(policy).stages)
+
+
+def uncensored(chain: Chain) -> Chain:
+    """Same pytree structure with every censor threshold forced to zero —
+    the always-transmit (DKLA) variant of a policy. Keeping the structure
+    (rather than removing the stage) lets DKLA share compiled loops and
+    vmapped sweeps with COKE."""
+    return Chain(tuple(
+        dataclasses.replace(s, v=s.v * 0) if isinstance(s, Censor) else s
+        for s in chain.stages))
+
+
+# ---------------------------------------------------------------------------
+# Agent-stacked pytree adapter (the spmd/fused runtime's message form)
+# ---------------------------------------------------------------------------
+
+def flatten_agents(tree) -> tuple[jax.Array, list]:
+    """Agent-stacked pytree -> ((N, D_total) float32, leaves)."""
+    leaves = jax.tree.leaves(tree)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [leaf.reshape(n, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+    return flat, leaves
+
+
+def unflatten_agents(flat: jax.Array, leaves: list, treedef=None):
+    """Inverse of flatten_agents; returns leaves (or the tree if treedef)."""
+    out, off = [], 0
+    n = leaves[0].shape[0]
+    for leaf in leaves:
+        size = leaf.size // n
+        out.append(flat[:, off:off + size].reshape(leaf.shape))
+        off += size
+    if treedef is None:
+        return out
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_tree(chain: Chain, params_tree, prev_tree, k,
+               state: CommState):
+    """Chain.apply over agent-stacked pytrees: flatten both trees to
+    (N, D_total) float32, run the policy once over the concatenated
+    coordinates (one decision per agent, as in the flat form), unflatten
+    the resulting broadcast. Bit-compatible with the flat path when the
+    tree has a single (N, D) leaf — the cross-backend parity contract."""
+    flat, leaves = flatten_agents(params_tree)
+    prev_flat, _ = flatten_agents(prev_tree)
+    hat_flat, send, state = chain.apply(flat, prev_flat, k, state)
+    hat_tree = unflatten_agents(hat_flat, leaves,
+                                jax.tree.structure(params_tree))
+    return hat_tree, send, state

@@ -12,7 +12,10 @@ We provide:
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -123,6 +126,64 @@ def circulant(num_agents: int, offsets: tuple[int, ...]) -> Graph:
 def fully_connected(num_agents: int) -> Graph:
     adj = np.ones((num_agents, num_agents)) - np.eye(num_agents)
     return Graph(adjacency=adj)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("adjacencies",), meta_fields=("offsets",))
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """Time-varying consensus topology: iteration k (1-based) runs on graph
+    `adjacencies[(k - 1) % M]`, cycling through the M stacked graphs.
+
+    `offsets` is the circulant lowering for the spmd/fused ring runtime —
+    one offset tuple per graph, each realizable as `jnp.roll` shifts
+    (collective-permute). It is required by the spmd backend and None for
+    general (e.g. Erdos-Renyi) schedules, which only the simulator runs.
+
+    The adjacency stack is pytree *data*: the per-iteration graph selection
+    traces into the compiled fit loop (a gather, not a retrace).
+    """
+
+    adjacencies: jax.Array  # (M, N, N) float
+    offsets: tuple[tuple[int, ...], ...] | None = None
+
+    def __post_init__(self):
+        if self.offsets is not None:
+            object.__setattr__(
+                self, "offsets", tuple(tuple(o) for o in self.offsets))
+
+    @property
+    def num_graphs(self) -> int:
+        return self.adjacencies.shape[0]
+
+    @property
+    def num_agents(self) -> int:
+        return self.adjacencies.shape[-1]
+
+    def index(self, k) -> jax.Array:
+        """Graph index for (1-based, possibly traced) iteration k."""
+        return (k - 1) % self.num_graphs
+
+    def at(self, k) -> jax.Array:
+        """Adjacency in effect at iteration k."""
+        return self.adjacencies[self.index(k)]
+
+    @classmethod
+    def from_graphs(cls, graphs, offsets=None) -> "TopologySchedule":
+        """Stack a sequence of `Graph`s (equal N) into a schedule."""
+        adj = jnp.stack([jnp.asarray(g.adjacency, jnp.float32)
+                         for g in graphs])
+        return cls(adjacencies=adj, offsets=offsets)
+
+    @classmethod
+    def circulant_cycle(cls, num_agents: int,
+                        offset_variants) -> "TopologySchedule":
+        """Cycle through circulant graphs — the schedule form the spmd ring
+        runtime lowers (one `lax.switch` branch of permutes per variant)."""
+        variants = tuple(tuple(v) for v in offset_variants)
+        return cls.from_graphs(
+            [circulant(num_agents, off) for off in variants],
+            offsets=variants)
 
 
 def metropolis_weights(graph: Graph) -> np.ndarray:

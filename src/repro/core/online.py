@@ -20,8 +20,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.censor import CensorSchedule, censor_decision, \
-    masked_broadcast
+from repro.core import comm as comm_mod
 
 
 class OnlineState(NamedTuple):
@@ -30,21 +29,27 @@ class OnlineState(NamedTuple):
     gamma: jax.Array      # (N, D)
     step: jax.Array
     comms: jax.Array
+    comm: comm_mod.CommState = comm_mod.CommState(
+        bits=jnp.zeros((0,), jnp.float32))  # policy state (per-agent bits)
 
 
 def init_state(num_agents: int, feature_dim: int,
-               dtype=jnp.float32) -> OnlineState:
+               dtype=jnp.float32, policy=None) -> OnlineState:
     z = jnp.zeros((num_agents, feature_dim), dtype)
     return OnlineState(z, z, z, jnp.zeros((), jnp.int32),
-                       jnp.zeros((), jnp.int32))
+                       jnp.zeros((), jnp.int32),
+                       comm_mod.as_chain(policy).init_state(num_agents))
 
 
 def online_coke_step(state: OnlineState, feats: jax.Array,
                      labels: jax.Array, adjacency: jax.Array,
-                     schedule: CensorSchedule, *, lam: float, rho: float,
+                     schedule, *, lam: float, rho: float,
                      lr: float) -> tuple[OnlineState, jax.Array]:
     """One streaming round. feats: (N, b, D) fresh minibatch per agent;
-    labels: (N, b). Returns (new state, pre-update instantaneous MSE)."""
+    labels: (N, b). `schedule` accepts any `core.comm` policy (Chain /
+    stage / CensorSchedule / None). Returns (new state, pre-update
+    instantaneous MSE)."""
+    chain = comm_mod.as_chain(schedule)
     N = feats.shape[0]
     deg = jnp.sum(adjacency, axis=1)
 
@@ -62,24 +67,29 @@ def online_coke_step(state: OnlineState, feats: jax.Array,
     theta = state.theta - lr * g
 
     k = state.step + 1
-    send = censor_decision(theta, state.theta_hat,
-                           schedule(k).astype(theta.dtype))
-    theta_hat = masked_broadcast(theta, state.theta_hat, send)
+    comm_state = chain.ensure_state(state.comm, N)
+    theta_hat, send, comm_state = chain.apply(theta, state.theta_hat, k,
+                                              comm_state)
     gamma = state.gamma + rho * (deg[:, None] * theta_hat
                                  - adjacency @ theta_hat)
     return OnlineState(theta, theta_hat, gamma, k,
-                       state.comms + jnp.sum(send.astype(jnp.int32))), \
-        inst_mse
+                       state.comms + jnp.sum(send.astype(jnp.int32)),
+                       comm_state), inst_mse
 
 
 @partial(jax.jit, static_argnames=("schedule", "lam", "rho", "lr",
                                    "num_rounds", "batch_fn"))
 def run_stream(state: OnlineState, adjacency: jax.Array,
-               schedule: CensorSchedule, *, lam: float, rho: float,
+               schedule, *, lam: float, rho: float,
                lr: float, num_rounds: int,
                batch_fn: Callable[[jax.Array], tuple[jax.Array, jax.Array]]):
     """Run `num_rounds` of streaming COKE; batch_fn(k) -> (feats, labels)
     must be jit-traceable (e.g. slices of a pre-featurized stream)."""
+    # align the carried policy state with the schedule's chain before the
+    # scan, so legacy callers that init_state() without a policy still work
+    state = state._replace(comm=comm_mod.as_chain(schedule).ensure_state(
+        state.comm, state.theta.shape[0]))
+
     def body(state, k):
         feats, labels = batch_fn(k)
         state, mse = online_coke_step(state, feats, labels, adjacency,

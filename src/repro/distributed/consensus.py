@@ -20,6 +20,12 @@ Strategies:
               local optimizer steps between consensus rounds, which REMOVES
               the collectives from the lowered graph for censored steps
               (a real bytes saving visible in the roofline).
+
+The broadcast itself is governed by a `repro.core.comm` policy chain
+(censor / quantize / drop with bit-level accounting) passed to
+`consensus_update(comm=...)`; the legacy `censor_v`/`censor_mu` knobs map
+onto the equivalent censor-only chain. Time-varying circulant topologies
+(`offset_schedule`) cycle the permute pattern per iteration via lax.switch.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import comm as comm_mod
 from repro.optim.optimizers import (OptConfig, apply_updates,
                                     init_opt_state, opt_update)
 
@@ -37,7 +44,7 @@ from repro.optim.optimizers import (OptConfig, apply_updates,
 @partial(jax.tree_util.register_dataclass, data_fields=(),
          meta_fields=("strategy", "rho", "censor_v", "censor_mu",
                       "local_steps", "mix_weight", "track_gap", "offsets",
-                      "use_fused_kernel"))
+                      "offset_schedule", "use_fused_kernel"))
 @dataclasses.dataclass(frozen=True)
 class ConsensusConfig:
     strategy: str = "allreduce"  # allreduce | dkla | coke | cta | coke_et
@@ -53,6 +60,12 @@ class ConsensusConfig:
     # (1, k) = 2k-regular circulant — denser graphs raise sigma_min(S_-)
     # (faster consensus per Thm 2) at 2 extra permutes per added offset.
     offsets: tuple = (1,)
+    # time-varying topology: a tuple of offset tuples, cycled per iteration
+    # (graph (k-1) % M at step k — core.graph.TopologySchedule semantics).
+    # Each variant lowers to its own lax.switch branch of permutes. The
+    # neighbor cache is bypassed (the cached fetch belongs to the previous
+    # step's graph) and the fused kernel is unsupported (static degree).
+    offset_schedule: tuple | None = None
     # route the augmented-gradient + censor-norm computation through the
     # fused Pallas kernel (repro.kernels.coke_update) — the TPU fast path;
     # on this CPU host it runs in interpret mode (tests assert equality).
@@ -65,6 +78,14 @@ class ConsensusConfig:
     @property
     def is_admm(self) -> bool:
         return self.strategy in ("dkla", "coke", "coke_et")
+
+    def comm_chain(self) -> comm_mod.Chain:
+        """The legacy (censor_v, censor_mu) knobs as a core.comm policy —
+        what consensus_update runs when no explicit chain is passed."""
+        if self.strategy == "dkla":
+            return comm_mod.Chain(())
+        return comm_mod.Chain((comm_mod.Censor(self.censor_v,
+                                               self.censor_mu),))
 
 
 def needs_agent_stack(cfg: ConsensusConfig) -> bool:
@@ -83,14 +104,23 @@ def stack_params(params, num_agents: int):
 
 
 def init_consensus_state(ccfg: ConsensusConfig, opt_cfg: OptConfig,
-                         params_stacked) -> dict[str, Any]:
-    """State carried across steps alongside the stacked params."""
+                         params_stacked, comm=None) -> dict[str, Any]:
+    """State carried across steps alongside the stacked params.
+
+    comm — the communication policy chain whose persistent state (per-agent
+    cumulative bits, stage states) rides in the consensus state; None =
+    the legacy chain derived from ccfg (censor for coke, broadcast for
+    dkla). Must structurally match the chain later passed to
+    consensus_update."""
     state: dict[str, Any] = {
         "opt": jax.vmap(lambda p: init_opt_state(opt_cfg, p))(params_stacked),
         "step": jnp.zeros((), jnp.int32),
         "comms": jnp.zeros((), jnp.int32),
     }
     if ccfg.is_admm:
+        chain = ccfg.comm_chain() if comm is None else comm_mod.as_chain(comm)
+        num_agents = jax.tree.leaves(params_stacked)[0].shape[0]
+        state["comm"] = chain.init_state(num_agents)
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params_stacked)
         theta_hat = jax.tree.map(
@@ -125,6 +155,14 @@ def _ring_neighbors(tree, offsets: tuple = (1,)):
     return left, right
 
 
+def _scheduled_neighbors(tree, variants: tuple, idx):
+    """Neighbor fetch under a time-varying circulant schedule: one
+    lax.switch branch of permutes per offset variant, selected by the
+    (traced) graph index `idx`."""
+    branches = [partial(_ring_neighbors, offsets=off) for off in variants]
+    return jax.lax.switch(idx, branches, tree)
+
+
 def _agent_norms(diff_tree) -> jax.Array:
     """Per-agent l2 norm over all parameters: (N,)."""
     sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)),
@@ -138,11 +176,21 @@ def _agent_norms(diff_tree) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
-                     params, grads, state):
+                     params, grads, state, comm=None):
     """params/grads: agent-stacked pytrees (N, ...). Returns
-    (new_params, new_state, metrics)."""
+    (new_params, new_state, metrics).
+
+    comm — a core.comm policy chain governing the broadcast (censor /
+    quantize / drop); None = the legacy chain from ccfg's censor knobs.
+    Numeric chain parameters may be traced arrays: the policy is array
+    data, so threshold sweeps do not retrace the step."""
     step = state["step"] + 1
     metrics: dict[str, jax.Array] = {}
+    if ccfg.offset_schedule and ccfg.strategy not in ("dkla", "coke",
+                                                      "coke_et"):
+        raise ValueError(
+            "offset_schedule (time-varying topology) is implemented for "
+            f"the ADMM strategies, not {ccfg.strategy!r}")
 
     if ccfg.strategy == "cta":
         left, right = _ring_neighbors(params, ccfg.offsets)
@@ -162,19 +210,34 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
 
     # --- ADMM family (dkla / coke / coke_et) -------------------------------
     theta_hat, gamma = state["theta_hat"], state["gamma"]
-    # neighbors' theta_hat^{k-1}: served from the cache filled by the
-    # previous step's dual-update fetch — no permute here
-    left, right = state["nbr_left"], state["nbr_right"]
-    deg = ccfg.degree
+    chain = ccfg.comm_chain() if comm is None else comm_mod.as_chain(comm)
+    num_agents = jax.tree.leaves(params)[0].shape[0]
+    if ccfg.offset_schedule:
+        if ccfg.use_fused_kernel:
+            raise ValueError(
+                "the fused coke_update kernel bakes the graph degree in as "
+                "a static parameter; offset_schedule (time-varying "
+                "topology) requires use_fused_kernel=False")
+        variants = ccfg.offset_schedule
+        graph_idx = (step - 1) % len(variants)
+        degs = jnp.asarray([2.0 * len(v) for v in variants], jnp.float32)
+        deg = degs[graph_idx]
+        # the cached fetch belongs to the PREVIOUS step's graph — re-fetch
+        # theta_hat^{k-1} neighbors under the graph active at step k
+        left, right = _scheduled_neighbors(theta_hat, variants, graph_idx)
+    else:
+        deg = ccfg.degree
+        # neighbors' theta_hat^{k-1}: served from the cache filled by the
+        # previous step's dual-update fetch — no permute here
+        left, right = state["nbr_left"], state["nbr_right"]
 
     # inexact (21a): one optimizer step on the augmented Lagrangian gradient
     #   g_aug = g_local + 2 rho deg theta + gamma - rho (deg theta_hat + sum_n theta_hat_n)
-    fused_xi_norm = None
     if ccfg.use_fused_kernel:
         from repro.kernels.coke_update.ops import coke_update_pytree
         nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
         half = jax.tree.map(lambda x: 0.5 * x, nbr_sum)
-        g_aug, fused_xi_norm = coke_update_pytree(
+        g_aug, _ = coke_update_pytree(
             params, theta_hat, gamma, grads, half, half,
             rho=ccfg.rho, deg=deg)
     else:
@@ -190,32 +253,30 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     )(g_aug, state["opt"], params)
     new_params = apply_updates(params, updates)
 
-    # censoring (19)/(20)
-    if ccfg.strategy == "dkla":
-        send = jnp.ones((jax.tree.leaves(params)[0].shape[0],), bool)
-    else:
-        xi = jax.tree.map(lambda th, p: th - p.astype(jnp.float32),
-                          theta_hat, new_params)
-        h_k = ccfg.censor_v * ccfg.censor_mu ** step.astype(jnp.float32)
-        send = _agent_norms(xi) >= h_k
-    new_theta_hat = jax.tree.map(
-        lambda th, p: jnp.where(
-            send.reshape((-1,) + (1,) * (p.ndim - 1)),
-            p.astype(jnp.float32), th),
-        theta_hat, new_params)
+    # communication policy (censor (19)/(20) / quantize / drop) over the
+    # flattened agent-stacked message, with stale-value fallback — shared
+    # decision code with the simulator (cross-backend parity contract)
+    comm_state = chain.ensure_state(state.get("comm"), num_agents)
+    new_theta_hat, send, comm_state = comm_mod.apply_tree(
+        chain, new_params, theta_hat, step, comm_state)
 
     # dual (21b) with theta_hat^k values — the step's ONLY neighbor fetch
-    # (2 permutes); cached for the next step's primal update
-    hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
+    # on a static topology (2 permutes); cached for the next primal update
+    if ccfg.offset_schedule:
+        hat_l, hat_r = _scheduled_neighbors(new_theta_hat, variants,
+                                            graph_idx)
+    else:
+        hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
     new_gamma = jax.tree.map(
         lambda gm, th, l, r: gm + ccfg.rho * (deg * th - l - r),
         gamma, new_theta_hat, hat_l, hat_r)
 
     metrics["send_frac"] = jnp.mean(send.astype(jnp.float32))
+    metrics["bits"] = jnp.sum(comm_state.bits)
     new_state = dict(state, opt=opt, step=step,
                      comms=state["comms"] + jnp.sum(send.astype(jnp.int32)),
                      theta_hat=new_theta_hat, gamma=new_gamma,
-                     nbr_left=hat_l, nbr_right=hat_r)
+                     nbr_left=hat_l, nbr_right=hat_r, comm=comm_state)
     return new_params, new_state, metrics
 
 

@@ -9,39 +9,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# the same (N, D_total) agent-stacked flattening the comm-policy layer
+# applies to broadcasts — one layout, shared by kernel and policy
+from repro.core.comm import flatten_agents, unflatten_agents
 from repro.kernels.coke_update.coke_update import coke_fused_update
-
-
-def _flatten_stacked(tree):
-    leaves = jax.tree.leaves(tree)
-    N = leaves[0].shape[0]
-    flat = jnp.concatenate(
-        [l.reshape(N, -1).astype(jnp.float32) for l in leaves], axis=1)
-    return flat, leaves
-
-
-def _unflatten_like(flat, leaves):
-    out, off = [], 0
-    N = leaves[0].shape[0]
-    for l in leaves:
-        size = l.size // N
-        out.append(flat[:, off:off + size].reshape(l.shape))
-        off += size
-    return out
 
 
 def coke_update_pytree(params, theta_hat, gamma, grads, left, right, *,
                        rho: float, deg: float = 2.0, interpret: bool = True):
     """Agent-stacked pytrees -> (g_aug pytree fp32, xi_norm (N,))."""
-    th, leaves = _flatten_stacked(params)
-    hat, _ = _flatten_stacked(theta_hat)
-    gm, _ = _flatten_stacked(gamma)
-    g, _ = _flatten_stacked(grads)
-    lf, _ = _flatten_stacked(left)
-    rt, _ = _flatten_stacked(right)
+    th, leaves = flatten_agents(params)
+    hat, _ = flatten_agents(theta_hat)
+    gm, _ = flatten_agents(gamma)
+    g, _ = flatten_agents(grads)
+    lf, _ = flatten_agents(left)
+    rt, _ = flatten_agents(right)
     gaug, xisq = coke_fused_update(th, hat, gm, g, lf, rt, rho=rho, deg=deg,
                                    interpret=interpret)
-    gaug_leaves = _unflatten_like(gaug, leaves)
-    treedef = jax.tree.structure(params)
-    return (jax.tree_util.tree_unflatten(treedef, gaug_leaves),
+    return (unflatten_agents(gaug, leaves, jax.tree.structure(params)),
             jnp.sqrt(xisq))

@@ -76,15 +76,19 @@ def make_allreduce_step(cfg: ModelConfig, opt_cfg: OptConfig,
 
 
 def make_consensus_step(cfg: ModelConfig, opt_cfg: OptConfig,
-                        ccfg: cns.ConsensusConfig, num_agents: int):
-    """Batch layout: every leaf gains a leading agent axis (N, ...)."""
+                        ccfg: cns.ConsensusConfig, num_agents: int,
+                        comm=None):
+    """Batch layout: every leaf gains a leading agent axis (N, ...).
+
+    comm — optional core.comm policy chain governing the broadcast
+    (censor / quantize / drop); None = ccfg's legacy censor knobs."""
 
     def init_fn(key):
         params = model_lib.init_params(cfg, key)
         stacked = cns.stack_params(params, num_agents)
         return {"params": stacked,
                 "consensus": cns.init_consensus_state(ccfg, opt_cfg,
-                                                      stacked)}
+                                                      stacked, comm=comm)}
 
     def _local_grads(params_stacked, batch_stacked):
         def local(p, b):
@@ -97,7 +101,8 @@ def make_consensus_step(cfg: ModelConfig, opt_cfg: OptConfig,
     def step_fn(state, batch):
         loss, grads = _local_grads(state["params"], batch)
         params, cstate, metrics = cns.consensus_update(
-            ccfg, opt_cfg, state["params"], grads, state["consensus"])
+            ccfg, opt_cfg, state["params"], grads, state["consensus"],
+            comm=comm)
         metrics = {"loss": loss, "comms": cstate["comms"], **metrics}
         if ccfg.track_gap:  # full-param all-reduce; off in the hot path
             metrics["consensus_gap"] = cns.consensus_gap(params)
@@ -115,11 +120,12 @@ def make_consensus_step(cfg: ModelConfig, opt_cfg: OptConfig,
 
 def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
                     ccfg: cns.ConsensusConfig | None = None,
-                    num_agents: int = 1, microbatches: int = 1):
+                    num_agents: int = 1, microbatches: int = 1,
+                    comm=None):
     if ccfg is None or ccfg.strategy == "allreduce":
         init_fn, step_fn = make_allreduce_step(cfg, opt_cfg, microbatches)
         return init_fn, step_fn, None
-    return make_consensus_step(cfg, opt_cfg, ccfg, num_agents)
+    return make_consensus_step(cfg, opt_cfg, ccfg, num_agents, comm=comm)
 
 
 def agent_batch(batch: dict, num_agents: int) -> dict:

@@ -1,8 +1,10 @@
 """Censoring primitives (Eqs. 19-20) — property-based."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis_compat import given, hnp, settings, st
 
+from repro.core import comm
 from repro.core.censor import (CensorSchedule, censor_decision,
                                masked_broadcast)
 
@@ -30,6 +32,46 @@ def test_masked_broadcast_selects_rows(theta, hat, send):
                                       theta[i] if send[i] else hat[i])
 
 
+def test_masked_broadcast_rejects_bad_shapes_and_dtypes():
+    theta = jnp.ones((3, 4))
+    hat = jnp.ones((3, 4))
+    send = jnp.ones((3,), bool)
+    with pytest.raises(ValueError, match="scalar"):
+        masked_broadcast(jnp.ones(()), jnp.ones(()), jnp.ones((), bool))
+    with pytest.raises(ValueError, match="must match"):
+        masked_broadcast(theta, jnp.ones((3, 5)), send)
+    with pytest.raises(ValueError, match="dtype"):
+        masked_broadcast(theta, hat.astype(jnp.float16), send)
+    with pytest.raises(ValueError, match="batch shape"):
+        # a per-coordinate mask silently broadcasting over the trailing
+        # feature axis was the failure mode the guard exists for
+        masked_broadcast(theta, hat, jnp.ones((3, 4), bool))
+    with pytest.raises(ValueError, match="boolean"):
+        masked_broadcast(theta, hat, jnp.ones((3,), jnp.int32))
+
+
+@settings(deadline=None, max_examples=50)
+@given(hnp.arrays(np.float32, (5, 6), elements=st.floats(-3, 3, width=32)),
+       hnp.arrays(np.float32, (5, 6), elements=st.floats(-3, 3, width=32)),
+       st.floats(0.0, 4.0), st.integers(2, 8), st.floats(0.0, 1.0),
+       st.integers(1, 50))
+def test_policy_never_changes_unsent_coordinates(theta, hat, v, bits, p, k):
+    """Property: whatever the policy (censor x quantize x drop), an agent
+    whose broadcast was not sent-and-delivered keeps its stale value on
+    EVERY coordinate — censored updates never leak partial state."""
+    chain = comm.Chain((comm.Censor(v, 0.95), comm.Quantize(float(bits)),
+                        comm.Drop(p)))
+    state = chain.init_state(theta.shape[0])
+    out, send, _ = chain.apply(jnp.asarray(theta), jnp.asarray(hat),
+                               jnp.asarray(k, jnp.int32), state)
+    out = np.asarray(out)
+    changed = ~np.all(out == np.asarray(hat), axis=-1)
+    # a row only changes if the transmitter sent it...
+    assert not np.any(changed & ~np.asarray(send))
+    # ...and unchanged rows are the stale copy verbatim
+    np.testing.assert_array_equal(out[~changed], np.asarray(hat)[~changed])
+
+
 def test_schedule_nonincreasing_nonnegative():
     s = CensorSchedule(v=2.0, mu=0.9)
     vals = [float(s(k)) for k in range(50)]
@@ -39,8 +81,25 @@ def test_schedule_nonincreasing_nonnegative():
 
 def test_zero_threshold_always_sends():
     s = CensorSchedule(v=0.0)
-    assert not s.enabled
     theta = jnp.ones((3, 4))
     hat = jnp.ones((3, 4))  # no change at all
     send = censor_decision(theta, hat, s(10))
     assert bool(jnp.all(send))  # ||xi|| = 0 >= 0 -> transmit
+
+
+def test_enablement_is_structural_not_a_float_check():
+    """Satellite: CensorSchedule.enabled (a static `v > 0`) was deleted —
+    the thresholds are traced, so enablement must derive from the policy
+    STRUCTURE (a Censor stage being present), never from the float."""
+    assert not hasattr(CensorSchedule(v=0.0), "enabled")
+    assert not comm.censored(None)                       # broadcast
+    assert not comm.censored(comm.Chain(()))             # DKLA's policy
+    assert not comm.censored(comm.Quantize(4))           # compress-only
+    assert comm.censored(comm.Censor(0.5, 0.97))
+    # v == 0 still *structurally* censors (the test is in the loop; it
+    # just always passes) — exactly the traced-threshold semantics
+    assert comm.censored(comm.Chain((comm.Censor(0.0, 0.9),)))
+    assert comm.censored(CensorSchedule(0.0, 0.9))
+    # DKLA's view of a censored policy strips the thresholds, not the stage
+    dkla = comm.uncensored(comm.as_chain(comm.Censor(2.0, 0.99)))
+    assert comm.censored(dkla) and dkla.stages[0].v == 0.0

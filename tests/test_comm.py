@@ -1,0 +1,398 @@
+"""The composable communication layer: stage semantics, bit accounting,
+identity-chain bit-parity with plain COKE, time-varying topologies, and
+the (v, mu, bits) sweep axis with its deterministic operating-point rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Censor, Chain, Drop, FitConfig, KRRConfig, Quantize,
+                       TopologySchedule, build_problem, fit, sweep)
+from repro.core import comm
+from repro.core.graph import ring
+
+KRR = KRRConfig(num_agents=6, samples_per_agent=50, num_features=16,
+                lam=1e-2, rho=0.5, seed=0)
+BASE = FitConfig(krr=KRR, algorithm="coke", censor_v=0.5, censor_mu=0.97,
+                 num_iters=60)
+
+
+@pytest.fixture(scope="module")
+def built():
+    return build_problem(BASE)
+
+
+# ---------------------------------------------------------------------------
+# Stage semantics
+# ---------------------------------------------------------------------------
+
+def test_as_chain_normalizes_spellings():
+    from repro.core.censor import CensorSchedule
+    assert comm.as_chain(None).stages == ()
+    assert comm.as_chain(Censor(1.0, 0.9)).stages == (Censor(1.0, 0.9),)
+    assert comm.as_chain([Censor(1.0, 0.9), Drop(0.1)]).stages == (
+        Censor(1.0, 0.9), Drop(0.1))
+    assert comm.as_chain(CensorSchedule(0.3, 0.9)).stages == (
+        Censor(0.3, 0.9),)
+    with pytest.raises(TypeError, match="policy"):
+        comm.as_chain("censor")
+
+
+def test_empty_chain_broadcasts_full_precision():
+    theta = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    hat = jnp.zeros((3, 4))
+    chain = Chain(())
+    hat2, send, state = chain.apply(theta, hat, jnp.int32(1),
+                                    chain.init_state(3))
+    np.testing.assert_array_equal(np.asarray(hat2), np.asarray(theta))
+    assert bool(jnp.all(send))
+    # 4 float32 coordinates = 128 bits per agent
+    np.testing.assert_array_equal(np.asarray(state.bits), [128, 128, 128])
+
+
+def test_censored_agents_pay_nothing():
+    theta = jnp.zeros((4, 8))
+    theta = theta.at[0].set(10.0)   # only agent 0 moved
+    hat = jnp.zeros((4, 8))
+    chain = Chain((Censor(v=1.0, mu=1.0),))
+    hat2, send, state = chain.apply(theta, hat, jnp.int32(1),
+                                    chain.init_state(4))
+    np.testing.assert_array_equal(np.asarray(send), [True] + [False] * 3)
+    np.testing.assert_array_equal(np.asarray(state.bits),
+                                  [8 * 32, 0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(hat2[1:]),
+                                  np.asarray(hat[1:]))
+
+
+def test_quantize_infinite_bits_is_exact_identity():
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (5, 16))
+    hat = jax.random.normal(jax.random.fold_in(key, 1), (5, 16))
+    chain = Chain((Quantize(bits=float("inf")),))
+    hat2, _, state = chain.apply(theta, hat, jnp.int32(3),
+                                 chain.init_state(5))
+    np.testing.assert_array_equal(np.asarray(hat2), np.asarray(theta))
+    np.testing.assert_array_equal(np.asarray(state.bits),
+                                  np.full(5, 16 * 32))
+
+
+def test_quantize_is_unbiased_and_bounded():
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (4, 64))
+    hat = jnp.zeros((4, 64))
+    stage = Quantize(bits=4.0)
+    outs = []
+    for k in range(200):
+        msg = comm.Msg(theta, hat, jnp.ones((4,), bool),
+                       jnp.ones((4,), bool),
+                       jnp.asarray(32.0), jnp.zeros(()))
+        out, _ = stage.transform(msg, (), jnp.int32(k + 1))
+        outs.append(np.asarray(out.payload))
+    outs = np.stack(outs)
+    scale = np.abs(np.asarray(theta)).max(-1, keepdims=True)
+    step = scale / (2.0 ** 3 - 1)          # one quantization level
+    # stochastic rounding: each draw within one level of the true value
+    assert np.max(np.abs(outs - np.asarray(theta)[None])) <= step.max() + 1e-6
+    # and unbiased: the mean over draws converges to the true value
+    assert np.max(np.abs(outs.mean(0) - np.asarray(theta))) < 0.3 * step.max()
+
+
+def test_quantize_accounts_payload_plus_scale_overhead():
+    theta = jnp.ones((2, 16))
+    hat = jnp.zeros((2, 16))
+    chain = Chain((Quantize(bits=4.0),))
+    _, _, state = chain.apply(theta, hat, jnp.int32(1), chain.init_state(2))
+    np.testing.assert_array_equal(np.asarray(state.bits),
+                                  np.full(2, 16 * 4 + 32))
+
+
+def test_drop_pays_but_does_not_deliver():
+    theta = jnp.ones((400, 4))
+    hat = jnp.zeros((400, 4))
+    chain = Chain((Drop(p=0.5),))
+    hat2, send, state = chain.apply(theta, hat, jnp.int32(1),
+                                    chain.init_state(400))
+    delivered = np.all(np.asarray(hat2) == 1.0, axis=-1)
+    # every agent transmitted (and paid)...
+    assert bool(jnp.all(send))
+    np.testing.assert_array_equal(np.asarray(state.bits),
+                                  np.full(400, 4 * 32))
+    # ...but roughly half the broadcasts were lost (stale value kept)
+    assert 0.3 < delivered.mean() < 0.7
+    np.testing.assert_array_equal(np.asarray(hat2)[~delivered],
+                                  np.asarray(hat)[~delivered])
+
+
+def test_drop_is_deterministic_in_k_and_seed():
+    theta = jnp.ones((64, 4))
+    hat = jnp.zeros((64, 4))
+    def run(seed, k):
+        chain = Chain((Drop(p=0.5, seed=seed),))
+        out, _, _ = chain.apply(theta, hat, jnp.int32(k),
+                                chain.init_state(64))
+        return np.asarray(out)
+    np.testing.assert_array_equal(run(1, 7), run(1, 7))
+    assert not np.array_equal(run(1, 7), run(1, 8))
+    assert not np.array_equal(run(1, 7), run(2, 7))
+
+
+# ---------------------------------------------------------------------------
+# fit() integration: identity parity, deprecation shims, bits metric
+# ---------------------------------------------------------------------------
+
+def test_identity_chain_bit_identical_to_plain_coke(built):
+    """Acceptance: Chain([Censor(v, mu), Quantize(bits=inf), Drop(p=0)])
+    reproduces today's COKE trajectory bit-for-bit."""
+    plain = fit(BASE, problem=built.problem)
+    ident = fit(BASE.replace(
+        censor_v=None, censor_mu=None,
+        comm=Chain([Censor(0.5, 0.97), Quantize(bits=float("inf")),
+                    Drop(p=0.0)])), problem=built.problem)
+    for key in plain.history:
+        np.testing.assert_array_equal(np.asarray(plain.history[key]),
+                                      np.asarray(ident.history[key]),
+                                      err_msg=key)
+    np.testing.assert_array_equal(np.asarray(plain.theta),
+                                  np.asarray(ident.theta))
+
+
+def test_identity_chain_bit_identical_on_spmd_and_fused(ring6):
+    """Acceptance, distributed legs: the identity extension reproduces the
+    plain-COKE trajectory bit-for-bit on the ring runtime and the fused
+    Pallas path too."""
+    ident = Chain([Censor(0.3, 0.97), Quantize(bits=float("inf")),
+                   Drop(p=0.0)])
+    for backend in ("spmd", "fused"):
+        plain = fit(RING6.replace(backend=backend), problem=ring6.problem)
+        chained = fit(RING6.replace(backend=backend, censor_v=None,
+                                    censor_mu=None, comm=ident),
+                      problem=ring6.problem)
+        for key in plain.history:
+            np.testing.assert_array_equal(
+                np.asarray(plain.history[key]),
+                np.asarray(chained.history[key]),
+                err_msg=f"{backend}:{key}")
+        np.testing.assert_array_equal(np.asarray(plain.theta),
+                                      np.asarray(chained.theta),
+                                      err_msg=backend)
+
+
+def test_legacy_censor_knobs_map_onto_chain(built):
+    """Migration shim: censor_v/censor_mu IS comm=Chain([Censor(v, mu)])."""
+    legacy = fit(BASE, problem=built.problem)
+    chained = fit(BASE.replace(censor_v=None, censor_mu=None,
+                               comm=Chain([Censor(0.5, 0.97)])),
+                  problem=built.problem)
+    np.testing.assert_array_equal(np.asarray(legacy.theta),
+                                  np.asarray(chained.theta))
+    np.testing.assert_array_equal(np.asarray(legacy.bits),
+                                  np.asarray(chained.bits))
+    assert legacy.config.resolved_comm == chained.config.resolved_comm
+
+
+def test_comm_conflicts_with_legacy_knobs():
+    with pytest.raises(ValueError, match="censor_v"):
+        FitConfig(comm=Chain([Censor(0.5, 0.97)]), censor_v=0.5)
+    with pytest.raises(TypeError, match="policy"):
+        FitConfig(comm="quantize")
+
+
+def test_comm_unaware_solvers_reject_policies(built):
+    for algorithm in ("cta", "ridge_oracle"):
+        with pytest.raises(ValueError, match="comm"):
+            fit(BASE.replace(algorithm=algorithm,
+                             censor_v=None, censor_mu=None,
+                             comm=Chain([Drop(p=0.5)])),
+                problem=built.problem)
+
+
+def test_bits_metric_consistent_with_comms(built):
+    r = fit(BASE, problem=built.problem)
+    # censor-only full-precision policy: bits == comms * D * 32 exactly
+    np.testing.assert_array_equal(
+        np.asarray(r.bits),
+        np.asarray(r.comms) * KRR.num_features * 32)
+    q = fit(BASE.replace(censor_v=None, censor_mu=None,
+                         comm=Chain([Censor(0.5, 0.97), Quantize(bits=4)])),
+            problem=built.problem)
+    # 4-bit payloads + one float32 scale per message
+    assert int(q.bits[-1]) == int(q.comms[-1]) * (KRR.num_features * 4 + 32)
+
+
+def test_quantized_coke_converges_under_drops(built):
+    r = fit(BASE.replace(censor_v=None, censor_mu=None, num_iters=150,
+                         comm=Chain([Censor(0.5, 0.97), Quantize(bits=6),
+                                     Drop(p=0.1)])),
+            problem=built.problem)
+    assert float(r.train_mse[-1]) < 2.5 * float(
+        fit(BASE.replace(num_iters=150),
+            problem=built.problem).train_mse[-1])
+
+
+def test_dkla_applies_compression_but_not_censoring(built):
+    r = fit(BASE.replace(algorithm="dkla", censor_v=None, censor_mu=None,
+                         comm=Chain([Censor(5.0, 0.999), Quantize(bits=8)]),
+                         num_iters=30), problem=built.problem)
+    # censor thresholds stripped -> every agent transmits every iteration
+    assert int(r.comms[-1]) == 30 * KRR.num_agents
+    # ...but the quantizer still applied: 8-bit payloads + scale overhead
+    assert int(r.bits[-1]) == 30 * KRR.num_agents * (
+        KRR.num_features * 8 + 32)
+
+
+# ---------------------------------------------------------------------------
+# Time-varying topology
+# ---------------------------------------------------------------------------
+
+RING6 = FitConfig(
+    krr=KRRConfig(num_agents=6, samples_per_agent=40, num_features=32,
+                  lam=1e-2, rho=0.1, seed=0),
+    graph="ring", algorithm="coke", censor_v=0.3, censor_mu=0.97,
+    num_iters=60, primal="gradient", inner_steps=1, inner_lr=0.05)
+
+
+@pytest.fixture(scope="module")
+def ring6():
+    return build_problem(RING6)
+
+
+def test_topology_schedule_cycles_graphs():
+    topo = TopologySchedule.circulant_cycle(6, [(1,), (1, 2)])
+    assert topo.num_graphs == 2 and topo.num_agents == 6
+    assert int(topo.index(1)) == 0 and int(topo.index(2)) == 1
+    assert int(topo.index(3)) == 0
+    np.testing.assert_array_equal(np.asarray(topo.at(3)),
+                                  np.asarray(topo.adjacencies[0]))
+
+
+def test_single_graph_schedule_matches_static(ring6):
+    static = fit(RING6, problem=ring6.problem)
+    sched = fit(RING6.replace(
+        topology=TopologySchedule.circulant_cycle(6, [(1,)])),
+        problem=ring6.problem)
+    np.testing.assert_allclose(np.asarray(static.theta),
+                               np.asarray(sched.theta), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(static.comms),
+                                  np.asarray(sched.comms))
+
+
+def test_time_varying_topology_simulator_spmd_parity(ring6):
+    cfg = RING6.replace(
+        topology=TopologySchedule.circulant_cycle(6, [(1,), (1, 2)]))
+    sim = fit(cfg, problem=ring6.problem)
+    spmd = fit(cfg.replace(backend="spmd"), problem=ring6.problem)
+    np.testing.assert_allclose(np.asarray(sim.theta),
+                               np.asarray(spmd.theta), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sim.comms),
+                                  np.asarray(spmd.comms))
+    np.testing.assert_array_equal(np.asarray(sim.bits),
+                                  np.asarray(spmd.bits))
+
+
+def test_time_varying_topology_closed_form_primal(ring6):
+    """The per-graph Cholesky stack: denser intermittent connectivity must
+    still converge (and not crash the prefactored path)."""
+    r = fit(RING6.replace(
+        primal="auto", inner_steps=50,
+        topology=TopologySchedule.circulant_cycle(6, [(1,), (1, 2)])),
+        problem=ring6.problem)
+    assert float(r.train_mse[-1]) < float(r.train_mse[0])
+
+
+def test_spmd_topology_requires_offsets_and_rejects_degenerate(ring6):
+    no_off = TopologySchedule.from_graphs([ring(6)])
+    with pytest.raises(ValueError, match="offsets"):
+        fit(RING6.replace(backend="spmd", topology=no_off),
+            problem=ring6.problem)
+    with pytest.raises(ValueError, match="degenerate"):
+        fit(RING6.replace(backend="spmd",
+                          topology=TopologySchedule.circulant_cycle(
+                              6, [(1, 3)])),
+            problem=ring6.problem)
+
+
+def test_fused_backend_rejects_time_varying_topology(ring6):
+    with pytest.raises(ValueError, match="static"):
+        fit(RING6.replace(backend="fused",
+                          topology=TopologySchedule.circulant_cycle(
+                              6, [(1,), (1, 2)])),
+            problem=ring6.problem)
+
+
+def test_topology_unaware_solvers_reject_schedules(built):
+    topo = TopologySchedule.circulant_cycle(6, [(1,)])
+    with pytest.raises(ValueError, match="topology"):
+        fit(BASE.replace(algorithm="cta", topology=topo),
+            problem=built.problem)
+
+
+# ---------------------------------------------------------------------------
+# sweep over (v, mu, bits) and deterministic select
+# ---------------------------------------------------------------------------
+
+def test_sweep_vmu_bits_grid_matches_individual_fits(built):
+    """(v, mu, bits) tuple cells: send decisions and bit accounting agree
+    exactly between the vmapped grid and per-cell fits. (Quantized *values*
+    are compared in the deterministic-rounding test below — vmapped float
+    LSBs can flip a stochastic rounding draw.)"""
+    grid = ((0.5, 0.97, 4.0), (0.5, 0.97, float("inf")),
+            (0.1, 0.99, 4.0))
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), grid,
+               problem=built.problem)
+    assert len(sw) == 3
+    for gi, (v, mu, bits) in enumerate(grid):
+        r = fit(BASE.replace(censor_v=None, censor_mu=None,
+                             comm=Chain([Censor(v, mu), Quantize(bits)])),
+                problem=built.problem)
+        np.testing.assert_array_equal(
+            np.asarray(sw.history["comms"][gi]), np.asarray(r.comms))
+        np.testing.assert_array_equal(
+            np.asarray(sw.history["bits"][gi]), np.asarray(r.bits))
+
+
+def test_sweep_policy_cells_match_individual_fits_deterministic(built):
+    """Explicit policy cells with deterministic rounding: the vmapped grid
+    reproduces each individual fit's trajectory."""
+    grid = [Chain([Censor(v, mu), Quantize(b, stochastic=False)])
+            for (v, mu, b) in ((0.5, 0.97, 4.0), (0.5, 0.97, float("inf")),
+                               (0.1, 0.99, 6.0))]
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), grid,
+               problem=built.problem)
+    for gi, chain in enumerate(grid):
+        r = fit(BASE.replace(censor_v=None, censor_mu=None, comm=chain),
+                problem=built.problem)
+        np.testing.assert_array_equal(
+            np.asarray(sw.history["comms"][gi]), np.asarray(r.comms))
+        np.testing.assert_array_equal(
+            np.asarray(sw.history["bits"][gi]), np.asarray(r.bits))
+        # vmapped Cholesky solves differ at float32 lsb; the quantizer's
+        # level spacing amplifies that slightly beyond the censor-only case
+        np.testing.assert_allclose(np.asarray(sw.thetas[gi]),
+                                   np.asarray(r.theta), atol=1e-4)
+
+
+def test_sweep_rejects_mixed_policy_structures(built):
+    with pytest.raises(ValueError, match="structure"):
+        sweep(BASE, ((0.5, 0.97), (0.5, 0.97, 4.0)), problem=built.problem)
+
+
+def test_sweep_select_tie_breaking_deterministic(built):
+    """Satellite: the operating-point rule under the bits axis. Duplicate
+    cells tie on (MSE, bits, comms); the rule must resolve to the LOWEST
+    index, stably across repeated evaluations and grid duplications."""
+    grid = ((0.5, 0.97, float("inf")), (0.5, 0.97, 4.0),
+            (0.5, 0.97, 4.0), (0.5, 0.97, 4.0))
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), grid,
+               problem=built.problem)
+    x, y = built.x_test, built.y_test
+    picks = [sw.select(x, y, max_mse_gap=10.0,
+                       rff_params=built.rff_params)[0] for _ in range(3)]
+    assert picks == [picks[0]] * 3
+    # with a huge allowed gap every cell qualifies; the three identical
+    # 4-bit cells tie on bits and comms -> index 1, the first of them
+    ev = sw.evaluate(x, y, rff_params=built.rff_params)
+    assert int(ev["bits"][1]) == int(ev["bits"][2]) == int(ev["bits"][3])
+    assert picks[0] == 1
+    # the rule prefers fewer bits over fewer transmissions: the quantized
+    # cells transmit at least as often but pay far fewer bits
+    assert int(ev["bits"][1]) < int(ev["bits"][0])
