@@ -1,0 +1,117 @@
+"""Big-D scaling: the matrix-free CG primal vs the Cholesky primal.
+
+The Cholesky primal prefactors a dense per-agent (D, D) system — O(N D^2)
+memory, O(D^3) setup — which caps the RF dimension at a few thousand. The
+CG primal (`primal="cg"`) only ever applies phi.T @ (phi @ v), so its
+working set stays O(N Ti D) at any D. This bench sweeps
+D in {256, 4096, 16384, 65536}, reporting per-iteration wall-clock, primal
+setup time, and peak compiled memory for each mode that fits (run as a
+module from the repo root — it imports benchmarks.common):
+
+    python -m benchmarks.big_d_bench            # full sweep
+    python -m benchmarks.big_d_bench --smoke    # CI: D in {256, 1024}
+
+Cholesky rows stop at D=4096 (the last size whose factors fit a laptop:
+8 agents x 4096^2 floats = 0.5 GB; at 16384 they would want 8 GB). The CG
+rows keep going — that is the point. The derived column also reports
+`dd_arrays`, the number of (D, D)-shaped intermediates in the step's
+jaxpr: 0 for CG at every D (the acceptance criterion, also pinned in
+tests/test_big_d.py), > 0 for Cholesky.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.api import FitConfig, KRRConfig, build_problem
+from repro.core import admm
+
+FULL_DIMS = (256, 4096, 16384, 65536)
+SMOKE_DIMS = (256, 1024)
+CHOLESKY_CAP = 4096          # largest D whose (D, D) factors we dare build
+
+NUM_AGENTS = 8
+SAMPLES = 128
+
+
+def count_dd_arrays(jaxpr, d: int) -> int:
+    """Number of (d, d)-shaped values anywhere in a jaxpr (recursively) —
+    the 'did this path materialize a (D, D) array' detector."""
+    hits = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            shape = getattr(var.aval, "shape", ())
+            if tuple(shape[-2:]) == (d, d):
+                hits += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            hits += count_dd_arrays(sub, d)
+    return hits
+
+
+def _peak_bytes(step, *args) -> int | None:
+    """Compiled peak memory when the backend reports it (CPU/TPU XLA
+    expose generated-code memory analysis; None when unavailable)."""
+    try:
+        ma = step.lower(*args).compile().memory_analysis()
+        if ma is None:
+            return None
+        return int(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                   ma.output_size_in_bytes)
+    except Exception:
+        return None
+
+
+def bench_mode(emit, problem, policy, dim: int, mode: str,
+               iters: int) -> None:
+    setup_us = 0.0
+    chol = None
+    if mode == "cholesky":
+        t0 = time.perf_counter()
+        chol = jax.block_until_ready(admm._ridge_factors(problem))
+        setup_us = (time.perf_counter() - t0) * 1e6
+
+    # problem/chol enter as ARGUMENTS, not closure constants — XLA would
+    # otherwise constant-fold the embedded arrays (slow compiles, and the
+    # folding time pollutes the iteration timings)
+    def step_fn(problem, chol, state):
+        return admm.coke_step(problem, policy, state, chol,
+                              primal="cg" if mode == "cg" else "auto")
+
+    step = jax.jit(step_fn)
+    state0 = admm.init_state(problem, policy=policy)
+    dd = count_dd_arrays(
+        jax.make_jaxpr(step_fn)(problem, chol, state0).jaxpr, dim)
+    if mode == "cg" and dd:
+        raise AssertionError(
+            f"CG primal materialized {dd} (D, D) arrays at D={dim}")
+    peak = _peak_bytes(step, problem, chol, state0)
+    us = time_call(step, problem, chol, state0, iters=iters)
+    emit(f"big_d/{mode}/D{dim}", us,
+         f"dd_arrays={dd};setup_us={setup_us:.0f};"
+         f"peak_bytes={'n/a' if peak is None else peak};"
+         f"agents={NUM_AGENTS};samples={SAMPLES}")
+
+
+def main(emit, smoke: bool = False) -> None:
+    dims = SMOKE_DIMS if smoke else FULL_DIMS
+    iters = 3 if smoke else 5
+    for dim in dims:
+        cfg = FitConfig(
+            krr=KRRConfig(num_agents=NUM_AGENTS, samples_per_agent=SAMPLES,
+                          num_features=dim, lam=1e-3, rho=1e-2, seed=0),
+            graph="ring", algorithm="coke", censor_v=0.5, censor_mu=0.97)
+        problem = build_problem(cfg).problem
+        policy = cfg.resolved_comm
+        policy = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), policy)
+        if dim <= CHOLESKY_CAP:
+            bench_mode(emit, problem, policy, dim, "cholesky", iters)
+        bench_mode(emit, problem, policy, dim, "cg", iters)
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"),
+         smoke="--smoke" in sys.argv[1:])

@@ -12,7 +12,7 @@ def _emit(name: str, us: float, derived: str = "") -> None:
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import (kernel_bench, paper_comm_cost,
+    from benchmarks import (big_d_bench, kernel_bench, paper_comm_cost,
                             paper_convergence, paper_generalization,
                             roofline, serve_kernel_bench)
 
@@ -22,6 +22,7 @@ def main() -> None:
         ("paper_generalization", paper_generalization.main),  # Thm 3
         ("kernels", kernel_bench.main),
         ("serve_kernel", serve_kernel_bench.main),       # deployment surface
+        ("big_d", big_d_bench.main),                     # matrix-free CG sweep
         ("roofline", roofline.main),                     # from dry-run cache
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -26,10 +26,12 @@ import numpy as np
 from repro.api.config import FitConfig, SolveContext
 from repro.api.registry import Solver
 from repro.api.solvers import _stacked_metrics, _uncompressed_bits
+from repro.core import admm
 from repro.core import losses as losses_mod
 from repro.core.admm import Problem
 from repro.core.graph import circulant
 from repro.distributed import consensus as cns
+from repro.distributed.sharding import shard_features, shard_problem
 from repro.optim.optimizers import OptConfig
 
 
@@ -81,15 +83,72 @@ def _local_grads(problem: Problem, theta: jax.Array) -> jax.Array:
     return jax.vmap(g1)(theta, problem.feats, problem.labels)
 
 
-@partial(jax.jit, static_argnames=("ccfg", "opt_cfg", "num_iters"))
+def _resolve_consensus_primal(config: FitConfig, problem: Problem,
+                              strategy: str) -> str:
+    """The primal mode the distributed runtimes execute. "auto" keeps the
+    legacy one-step inexact update up to the big-D crossover (bit-parity
+    with existing spmd/fused trajectories), then switches to the exact
+    matrix-free CG solve — the regime where one gradient step per round is
+    both slow to converge and the only thing that used to exist. Explicit
+    "cholesky" is rejected: these backends never materialize (D, D)."""
+    if strategy not in ("dkla", "coke", "coke_et"):
+        return "gradient"
+    if config.primal == "cholesky":
+        raise ValueError(
+            "the spmd/fused backends never materialize per-agent (D, D) "
+            "factors; use primal='cg' (exact, matrix-free) or "
+            "'gradient'/'auto' (one-step inexact)")
+    if config.primal == "cg":
+        return admm.resolve_primal("cg", problem.feature_dim, problem.loss)
+    if (config.primal == "auto" and problem.loss == "quadratic"
+            and problem.feature_dim > admm.CG_CROSSOVER_DIM):
+        return "cg"
+    return "gradient"
+
+
+def _cg_primal_solve(problem: Problem, cg_tol: float, cg_maxiter: int):
+    """Adapt the matrix-free CG solve of (21a) to the consensus runtime's
+    agent-stacked tree form: the runtime hands over (params, theta_hat,
+    gamma, summed neighbor theta_hat, degree) and gets the exact primal
+    back — no (D, D) array, warm-started from the previous iterate.
+
+    Call this with the TRACED problem inside the jitted chunk — closing
+    over a concrete Problem would embed feats (268 MB at D=65536) as a
+    trace-time constant and, passed as a jit static arg, the fresh closure
+    would miss the compilation cache on every fit()."""
+    def solve(params, theta_hat, gamma, nbr_sum, deg):
+        deg_vec = jnp.broadcast_to(
+            jnp.asarray(deg, problem.feats.dtype),
+            (problem.num_agents,))
+        theta = admm._primal_cg(
+            problem, gamma["theta"], theta_hat["theta"], nbr_sum["theta"],
+            deg_vec, theta0=params["theta"],
+            tol=cg_tol, maxiter=cg_maxiter)
+        return {"theta": theta.astype(params["theta"].dtype)}
+
+    return solve
+
+
+@partial(jax.jit, static_argnames=("ccfg", "opt_cfg", "num_iters",
+                                   "primal_mode", "cg_tol", "cg_maxiter"))
 def _consensus_chunk(problem, params, cstate, oracle, comm, ccfg, opt_cfg,
-                     num_iters):
+                     num_iters, primal_mode=None, cg_tol=1e-8,
+                     cg_maxiter=64):
+    # the exact primal is built HERE, from the traced problem argument:
+    # the static jit key stays the value-hashable (ccfg, opt_cfg, mode,
+    # tol, maxiter) tuple, so repeated fits share one compilation
+    primal_solve = (_cg_primal_solve(problem, cg_tol, cg_maxiter)
+                    if primal_mode == "cg" else None)
+
     def body(carry, _):
         params, cstate = carry
-        grads = {"theta": _local_grads(problem, params["theta"])}
-        params, cstate, extra = cns.consensus_update(ccfg, opt_cfg, params,
-                                                     grads, cstate,
-                                                     comm=comm)
+        if primal_solve is None:
+            grads = {"theta": _local_grads(problem, params["theta"])}
+        else:  # exact primal: the local gradient is folded into the solve
+            grads = {"theta": jnp.zeros_like(params["theta"])}
+        params, cstate, extra = cns.consensus_update(
+            ccfg, opt_cfg, params, grads, cstate, comm=comm,
+            primal_solve=primal_solve)
         bits = extra.get("bits")
         if bits is None:  # policy-unaware strategy (cta): full precision
             bits = _uncompressed_bits(problem, cstate["comms"])
@@ -107,13 +166,22 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, ccfg, opt_cfg,
 
 
 def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
-                     ctx: SolveContext, oracle: jax.Array | None):
-    """-> (carry0, chunk_fn, theta_fn) for the spmd / fused backends."""
+                     ctx: SolveContext, oracle: jax.Array | None,
+                     mesh=None):
+    """-> (carry0, chunk_fn, theta_fn) for the spmd / fused backends.
+
+    mesh — optional jax mesh; when given, the Problem and the consensus
+    carry (theta / theta_hat / gamma / neighbor caches) are placed with the
+    feature dim sharded over the mesh's "model" axis and the agent dim over
+    its batch axes (distributed.sharding.feature_spec), so each device
+    holds (N, D/shards) slices and the censor norm reduces with one psum.
+    """
     strategy = solver.consensus_strategy
     if strategy is None:
         raise ValueError(
             f"solver {solver.name!r} has no distributed strategy; "
             "use backend='simulator'")
+    primal_mode = _resolve_consensus_primal(config, problem, strategy)
     offset_schedule = None
     if config.topology is not None:
         offset_schedule = config.topology.offsets
@@ -149,9 +217,19 @@ def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
     params = {"theta": jnp.zeros((N, D), problem.feats.dtype)}
     cstate = cns.init_consensus_state(ccfg, opt_cfg, params, comm=chain)
 
+    if mesh is not None:
+        # the sharded problem flows into the chunk as an argument, so the
+        # CG matvec built inside runs on the (N, D/shards) slices
+        problem = shard_problem(problem, mesh)
+        params = shard_features(params, mesh, N)
+        cstate = shard_features(cstate, mesh, N)
+
     def chunk_fn(carry, n):
         params, cstate = carry
         return _consensus_chunk(problem, params, cstate, oracle, chain,
-                                ccfg=ccfg, opt_cfg=opt_cfg, num_iters=n)
+                                ccfg=ccfg, opt_cfg=opt_cfg, num_iters=n,
+                                primal_mode=primal_mode,
+                                cg_tol=ctx.cg_tol,
+                                cg_maxiter=ctx.cg_maxiter)
 
     return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]

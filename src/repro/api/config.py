@@ -48,12 +48,22 @@ class FitConfig:
 
     num_iters: int | None = None     # None = krr.num_iters
 
-    # primal update: "auto" = closed-form Cholesky for the quadratic loss,
-    # "gradient" = force the inexact GD inner solver (what the SPMD runtime
-    # executes; use it for cross-backend parity)
+    # primal update — the big-D axis:
+    #   "auto"     = closed-form Cholesky for the quadratic loss up to
+    #                admm.CG_CROSSOVER_DIM features, matrix-free CG above
+    #                (the crossover where (D, D) factors stop fitting);
+    #   "cholesky" = force the prefactored exact solve (O(N D^2) memory);
+    #   "cg"       = force the Jacobi-preconditioned conjugate-gradient
+    #                solve of (21a) — only ever applies phi.T @ (phi @ v),
+    #                no (D, D) materialization at any D;
+    #   "gradient" = the inexact GD inner solver (any loss; what the SPMD
+    #                runtime's one-step update approximates — use it for
+    #                legacy cross-backend parity).
     primal: str = "auto"
     inner_steps: int = 50            # gradient primal: GD steps per iteration
     inner_lr: float = 0.1            # gradient primal / SPMD optimizer lr
+    cg_tol: float = 1e-8             # cg primal: residual stop
+    cg_maxiter: int = 64             # cg primal: step cap per ADMM iteration
 
     cta_lr: float = 0.9              # CTA diffusion stepsize
     online_lr: float = 0.3           # streaming COKE stepsize
@@ -69,9 +79,15 @@ class FitConfig:
     record_oracle_distance: bool = False
 
     def __post_init__(self):
+        from repro.core.admm import PRIMAL_MODES  # local: avoid cycle
+
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; choose from {BACKENDS}")
+        if self.primal not in PRIMAL_MODES:
+            raise ValueError(
+                f"unknown primal mode {self.primal!r}; choose from "
+                f"{PRIMAL_MODES}")
         if self.chunk_size is not None and self.chunk_size < 1:
             raise ValueError(
                 f"chunk_size must be >= 1 or None, got {self.chunk_size}")
@@ -121,8 +137,8 @@ class FitConfig:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("comm", "topology"),
-         meta_fields=("primal", "inner_steps", "inner_lr", "cta_lr",
-                      "online_lr", "online_batch"))
+         meta_fields=("primal", "inner_steps", "inner_lr", "cg_tol",
+                      "cg_maxiter", "cta_lr", "online_lr", "online_batch"))
 @dataclasses.dataclass(frozen=True)
 class SolveContext:
     """The solver-facing slice of a FitConfig, shaped for jit: the comm
@@ -135,6 +151,8 @@ class SolveContext:
     primal: str = "auto"
     inner_steps: int = 50
     inner_lr: float = 0.1
+    cg_tol: float = 1e-8
+    cg_maxiter: int = 64
     cta_lr: float = 0.9
     online_lr: float = 0.3
     online_batch: int = 16
@@ -148,6 +166,8 @@ class SolveContext:
                    primal=config.primal,
                    inner_steps=config.inner_steps,
                    inner_lr=config.inner_lr,
+                   cg_tol=config.cg_tol,
+                   cg_maxiter=config.cg_maxiter,
                    cta_lr=config.cta_lr,
                    online_lr=config.online_lr,
                    online_batch=config.online_batch)

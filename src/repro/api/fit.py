@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.api.backends import consensus_runner
 from repro.api.config import FitConfig, FitResult, SolveContext
 from repro.api.problems import build_problem
-from repro.api.registry import Solver, get_solver
+from repro.api.registry import (Solver, ensure_primal_supported,
+                                get_solver)
 from repro.core import ridge
 from repro.core.admm import Problem
 
@@ -47,9 +48,14 @@ def _simulator_chunk(solver: Solver, problem: Problem, ctx: SolveContext,
 
 
 def _simulator_runner(config: FitConfig, solver: Solver, problem: Problem,
-                      ctx: SolveContext, oracle):
+                      ctx: SolveContext, oracle, mesh=None):
     host_aux = solver.prepare_host(problem, ctx)
     state0 = solver.init_state(problem, ctx)
+    if mesh is not None:
+        from repro.distributed.sharding import shard_features, shard_problem
+
+        problem = shard_problem(problem, mesh)
+        state0 = shard_features(state0, mesh, problem.num_agents)
 
     def chunk_fn(state, n):
         return _simulator_chunk(solver, problem, ctx, host_aux, state,
@@ -80,7 +86,8 @@ def _chunked_scan(chunk_fn, carry, num_iters: int, chunk_size: int | None,
 
 def fit(config: FitConfig, problem: Problem | None = None, *,
         progress_cb: ProgressCb | None = None,
-        oracle: jax.Array | None = None) -> FitResult:
+        oracle: jax.Array | None = None,
+        mesh=None) -> FitResult:
     """Run `config.algorithm` on `config.backend` and record the paper's
     evaluation trajectories.
 
@@ -91,6 +98,13 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
     oracle      — theta* (D,) for per-iteration distance-to-oracle; computed
                   via the closed form when `config.record_oracle_distance`
                   is set and no oracle is passed.
+    mesh        — optional jax mesh for the big-D path: the problem's
+                  feature dim shards over the mesh's "model" axis and the
+                  agent dim over its batch axes (theta/theta_hat/gamma live
+                  as (N, D/shards) per device; see
+                  distributed.sharding.feature_spec). Pair with
+                  primal="cg" — a sharded (D, D) Cholesky factor would
+                  defeat the point.
     """
     solver = get_solver(config.algorithm)
     if config.backend not in solver.backends:
@@ -107,6 +121,7 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
         raise ValueError(
             f"solver {config.algorithm!r} does not support a time-varying "
             "topology schedule; drop FitConfig.topology or pick dkla/coke")
+    ensure_primal_supported(config, solver)
     rff_params = None
     if problem is None:
         built = build_problem(config)
@@ -122,10 +137,10 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
     ctx = SolveContext.from_config(config)
     if config.backend == "simulator":
         carry0, chunk_fn, theta_fn = _simulator_runner(
-            config, solver, problem, ctx, oracle)
+            config, solver, problem, ctx, oracle, mesh=mesh)
     else:
         carry0, chunk_fn, theta_fn = consensus_runner(
-            config, solver, problem, ctx, oracle)
+            config, solver, problem, ctx, oracle, mesh=mesh)
 
     carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
                                    config.chunk_size, progress_cb)

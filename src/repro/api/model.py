@@ -77,6 +77,45 @@ class KernelModel:
     def num_agents(self) -> int | None:
         return None if self.thetas is None else self.thetas.shape[0]
 
+    # ---- placement -------------------------------------------------------
+    def shard(self, mesh) -> "KernelModel":
+        """Place the model's feature-dim arrays sharded over the mesh's
+        "model" axis: omega (d, D) and bias/theta (D,) split their feature
+        dim, thetas (N, D) additionally spreads agents over the batch axes.
+        The big-D serving layout — a D=65536 model never needs a replicated
+        feature axis on any device; `predict`, `evaluate` and
+        `KernelServer` (constructed with the SAME mesh) consume the sharded
+        arrays transparently (phi(x) @ theta contracts the sharded dim with
+        one psum under GSPMD). Dims that don't divide the axis replicate.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed.sharding import _div
+        from repro.launch.mesh import batch_axes
+
+        has_model = "model" in mesh.axis_names
+        # cos_sin maps L spectral samples to 2L features: omega/bias split
+        # their own L dim, theta its (possibly larger) D dim
+        omega_l = self.rff_params.omega.shape[1]
+        spec_feat = _div(omega_l, mesh, "model") if has_model else None
+        feat = _div(self.num_features, mesh, "model") if has_model else None
+        ba = batch_axes(mesh)
+
+        def put(x, spec):
+            return None if x is None else jax.device_put(
+                x, NamedSharding(mesh, spec))
+
+        params = dataclasses.replace(
+            self.rff_params,
+            omega=put(self.rff_params.omega, P(None, spec_feat)),
+            bias=put(self.rff_params.bias, P(spec_feat)))
+        lead = (_div(self.thetas.shape[0], mesh, ba)
+                if self.thetas is not None and ba else None)
+        return dataclasses.replace(
+            self, rff_params=params,
+            theta=put(self.theta, P(feat)),
+            thetas=put(self.thetas, P(lead, feat)))
+
     # ---- scoring ---------------------------------------------------------
     def featurize(self, x: jax.Array, backend: str = "ref") -> jax.Array:
         """phi(x) on the chosen backend — the one routing point for every

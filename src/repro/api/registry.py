@@ -83,3 +83,15 @@ def get_solver(name: str) -> Solver:
 def list_solvers() -> list[str]:
     _ensure_builtin_solvers()
     return sorted(_REGISTRY)
+
+
+def ensure_primal_supported(config, solver: Solver) -> None:
+    """Reject forcing an exact (21a) solve on a solver that has no (21a)
+    primal subproblem — silently running a different update would be worse
+    than failing. Shared by fit() and sweep()."""
+    if config.primal in ("cholesky", "cg") and not getattr(
+            solver, "primal_aware", False):
+        raise ValueError(
+            f"solver {config.algorithm!r} has no (21a) primal subproblem "
+            f"for primal={config.primal!r} to solve; leave primal='auto' "
+            "or pick an ADMM solver (dkla/coke)")

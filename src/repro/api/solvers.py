@@ -51,6 +51,10 @@ class _ADMMSolver:
     backends = ("simulator", "spmd", "fused")
     comm_aware = True
     topology_aware = True
+    # these solvers HAVE a (21a) primal subproblem the cholesky/cg exact
+    # solves apply to; fit() rejects forcing those modes on solvers without
+    # one (cta/online/oracle) instead of silently running something else
+    primal_aware = True
 
     def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
         raise NotImplementedError
@@ -58,13 +62,20 @@ class _ADMMSolver:
     def prepare_host(self, problem: Problem, ctx: SolveContext):
         return None
 
+    def _primal_mode(self, problem: Problem, ctx: SolveContext) -> str:
+        """The concrete primal update for this (problem, context) pair:
+        Cholesky / CG across the big-D crossover, gradient for general
+        losses — see core.admm.resolve_primal."""
+        return admm.resolve_primal(ctx.primal, problem.feature_dim,
+                                   problem.loss)
+
     def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
         # Cholesky factors inside the compiled loop, exactly where the
         # legacy jitted `admm.run` built them. Under a topology schedule
         # the (18a) normal matrix depends on the per-graph degrees, so a
         # (M, N, D, D) stack is factored and coke_step gathers per k.
-        use_chol = problem.loss == "quadratic" and ctx.primal != "gradient"
-        if not use_chol:
+        # The cg / gradient primals are matrix-free: no aux at all.
+        if self._primal_mode(problem, ctx) != "cholesky":
             return None
         if ctx.topology is None:
             return admm._ridge_factors(problem)
@@ -76,9 +87,12 @@ class _ADMMSolver:
         return admm.init_state(problem, policy=self._policy(ctx))
 
     def step(self, problem: Problem, ctx: SolveContext, aux, state):
+        mode = self._primal_mode(problem, ctx)
         return admm.coke_step(problem, self._policy(ctx), state, aux,
                               ctx.inner_steps, ctx.inner_lr,
-                              topology=ctx.topology)
+                              topology=ctx.topology,
+                              primal="cg" if mode == "cg" else "auto",
+                              cg_tol=ctx.cg_tol, cg_maxiter=ctx.cg_maxiter)
 
     def metrics(self, problem: Problem, ctx: SolveContext, aux, state):
         return _stacked_metrics(problem, state.theta, state.comms,

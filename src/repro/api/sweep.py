@@ -31,7 +31,8 @@ import numpy as np
 from repro.api.config import FitConfig, SolveContext
 from repro.api.model import KernelModel
 from repro.api.problems import build_problem
-from repro.api.registry import Solver, get_solver
+from repro.api.registry import (Solver, ensure_primal_supported,
+                                get_solver)
 from repro.core import comm as comm_mod
 from repro.core.admm import Problem
 
@@ -140,6 +141,7 @@ def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
             f"{base.backend!r} cells individually through fit()")
 
     solver = get_solver(base.algorithm)
+    ensure_primal_supported(base, solver)
     rff_params = None
     if problem is None:
         built = build_problem(base)
@@ -234,21 +236,33 @@ class SweepResult:
         among cells whose test MSE is within `max_mse_gap` (relative) of
         the best cell, pick the one that paid the fewest cumulative bits;
         ties break on fewest transmissions, then on the lowest cell index
-        (deterministic across runs and grid orderings of equal cells)."""
+        (deterministic across runs and grid orderings of equal cells).
+
+        Histories without a `bits` trajectory (a policy-unaware solver, or
+        externally-built SweepResults) rank on (comms, index) alone — an
+        EXPLICIT documented tie-break, never transmission counts dressed
+        up in bit units: a comms count is ~D*32 times smaller than the
+        bits it stands for, and silently mixing the two units would let a
+        bits-reporting cell always lose to a comms-reporting one."""
         ev = self.evaluate(x, y, rff_params=rff_params)
         mses = ev["test_mse"]
         comms = ev["comms"]
-        bits = ev.get("bits", ev["comms"])
+        bits = ev.get("bits")
         best = float(jnp.min(mses))
         cutoff = best * (1.0 + max_mse_gap) + 1e-12
-        candidates = [(float(bits[i]), float(comms[i]), i)
-                      for i in range(len(self))
-                      if float(mses[i]) <= cutoff]
+        if bits is None:   # no bit accounting: fewest transmissions wins
+            candidates = [(float(comms[i]), i)
+                          for i in range(len(self))
+                          if float(mses[i]) <= cutoff]
+        else:
+            candidates = [(float(bits[i]), float(comms[i]), i)
+                          for i in range(len(self))
+                          if float(mses[i]) <= cutoff]
         if not candidates:
             raise ValueError(
                 "no sweep cell qualifies for selection — every test MSE is "
                 f"non-finite or above the cutoff ({cutoff!r}); the fits "
                 "likely diverged (check rho / learning rates): "
                 f"test_mse={np.asarray(mses)!r}")
-        idx = min(candidates)[2]
+        idx = min(candidates)[-1]
         return idx, self.model(idx, rff_params)

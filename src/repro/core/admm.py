@@ -17,6 +17,17 @@ the stationarity condition of (21a) is
 so each agent prefactors its local (D x D) system once (Cholesky) and solves
 per iteration. For non-quadratic losses a few gradient steps approximate the
 argmin (inexact ADMM) — `inner_steps` controls this.
+
+Primal modes — the big-D axis. The Cholesky primal materializes a dense
+per-agent (D, D) factor: O(N D^2) memory and O(D^3) setup, which caps the
+RF dimension at a few thousand. The "cg" primal solves the same (21a)
+normal equations matrix-free with a Jacobi-preconditioned conjugate
+gradient whose only operator application is phi.T @ (phi @ v) — O(N Ti D)
+memory, no (D, D) array ever built — and warm-starts from the previous
+iterate, so a handful of CG steps per ADMM iteration suffice in practice
+(Richards et al. show gradient-based decentralized RF learning is exactly
+the large-D regime's method of choice). `resolve_primal` picks the
+crossover: Cholesky up to CG_CROSSOVER_DIM features, CG above.
 """
 from __future__ import annotations
 
@@ -42,8 +53,12 @@ class COKEState(NamedTuple):
     gamma: jax.Array      # (N, D) local dual variables
     step: jax.Array       # scalar iteration counter k
     comms: jax.Array      # scalar cumulative number of transmissions
-    comm: comm_mod.CommState = comm_mod.CommState(
-        bits=jnp.zeros((0,), jnp.float32))  # policy state (per-agent bits)
+    # policy state (per-agent bits, PRNG key). None — NOT an eager
+    # CommState — as the class default: a device-array default would be
+    # allocated at module import (before any jax.config/platform choice)
+    # and shared across every state. `init_state` builds it lazily and
+    # `coke_step`'s ensure_state fills it for legacy eager callers.
+    comm: comm_mod.CommState | None = None
 
 
 @partial(
@@ -112,6 +127,43 @@ def init_state(problem: Problem, policy=None) -> COKEState:
 # Primal update
 # --------------------------------------------------------------------------
 
+#: "auto" switches from the prefactored Cholesky primal to the matrix-free
+#: CG primal above this feature dimension. The crossover is a memory cliff,
+#: not a flop tie-break: at D = 2048 the per-agent factor is 16 MB (f32) and
+#: the O(D^3) factorization still amortizes over a long fit, while at
+#: D = 4096 a 20-agent problem already wants 1.3 GB of factors alone —
+#: whereas CG's working set stays O(Ti D) per agent at any D.
+CG_CROSSOVER_DIM = 2048
+
+PRIMAL_MODES = ("auto", "cholesky", "cg", "gradient")
+
+
+def resolve_primal(primal: str, feature_dim: int, loss: str) -> str:
+    """Resolve a FitConfig primal mode to the concrete update that runs.
+
+    auto     -> "cholesky" up to CG_CROSSOVER_DIM features (exact solve,
+                amortized O(D^3) setup), "cg" above (matrix-free); general
+                losses have no normal equations and fall back to "gradient".
+    cholesky / cg -> forced; both solve (21a) and require the quadratic
+                loss (ValueError otherwise — silently running a different
+                update would be worse than failing).
+    gradient -> the inexact inner-GD primal (any loss; what the SPMD
+                runtime's one-step update approximates).
+    """
+    if primal not in PRIMAL_MODES:
+        raise ValueError(
+            f"unknown primal mode {primal!r}; choose from {PRIMAL_MODES}")
+    if loss != "quadratic":
+        if primal in ("cholesky", "cg"):
+            raise ValueError(
+                f"primal={primal!r} solves the quadratic-loss (21a) normal "
+                f"equations; loss={loss!r} has none — use primal='gradient'")
+        return "gradient"
+    if primal == "auto":
+        return "cg" if feature_dim > CG_CROSSOVER_DIM else "cholesky"
+    return primal
+
+
 def _ridge_factors(problem: Problem):
     """Per-agent Cholesky factors of the (18a) normal matrix (quadratic loss)."""
     N, Ti, D = problem.feats.shape
@@ -145,6 +197,42 @@ def _primal_closed_form(problem: Problem, chol, gamma, theta_ref, nbr_sum,
 
     return jax.vmap(solve)(problem.feats, problem.labels, chol, gamma,
                            theta_ref, nbr_sum, deg)
+
+
+def _primal_cg(problem: Problem, gamma, theta_ref, nbr_sum, deg=None,
+               theta0=None, tol: float = 1e-8, maxiter: int = 64):
+    """Solve (21a) per agent matrix-free: Jacobi-preconditioned CG on
+
+        [ (2/Ti) Phi_i Phi_i' + (2 lam/N + 2 rho |N_i|) I ] theta = rhs_i
+
+    applying only phi.T @ (phi @ v) — never a (D, D) matrix. The Jacobi
+    diagonal is (2/Ti) sum_t phi[t, d]^2 + diag_reg, an O(Ti D) reduction.
+    theta0 warm-starts from the previous ADMM iterate: consecutive primal
+    problems differ only through the O(rho) dual/neighbor drift, so a few
+    CG steps per iteration recover the closed-form solve to float32
+    accuracy (parity pinned against Cholesky in tests/test_big_d.py).
+    """
+    N, Ti, D = problem.feats.shape
+    if deg is None:
+        deg = problem.degrees
+    if theta0 is None:
+        theta0 = jnp.zeros((N, D), problem.feats.dtype)
+
+    def solve(phi, y, g, t_ref, nb, d_i, t0):
+        diag_reg = 2.0 * problem.lam / N + 2.0 * problem.rho * d_i
+        rhs = (2.0 / Ti) * phi.T @ y - g + problem.rho * (d_i * t_ref + nb)
+        jacobi = (2.0 / Ti) * jnp.sum(phi * phi, axis=0) + diag_reg
+
+        def matvec(v):
+            return (2.0 / Ti) * (phi.T @ (phi @ v)) + diag_reg * v
+
+        x, _ = jax.scipy.sparse.linalg.cg(
+            matvec, rhs, x0=t0, tol=tol, maxiter=maxiter,
+            M=lambda v: v / jacobi)
+        return x
+
+    return jax.vmap(solve)(problem.feats, problem.labels, gamma,
+                           theta_ref, nbr_sum, deg, theta0)
 
 
 def _primal_gradient(problem: Problem, inner_steps: int, inner_lr: float,
@@ -184,6 +272,9 @@ def coke_step(
     inner_steps: int = 50,
     inner_lr: float = 0.1,
     topology: TopologySchedule | None = None,
+    primal: str = "auto",
+    cg_tol: float = 1e-8,
+    cg_maxiter: int = 64,
 ) -> COKEState:
     """One iteration of Algorithm 2 for every agent.
 
@@ -197,6 +288,12 @@ def coke_step(
     `topology.at(k)`. With the closed-form primal, pass the per-graph
     Cholesky stack (M, N, D, D) as `chol` and the step selects the factor
     matching the active graph.
+
+    primal — "auto" keeps the legacy contract (closed form when `chol` is
+    given and the loss is quadratic, the inexact gradient argmin
+    otherwise); "cg" runs the matrix-free Jacobi-CG solve of (21a)
+    (no `chol` needed — nothing (D, D) is ever built), warm-started from
+    the previous iterate with `cg_tol`/`cg_maxiter` as stops.
     """
     chain = comm_mod.as_chain(policy)
     k = state.step + 1
@@ -209,7 +306,15 @@ def coke_step(
             chol = chol[topology.index(k)]
     nbr_sum_hat = A @ state.theta_hat  # (N, D): sum_n theta_hat_n
 
-    if problem.loss == "quadratic" and chol is not None:
+    if primal == "cg":
+        if problem.loss != "quadratic":
+            raise ValueError(
+                "primal='cg' solves the quadratic-loss normal equations; "
+                f"loss={problem.loss!r} needs primal='gradient'")
+        theta = _primal_cg(problem, state.gamma, state.theta_hat,
+                           nbr_sum_hat, deg, theta0=state.theta,
+                           tol=cg_tol, maxiter=cg_maxiter)
+    elif problem.loss == "quadratic" and chol is not None:
         theta = _primal_closed_form(problem, chol, state.gamma,
                                     state.theta_hat, nbr_sum_hat, deg)
     else:

@@ -13,8 +13,8 @@ message:
 
 Each stage implements the protocol
 
-    init_state(num_agents)        -> persistent per-stage pytree state
-    transform(msg, state, k)      -> (msg, state)
+    init_state(num_agents)          -> persistent per-stage pytree state
+    transform(msg, state, k, key)   -> (msg, state)
 
 and a `Chain` runs the message through every stage, finalizes the masked
 broadcast (stale-value fallback), and accounts the **bits** each transmitter
@@ -22,6 +22,19 @@ paid — the cost metric the accuracy-vs-bits tradeoff curves are drawn in.
 All numeric stage parameters (v, mu, bits, p) are pytree *data*, so policy
 grids trace through one compiled fit loop and `sweep()` can vmap over
 stacked policies.
+
+Randomness contract: the chain's stochastic stages (Quantize rounding, Drop
+link loss) draw from a PRNG key carried in `CommState` as pytree *data*.
+`Chain.init_state` derives that key by folding the static stage seeds AND
+every numeric policy parameter (bit-cast to uint32) into a base key, then
+`Chain.apply` folds in the iteration k and the stage index. Consequences:
+  * two sweep cells with different parameters draw INDEPENDENT noise (under
+    `sweep()`'s vmap the folded parameters are per-cell traced values), so
+    `select()` never compares cells through perfectly correlated noise;
+  * two cells with identical parameters stay bit-identical (the
+    deterministic tie-break contract of `SweepResult.select`);
+  * replays are deterministic in (policy, seed, k), and the simulator /
+    spmd / fused backends derive identical draws from identical state.
 
 Semantics (bulk-synchronous value-masking, see DESIGN.md §3):
   * `send` is the transmitter's decision — a censored agent pays nothing;
@@ -68,9 +81,16 @@ class CommState(NamedTuple):
     bits is float32, not int32: a 100M-param broadcast is 3.2e9 bits — one
     step would overflow int32, while f32 stays exact through 2^24 and keeps
     ~1e-7 relative accuracy at deep-net scales (and both backends compute
-    it identically, so cross-backend equality tests remain exact)."""
+    it identically, so cross-backend equality tests remain exact).
+
+    key is the chain-level PRNG key the stochastic stages draw from. It is
+    pytree DATA (not a static seed), derived in `Chain.init_state` from the
+    stage seeds and the numeric policy parameters — under `sweep()`'s vmap
+    each grid cell therefore carries its own independent stream instead of
+    every cell replaying one module-level seed."""
 
     bits: jax.Array     # (N,) float32 cumulative bits paid by each agent
+    key: jax.Array      # chain-level PRNG key (uint32 key data)
     stages: tuple = ()  # per-stage persistent states (matches Chain.stages)
 
 
@@ -90,7 +110,7 @@ class Censor:
     def init_state(self, num_agents: int):
         return ()
 
-    def transform(self, msg: Msg, state, k) -> tuple[Msg, tuple]:
+    def transform(self, msg: Msg, state, k, key=None) -> tuple[Msg, tuple]:
         h_k = (jnp.asarray(self.v) * jnp.asarray(self.mu) ** k).astype(
             msg.payload.dtype)
         send = censor_decision(msg.payload, msg.prev, h_k)
@@ -113,7 +133,7 @@ class Quantize:
     def init_state(self, num_agents: int):
         return ()
 
-    def transform(self, msg: Msg, state, k) -> tuple[Msg, tuple]:
+    def transform(self, msg: Msg, state, k, key=None) -> tuple[Msg, tuple]:
         b = jnp.asarray(self.bits, jnp.float32)
         innov = msg.payload - msg.prev
         levels = 2.0 ** (b - 1.0) - 1.0           # signed symmetric range
@@ -121,7 +141,8 @@ class Quantize:
         safe = jnp.where(scale > 0, scale, 1.0)
         x = innov / safe * levels                 # in [-levels, levels]
         if self.stochastic:
-            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
+            if key is None:   # bare-stage calls outside a Chain
+                key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
             lo = jnp.floor(x)
             x = lo + (jax.random.uniform(key, x.shape) < (x - lo)).astype(
                 x.dtype)
@@ -149,14 +170,29 @@ class Drop:
     def init_state(self, num_agents: int):
         return ()
 
-    def transform(self, msg: Msg, state, k) -> tuple[Msg, tuple]:
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
+    def transform(self, msg: Msg, state, k, key=None) -> tuple[Msg, tuple]:
+        if key is None:       # bare-stage calls outside a Chain
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), k)
         keep = jax.random.uniform(key, msg.delivered.shape) >= jnp.asarray(
             self.p, jnp.float32)
         return msg._replace(delivered=msg.delivered & keep), state
 
 
 STAGE_TYPES = (Censor, Quantize, Drop)
+
+
+def _fold_value(key: jax.Array, leaf) -> jax.Array:
+    """Fold a numeric policy parameter into a PRNG key, bit-exactly: the
+    float32 bit pattern is the fold data, so any parameter change — however
+    small — moves the stream, while equal parameters (traced or concrete)
+    fold identically."""
+    u = jax.lax.bitcast_convert_type(jnp.asarray(leaf, jnp.float32),
+                                     jnp.uint32)
+    if u.ndim == 0:
+        return jax.random.fold_in(key, u)
+    for v in jnp.ravel(u):      # static length: policy params are tiny
+        key = jax.random.fold_in(key, v)
+    return key
 
 
 # ---------------------------------------------------------------------------
@@ -175,9 +211,23 @@ class Chain:
     def __post_init__(self):
         object.__setattr__(self, "stages", tuple(self.stages))
 
+    def chain_key(self) -> jax.Array:
+        """The chain's base PRNG key: static stage seeds folded with every
+        numeric policy parameter. Pytree data — per-cell under sweep vmap."""
+        key = jax.random.PRNGKey(0)
+        for i, s in enumerate(self.stages):
+            key = jax.random.fold_in(key, i)
+            seed = getattr(s, "seed", None)
+            if seed is not None:
+                key = jax.random.fold_in(key, int(seed))
+        for leaf in jax.tree.leaves(self):
+            key = _fold_value(key, leaf)
+        return key
+
     def init_state(self, num_agents: int) -> CommState:
         return CommState(
             bits=jnp.zeros((num_agents,), jnp.float32),
+            key=self.chain_key(),
             stages=tuple(s.init_state(num_agents) for s in self.stages))
 
     def ensure_state(self, state: CommState | None,
@@ -191,8 +241,10 @@ class Chain:
         if state.bits.shape != (num_agents,):
             return self.init_state(num_agents)
         if len(state.stages) != len(self.stages):
-            return CommState(bits=state.bits, stages=tuple(
-                s.init_state(num_agents) for s in self.stages))
+            return CommState(bits=state.bits, key=self.chain_key(),
+                             stages=tuple(
+                                 s.init_state(num_agents)
+                                 for s in self.stages))
         return state
 
     def apply(self, theta: jax.Array, prev: jax.Array, k,
@@ -206,15 +258,22 @@ class Chain:
                   delivered=jnp.ones((num_agents,), bool),
                   bits_per_value=jnp.asarray(FP_BITS, jnp.float32),
                   overhead_bits=jnp.zeros((), jnp.float32))
+        # per-round entropy: the carried key is constant through the scan;
+        # folding the (traced) iteration k and the stage index yields a
+        # deterministic, replayable stream that differs per round and stage
+        round_key = jax.random.fold_in(state.key,
+                                       jnp.asarray(k, jnp.uint32))
         sstates = []
-        for stage, ss in zip(self.stages, state.stages):
-            msg, ss = stage.transform(msg, ss, k)
+        for i, (stage, ss) in enumerate(zip(self.stages, state.stages)):
+            msg, ss = stage.transform(msg, ss, k,
+                                      key=jax.random.fold_in(round_key, i))
             sstates.append(ss)
         effective = msg.send & msg.delivered
         theta_hat = masked_broadcast(msg.payload, prev, effective)
         per_msg = dim * msg.bits_per_value + msg.overhead_bits
         paid = jnp.where(msg.send, per_msg, 0.0)
         return theta_hat, msg.send, CommState(bits=state.bits + paid,
+                                              key=state.key,
                                               stages=tuple(sstates))
 
     def describe(self) -> str:

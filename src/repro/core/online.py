@@ -29,8 +29,11 @@ class OnlineState(NamedTuple):
     gamma: jax.Array      # (N, D)
     step: jax.Array
     comms: jax.Array
-    comm: comm_mod.CommState = comm_mod.CommState(
-        bits=jnp.zeros((0,), jnp.float32))  # policy state (per-agent bits)
+    # policy state (per-agent bits, PRNG key); None as the class default so
+    # importing this module never allocates a device array — `init_state`
+    # builds it lazily, `online_coke_step`'s ensure_state covers legacy
+    # callers that constructed states without a policy.
+    comm: comm_mod.CommState | None = None
 
 
 def init_state(num_agents: int, feature_dim: int,

@@ -26,6 +26,18 @@ The broadcast itself is governed by a `repro.core.comm` policy chain
 `consensus_update(comm=...)`; the legacy `censor_v`/`censor_mu` knobs map
 onto the equivalent censor-only chain. Time-varying circulant topologies
 (`offset_schedule`) cycle the permute pattern per iteration via lax.switch.
+
+Big-D layout: every agent-axis operation here is plain jnp over stacked
+trees, so the whole update is feature-shardable — place the carry with
+`distributed.sharding.shard_features` (theta/theta_hat/gamma as
+(N, D/shards) per device over the mesh's "model" axis; `repro.api.fit(
+mesh=...)` does this) and GSPMD keeps the layout through the scan: the
+rolls stay collective-permutes over the batch axes, elementwise updates
+stay local, and the censor norm's sum over the sharded feature dim
+(`_agent_norms` / `core.comm`'s censor_decision) lowers to one psum.
+The exact big-D primal plugs in via `consensus_update(primal_solve=...)`
+— the matrix-free CG solve of (21a) — replacing the one-step inexact
+update (see repro.api.backends._cg_primal_solve).
 """
 from __future__ import annotations
 
@@ -176,14 +188,22 @@ def _agent_norms(diff_tree) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
-                     params, grads, state, comm=None):
+                     params, grads, state, comm=None, primal_solve=None):
     """params/grads: agent-stacked pytrees (N, ...). Returns
     (new_params, new_state, metrics).
 
     comm — a core.comm policy chain governing the broadcast (censor /
     quantize / drop); None = the legacy chain from ccfg's censor knobs.
     Numeric chain parameters may be traced arrays: the policy is array
-    data, so threshold sweeps do not retrace the step."""
+    data, so threshold sweeps do not retrace the step.
+
+    primal_solve — optional exact primal for the ADMM strategies:
+    called as primal_solve(params, theta_hat, gamma, nbr_sum, deg) with
+    nbr_sum = sum of neighbor theta_hat trees, replacing the one-step
+    inexact optimizer update (grads and the optimizer state are then
+    untouched). This is how the matrix-free CG primal runs distributed:
+    the solve sees only agent-local trees plus the already-permuted
+    neighbor sum, so it composes with any circulant topology."""
     step = state["step"] + 1
     metrics: dict[str, jax.Array] = {}
     if ccfg.offset_schedule and ccfg.strategy not in ("dkla", "coke",
@@ -231,15 +251,25 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
         # previous step's dual-update fetch — no permute here
         left, right = state["nbr_left"], state["nbr_right"]
 
-    # inexact (21a): one optimizer step on the augmented Lagrangian gradient
+    # primal update (21a): exact when the caller supplies a solve (the
+    # matrix-free CG path), otherwise one optimizer step on the augmented
+    # Lagrangian gradient
     #   g_aug = g_local + 2 rho deg theta + gamma - rho (deg theta_hat + sum_n theta_hat_n)
-    if ccfg.use_fused_kernel:
+    if primal_solve is not None:
+        nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
+        new_params = primal_solve(params, theta_hat, gamma, nbr_sum, deg)
+        opt = state["opt"]
+    elif ccfg.use_fused_kernel:
         from repro.kernels.coke_update.ops import coke_update_pytree
         nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
         half = jax.tree.map(lambda x: 0.5 * x, nbr_sum)
         g_aug, _ = coke_update_pytree(
             params, theta_hat, gamma, grads, half, half,
             rho=ccfg.rho, deg=deg)
+        updates, opt = jax.vmap(
+            lambda g, s, p: opt_update(opt_cfg, g, s, p)
+        )(g_aug, state["opt"], params)
+        new_params = apply_updates(params, updates)
     else:
         g_aug = jax.tree.map(
             lambda g, p, th, gm, l, r: (
@@ -248,10 +278,10 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
                 + gm
                 - ccfg.rho * (deg * th + l + r)),
             grads, params, theta_hat, gamma, left, right)
-    updates, opt = jax.vmap(
-        lambda g, s, p: opt_update(opt_cfg, g, s, p)
-    )(g_aug, state["opt"], params)
-    new_params = apply_updates(params, updates)
+        updates, opt = jax.vmap(
+            lambda g, s, p: opt_update(opt_cfg, g, s, p)
+        )(g_aug, state["opt"], params)
+        new_params = apply_updates(params, updates)
 
     # communication policy (censor (19)/(20) / quantize / drop) over the
     # flattened agent-stacked message, with stale-value fallback — shared

@@ -211,6 +211,74 @@ def decode_state_specs(cfg: ModelConfig, state_pytree, mesh):
     return jax.tree_util.tree_map_with_path(rule, state_pytree)
 
 
+# --- consensus feature sharding (the big-D kernel-learning path) -----------
+
+def feature_spec(shape: tuple[int, ...], mesh, num_agents: int) -> P:
+    """PartitionSpec for one agent-stacked consensus leaf.
+
+    The rule for the kernel workload's (N, ..., D) trees (theta, theta_hat,
+    gamma, feats, optimizer slots): shard the TRAILING feature dim over the
+    "model" axis iff divisible — that is what turns a (N, D) tree into
+    (N, D/shards) per device — and the leading agent axis over the batch
+    axes iff it is the agent axis (size N) and divisible. Everything the
+    rule cannot prove agent-stacked (policy PRNG keys, scalar counters,
+    (D,)-vectors like the oracle) replicates: under GSPMD the censor norm
+    sum over the sharded feature dim then reduces with a single psum, and
+    the jnp.roll neighbor exchange stays a collective-permute over the
+    batch axes.
+    """
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    ba = batch_axes(mesh)
+    lead = _div(shape[0], mesh, ba) if (ba and shape[0] == num_agents) \
+        else None
+    if ndim == 1:
+        return P(lead)
+    feat = _div(shape[-1], mesh, "model") if "model" in mesh.axis_names \
+        else None
+    return P(lead, *([None] * (ndim - 2)), feat)
+
+
+def feature_specs(tree, mesh, num_agents: int):
+    """feature_spec over a pytree (consensus carry, Problem, model params)."""
+    return jax.tree.map(lambda leaf: feature_spec(leaf.shape, mesh,
+                                                  num_agents), tree)
+
+
+def shard_features(tree, mesh, num_agents: int):
+    """Place every leaf of an agent-stacked tree with its feature-sharded
+    layout. jit carries preserve input shardings, so placing the fit loop's
+    initial carry (and the Problem) once pins the whole scan to the
+    (N, D/shards)-per-device layout."""
+    return jax.tree.map(
+        lambda leaf: jax.device_put(
+            leaf, NamedSharding(mesh, feature_spec(leaf.shape, mesh,
+                                                   num_agents))), tree)
+
+
+def shard_problem(problem, mesh):
+    """Feature-shard an `admm.Problem`: feats (N, Ti, D) carry the feature
+    dim on "model" and the agent dim on the batch axes; labels (N, Ti) and
+    adjacency (N, N) only shard the agent dim — their trailing dims are
+    samples/agents, NOT features, so the generic trailing-dim rule must not
+    touch them (a mis-sharded labels array would force a reshard inside
+    every phi.T @ y)."""
+    import dataclasses as _dc
+
+    N = problem.num_agents
+    ba = batch_axes(mesh)
+    lead = _div(N, mesh, ba) if ba else None
+    feat = _div(problem.feature_dim, mesh, "model") \
+        if "model" in mesh.axis_names else None
+    put = lambda x, spec: jax.device_put(x, NamedSharding(mesh, spec))  # noqa: E731
+    return _dc.replace(
+        problem,
+        feats=put(problem.feats, P(lead, None, feat)),
+        labels=put(problem.labels, P(lead, None)),
+        adjacency=put(problem.adjacency, P(lead, None)))
+
+
 def step_in_specs(cfg: ModelConfig, kind: str, specs: dict, mesh):
     """Input PartitionSpecs for a dry-run step of the given kind."""
     if kind in ("train", "prefill"):

@@ -3,10 +3,12 @@
 Sibling to the LLM `Engine`: where the Engine amortizes decode steps over a
 batch of sequences, the KernelServer amortizes RFF scoring over concurrent
 requests. Callers `submit()` arbitrarily-sized query batches from any
-thread; a collector thread coalesces everything waiting (up to `max_batch`
-rows or `max_delay_ms`), pads the merged batch to a bucketed shape (so the
-jitted scorer never retraces on ragged traffic), scores it in one device
-call sharded over the mesh's data axes via `distributed.sharding`-style
+thread; a collector thread coalesces everything waiting (until `max_batch`
+rows are in hand or `max_delay_ms` passes), slices the merged batch into
+largest-bucket-sized pieces and pads each piece to a bucketed shape — every
+device call is one of the |buckets| compiled shapes, so the jitted scorer
+never retraces on ragged traffic however the batch landed — scores them
+sharded over the mesh's data axes via `distributed.sharding`-style
 NamedShardings, and scatters the rows back to each request's future.
 
 This is the "serve heavy traffic" path the random-feature construction
@@ -219,28 +221,53 @@ class KernelServer:
             self._flush(batch)
 
     def _pad_to_bucket(self, n: int) -> int:
+        """Smallest bucket holding n rows. Only defined up to the largest
+        bucket — `_flush` slices oversize batches into bucket-shaped device
+        calls first, so every compiled shape is one of the |buckets|
+        bucketed ones and the jitted scorer NEVER retraces on ragged
+        traffic (the contract tests/test_kernel_server.py pins)."""
         for b in self._buckets:
             if n <= b:
                 return b
-        return -(-n // self._buckets[-1]) * self._buckets[-1]
+        raise AssertionError(
+            f"_pad_to_bucket({n}) beyond the largest bucket "
+            f"{self._buckets[-1]} — oversize flushes must be sliced first")
 
-    def _flush(self, batch: list[_Request]) -> None:
-        xs = np.concatenate([r.x for r in batch])
+    def _score_padded(self, xs: np.ndarray) -> tuple[np.ndarray, int]:
+        """One bucket-shaped device call: pad n <= max-bucket rows up to
+        their bucket, score, strip the padding. Returns (preds, pad rows);
+        the caller commits stats only once the WHOLE flush scored — a
+        failing later slice must not leave stats counting rows no caller
+        ever received."""
         n = xs.shape[0]
         padded = self._pad_to_bucket(n)
         if padded != n:
             xs = np.concatenate(
                 [xs, np.zeros((padded - n, xs.shape[1]), xs.dtype)])
+        preds = np.asarray(jax.device_get(self._score(jnp.asarray(xs))))
+        return preds[:n], padded - n
+
+    def _flush(self, batch: list[_Request]) -> None:
+        # The collector coalesces until rows >= max_batch, so the LAST
+        # request can overshoot; and a single submit() may exceed max_batch
+        # outright. Slice the merged batch into largest-bucket-sized device
+        # calls instead of padding past the bucket table — an over-max call
+        # would compile a fresh shape per ragged size.
+        xs = np.concatenate([r.x for r in batch])
+        n = xs.shape[0]
+        cap = self._buckets[-1]
         try:
-            preds = np.asarray(jax.device_get(self._score(jnp.asarray(xs))))
+            scored = [self._score_padded(xs[off:off + cap])
+                      for off in range(0, n, cap)]
         except Exception as e:  # scoring failed: fail every caller, keep serving
             for r in batch:
                 r.future.set_exception(e)
             return
+        preds = np.concatenate([p for p, _ in scored])
         with self._lock:
-            self._stats["batches"] += 1
+            self._stats["batches"] += len(scored)
             self._stats["rows"] += n
-            self._stats["padded_rows"] += padded - n
+            self._stats["padded_rows"] += sum(pad for _, pad in scored)
         off = 0
         for r in batch:
             b = r.x.shape[0]

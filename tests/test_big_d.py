@@ -1,0 +1,204 @@
+"""The matrix-free big-D path: CG-vs-Cholesky parity on every backend,
+no-(D, D)-materialization pinning, feature-sharded fit/predict parity
+(multi-device subprocess), primal-mode validation, and the lazy
+CommState defaults."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FitConfig, KRRConfig, build_problem, fit
+from repro.core import admm
+
+RING = FitConfig(
+    krr=KRRConfig(num_agents=4, samples_per_agent=40, num_features=512,
+                  lam=1e-2, rho=0.1, seed=0),
+    graph="ring", algorithm="coke", censor_v=0.3, censor_mu=0.97,
+    num_iters=40)
+
+
+@pytest.fixture(scope="module")
+def ring512():
+    return build_problem(RING)
+
+
+# ---------------------------------------------------------------------------
+# (b) CG-vs-Cholesky parity, pinned
+# ---------------------------------------------------------------------------
+
+def test_cg_matches_cholesky_simulator(ring512):
+    """Acceptance: at D <= 512 the matrix-free CG primal reproduces the
+    exact Cholesky solve to pinned tolerance, with identical censor
+    decisions (the send rule sees CG's float-level theta differences only
+    through the norm threshold)."""
+    chol = fit(RING.replace(primal="cholesky"), problem=ring512.problem)
+    cg = fit(RING.replace(primal="cg"), problem=ring512.problem)
+    np.testing.assert_allclose(np.asarray(chol.theta),
+                               np.asarray(cg.theta), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(chol.comms),
+                                  np.asarray(cg.comms))
+    np.testing.assert_allclose(np.asarray(chol.train_mse),
+                               np.asarray(cg.train_mse), rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["spmd", "fused"])
+def test_cg_matches_cholesky_distributed(ring512, backend):
+    """Acceptance, distributed legs: primal='cg' on the ring runtimes runs
+    the SAME exact solve (via the consensus primal_solve hook), so it must
+    match the simulator's Cholesky trajectory — unlike the legacy one-step
+    inexact update, which only approximates it."""
+    chol = fit(RING.replace(primal="cholesky"), problem=ring512.problem)
+    dist = fit(RING.replace(primal="cg", backend=backend),
+               problem=ring512.problem)
+    np.testing.assert_allclose(np.asarray(chol.theta),
+                               np.asarray(dist.theta), atol=2e-4)
+    np.testing.assert_array_equal(np.asarray(chol.comms),
+                                  np.asarray(dist.comms))
+
+
+def test_auto_primal_crosses_over():
+    assert admm.resolve_primal("auto", 512, "quadratic") == "cholesky"
+    assert admm.resolve_primal(
+        "auto", admm.CG_CROSSOVER_DIM + 1, "quadratic") == "cg"
+    assert admm.resolve_primal("auto", 10 ** 6, "absolute") == "gradient"
+    with pytest.raises(ValueError, match="normal equations"):
+        admm.resolve_primal("cg", 512, "absolute")
+    with pytest.raises(ValueError, match="primal"):
+        admm.resolve_primal("newton", 512, "quadratic")
+
+
+def test_fitconfig_validates_primal_mode(ring512):
+    with pytest.raises(ValueError, match="primal"):
+        FitConfig(primal="newton")
+    with pytest.raises(ValueError, match="never materialize"):
+        fit(RING.replace(primal="cholesky", backend="spmd", num_iters=2),
+            problem=ring512.problem)
+    # forcing an exact (21a) solve on a solver with no (21a) subproblem
+    # must fail loudly, not silently run a different update
+    for algorithm in ("cta", "online_coke", "ridge_oracle"):
+        with pytest.raises(ValueError, match="primal"):
+            fit(RING.replace(algorithm=algorithm, primal="cg", num_iters=2),
+                problem=ring512.problem)
+
+
+# ---------------------------------------------------------------------------
+# No (D, D) materialization on the CG path
+# ---------------------------------------------------------------------------
+
+def test_cg_step_materializes_no_dd_array(ring512):
+    """The point of the path: the whole CG iteration's jaxpr contains no
+    (D, D)-shaped value, while the Cholesky step's does. The detector is
+    the benchmark's — one rule guards both pins."""
+    from benchmarks.big_d_bench import count_dd_arrays
+
+    problem, policy = ring512.problem, RING.resolved_comm
+    state0 = admm.init_state(problem, policy=policy)
+    D = problem.feature_dim
+
+    def cg_step(problem, state):
+        return admm.coke_step(problem, policy, state, None, primal="cg")
+
+    assert count_dd_arrays(
+        jax.make_jaxpr(cg_step)(problem, state0).jaxpr, D) == 0
+
+    def chol_step(problem, state):
+        chol = admm._ridge_factors(problem)
+        return admm.coke_step(problem, policy, state, chol)
+
+    assert count_dd_arrays(
+        jax.make_jaxpr(chol_step)(problem, state0).jaxpr, D) > 0
+
+
+# ---------------------------------------------------------------------------
+# (c) feature-sharded fit / predict parity (multi-device subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from repro.api import FitConfig, KRRConfig, build_problem, fit
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = FitConfig(
+        krr=KRRConfig(num_agents=4, samples_per_agent=40, num_features=64,
+                      lam=1e-2, rho=0.1, seed=0),
+        graph="ring", algorithm="coke", censor_v=0.3, censor_mu=0.97,
+        num_iters=30, primal="cg")
+    built = build_problem(cfg)
+    mesh = make_host_mesh(data=2, model=4)
+
+    for backend in ("simulator", "spmd"):
+        b = cfg.replace(backend=backend)
+        plain = fit(b, problem=built.problem)
+        shard = fit(b, problem=built.problem, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(plain.theta),
+                                   np.asarray(shard.theta), atol=1e-5,
+                                   err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(plain.comms),
+                                      np.asarray(shard.comms))
+        np.testing.assert_array_equal(np.asarray(plain.history["bits"]),
+                                      np.asarray(shard.history["bits"]))
+
+    # sharded KernelModel: predict/evaluate parity + KernelServer accepts it
+    model = plain.to_model(built.rff_params)
+    sharded = model.shard(mesh)
+    x = np.asarray(built.x_test).reshape(-1, built.x_test.shape[-1])[:32]
+    np.testing.assert_allclose(np.asarray(model.predict(x)),
+                               np.asarray(sharded.predict(x)), atol=1e-5)
+    from repro.serve import KernelServer
+    with KernelServer(sharded, mesh=mesh) as srv:
+        np.testing.assert_allclose(srv.predict(x),
+                                   np.asarray(model.predict(x)), atol=1e-5)
+    print("SHARD-PARITY-OK")
+""")
+
+
+def test_sharded_fit_and_predict_match_unsharded():
+    """theta/theta_hat/gamma as (N, D/shards) per device must be a pure
+    layout change: same trajectories, same send decisions, same bits, same
+    predictions. Runs in a subprocess with 8 forced host devices (the
+    in-process test session keeps the host's single real device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SHARD-PARITY-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Lazy CommState defaults (no import-time device arrays)
+# ---------------------------------------------------------------------------
+
+def test_state_comm_defaults_are_lazy():
+    """The class defaults must not hold a device array (it would be
+    allocated at module import, before any jax.config/platform selection,
+    and shared across every state instance)."""
+    from repro.core.online import OnlineState
+
+    assert admm.COKEState._field_defaults["comm"] is None
+    assert OnlineState._field_defaults["comm"] is None
+
+
+def test_legacy_eager_state_without_comm_still_steps(ring512):
+    """Eager legacy callers constructing states positionally (comm=None)
+    must still step: ensure_state builds the policy state lazily."""
+    problem = ring512.problem
+    N, D = problem.num_agents, problem.feature_dim
+    z = jnp.zeros((N, D), problem.feats.dtype)
+    state = admm.COKEState(z, z, z, jnp.zeros((), jnp.int32),
+                           jnp.zeros((), jnp.int32))
+    assert state.comm is None
+    out = admm.coke_step(problem, RING.resolved_comm, state, None,
+                         primal="cg")
+    assert out.comm is not None
+    assert out.comm.bits.shape == (N,)

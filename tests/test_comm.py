@@ -123,6 +123,74 @@ def test_drop_pays_but_does_not_deliver():
                                   np.asarray(hat)[~delivered])
 
 
+def test_sweep_cells_draw_independent_drop_randomness():
+    """Regression (comm RNG correlation): distinct vmapped policy cells
+    must draw INDEPENDENT link-drop randomness. Under the old static-seed
+    derivation every cell shared one uniform draw, so the p=0.6 cell's
+    delivered set was always a subset of the p=0.3 cell's."""
+    from repro.api.sweep import _stack_policies
+
+    theta = jnp.ones((256, 4))
+    hat = jnp.zeros((256, 4))
+    stacked = _stack_policies([Chain([Drop(p=0.3)]), Chain([Drop(p=0.6)])])
+
+    def delivered(chain):
+        out, _, _ = chain.apply(theta, hat, jnp.int32(1),
+                                chain.init_state(256))
+        return jnp.all(out == 1.0, axis=-1)
+
+    a, b = np.asarray(jax.vmap(delivered)(stacked))
+    # independent draws: each cell delivers some agents the other dropped
+    assert (a & ~b).sum() > 0
+    assert (~a & b).sum() > 0  # impossible under the correlated legacy draw
+
+
+def test_sweep_cells_draw_independent_quantize_randomness():
+    """Cells differing only in the CENSOR threshold still get their own
+    rounding stream (the whole chain's parameters key the stream), while
+    byte-identical cells stay byte-identical — the deterministic tie-break
+    contract."""
+    from repro.api.sweep import _stack_policies
+
+    key = jax.random.PRNGKey(3)
+    theta = jax.random.normal(key, (8, 64))
+    hat = jnp.zeros((8, 64))
+
+    def payload(chain):
+        out, _, _ = chain.apply(theta, hat, jnp.int32(1),
+                                chain.init_state(8))
+        return out
+
+    cells = [Chain([Censor(0.5, 0.97), Quantize(4.0)]),
+             Chain([Censor(0.6, 0.97), Quantize(4.0)]),
+             Chain([Censor(0.5, 0.97), Quantize(4.0)])]
+    p0, p1, p2 = np.asarray(jax.vmap(payload)(_stack_policies(cells)))
+    assert not np.array_equal(p0, p1)       # distinct cells: fresh noise
+    np.testing.assert_array_equal(p0, p2)   # identical cells: identical
+
+
+def test_select_without_bits_history_falls_back_to_comms(built):
+    """Satellite: a SweepResult lacking a `bits` trajectory must rank on
+    (comms, index) EXPLICITLY — not silently pretend transmission counts
+    are bit totals (a ~D*32x unit mismatch)."""
+    import dataclasses
+
+    grid = ((0.5, 0.97), (0.05, 0.999), (0.5, 0.97))
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), grid,
+               problem=built.problem)
+    no_bits = dataclasses.replace(
+        sw, history={k: v for k, v in sw.history.items() if k != "bits"})
+    x, y = built.x_test, built.y_test
+    idx, _ = no_bits.select(x, y, max_mse_gap=10.0,
+                            rff_params=built.rff_params)
+    ev = no_bits.evaluate(x, y, rff_params=built.rff_params)
+    assert "bits" not in ev
+    comms = np.asarray(ev["comms"])
+    # fewest transmissions wins; duplicate cells resolve to the lowest index
+    assert comms[idx] == comms.min()
+    assert idx == int(np.flatnonzero(comms == comms.min())[0])
+
+
 def test_drop_is_deterministic_in_k_and_seed():
     theta = jnp.ones((64, 4))
     hat = jnp.zeros((64, 4))

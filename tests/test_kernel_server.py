@@ -93,6 +93,37 @@ def test_oversized_batch_spills_past_largest_bucket(model):
                                atol=1e-6)
 
 
+def test_no_device_call_exceeds_largest_bucket(model, queries):
+    """Satellite (batching contract): oversize flushes — a single over-max
+    request, or collector overshoot from the final coalesced request —
+    must be sliced into bucket-shaped device calls. Every scored shape is
+    one of the configured buckets, so the jitted scorer compiles at most
+    |buckets| shapes and never retraces on ragged traffic."""
+    rng = np.random.default_rng(2)
+    cfg = KernelServeConfig(max_batch=16, buckets=(8, 16), max_delay_ms=20.0)
+    server = KernelServer(model, cfg, autostart=False)
+    shapes = []
+    inner = server._score
+    server._score = lambda xs: (shapes.append(xs.shape[0]), inner(xs))[1]
+    big = rng.uniform(size=(41, model.input_dim)).astype(np.float32)
+    futs = [server.submit(big)]
+    # plus a pile of small requests: the collector overshoots max_batch
+    # by whatever the last one brought
+    futs += [server.submit(queries[i:i + 7]) for i in range(0, 35, 7)]
+    server.start()
+    outs = [f.result() for f in futs]
+    server.stop()
+    np.testing.assert_allclose(outs[0], np.asarray(model.predict(big)),
+                               atol=1e-6)
+    for j, f in enumerate(outs[1:]):
+        np.testing.assert_allclose(
+            f, np.asarray(model.predict(queries[j * 7:(j + 1) * 7])),
+            atol=1e-6)
+    assert shapes, "no device calls recorded"
+    assert max(shapes) <= max(server._buckets)
+    assert set(shapes) <= set(server._buckets)
+
+
 def test_bad_request_fails_its_future_only(model, queries):
     with KernelServer(model) as server:
         with pytest.raises(ValueError, match="queries"):
