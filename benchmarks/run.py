@@ -14,12 +14,13 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (big_d_bench, kernel_bench, paper_comm_cost,
                             paper_convergence, paper_generalization,
-                            roofline, serve_kernel_bench)
+                            paper_online, roofline, serve_kernel_bench)
 
     suites = [
         ("paper_convergence", paper_convergence.main),   # Figs 1-2, Tab 1/2/4/5
         ("paper_comm_cost", paper_comm_cost.main),       # Fig 3, Tab 3/6
         ("paper_generalization", paper_generalization.main),  # Thm 3
+        ("paper_online", paper_online.main),             # streaming regret/bits
         ("kernels", kernel_bench.main),
         ("serve_kernel", serve_kernel_bench.main),       # deployment surface
         ("big_d", big_d_bench.main),                     # matrix-free CG sweep

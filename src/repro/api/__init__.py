@@ -17,21 +17,26 @@ and `repro.serve.KernelServer` microbatches scoring traffic over a mesh.
     y_hat = model.predict(x_new)            # ref or fused (Pallas) backend
     model.save("artifacts/coke")
 
-Algorithms (see `list_solvers()`): dkla, coke, cta, online_coke,
-ridge_oracle. Backends: "simulator" (in-process reference), "spmd"
-(repro.distributed.consensus ring runtime), "fused" (spmd + Pallas
-`coke_update` kernel). The legacy drivers `core.admm.run` / `core.cta.run`
-remain as deprecation shims.
+Algorithms (see `list_solvers()`): dkla, coke, cta, ridge_oracle, and the
+streaming family online_dkla / online_coke / qc_odkla — driven over
+per-agent minibatch streams by `fit_stream(config)` (build one with
+`build_stream`, or hand `KernelModel.partial_fit` fresh traffic to
+online-refine a batch-trained model). Backends: "simulator" (in-process
+reference), "spmd" (repro.distributed.consensus ring runtime), "fused"
+(spmd + Pallas `coke_update` kernel). The legacy drivers `core.admm.run` /
+`core.cta.run` remain as deprecation shims.
 
 The training-loop integration (consensus data-parallelism for deep nets)
 is re-exported here too, so downstream scripts need only this surface.
 """
 from repro.api.config import (BACKENDS, FitConfig,  # noqa: F401
                               FitResult, SolveContext)
-from repro.api.fit import fit  # noqa: F401
+from repro.api.fit import fit, fit_stream  # noqa: F401
 from repro.api.model import (KernelModel, PREDICT_BACKENDS,  # noqa: F401
                              predict)
-from repro.api.problems import BuiltProblem, build_problem  # noqa: F401
+from repro.api.problems import (BuiltProblem, BuiltStream,  # noqa: F401
+                                StreamProblem, build_problem, build_stream,
+                                stream_from_arrays)
 from repro.api.registry import (Solver, get_solver,  # noqa: F401
                                 list_solvers, register_solver)
 from repro.api.sweep import SweepResult, sweep  # noqa: F401

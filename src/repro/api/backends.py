@@ -165,6 +165,65 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, ccfg, opt_cfg,
     return (params, cstate), hist
 
 
+@partial(jax.jit, static_argnames=("ccfg", "num_iters", "lam", "lr",
+                                   "eta"))
+def _stream_chunk(stream, params, cstate, comm, ccfg, num_iters,
+                  lam, lr, eta):
+    def body(carry, _):
+        params, cstate = carry
+        feats, labels = stream.round_batch(cstate["step"])
+        params, cstate, extra = cns.stream_update(
+            ccfg, params, cstate, feats, labels,
+            lam=lam, lr=lr, eta=eta, comm=comm)
+        # exactly the simulator's _stream_metrics keys — streaming
+        # histories are key-identical across backends, so the conformance
+        # harness can compare any pair with exact="*"
+        m = {"train_mse": extra["instant_mse"],
+             "instant_mse": extra["instant_mse"],
+             "comms": cstate["comms"],
+             "consensus_gap": cns.consensus_gap(params),
+             "bits": extra["bits"]}
+        return (params, cstate), m
+
+    return jax.lax.scan(body, (params, cstate), None, length=num_iters)
+
+
+def stream_consensus_runner(config: FitConfig, solver: Solver, stream,
+                            ctx: SolveContext, theta0=None):
+    """-> (carry0, chunk_fn, theta_fn) for fit_stream's spmd backend: the
+    ring runtime's `stream_update` (collective-permute neighbor exchange,
+    shared `core.comm` decision code) over the StreamProblem's rounds.
+    Requires the circulant graph family, like the batch consensus path."""
+    offsets = config.graph_offsets
+    _validate_topology(stream, offsets)
+
+    # stream_update reads only rho / offsets / degree from the config —
+    # strategy and the CTA mix_weight play no role on the streaming path
+    ccfg = cns.ConsensusConfig(rho=stream.rho, offsets=offsets)
+
+    # the solver's policy view of the configured chain (online_dkla strips
+    # censor thresholds), traced into the compiled chunk
+    chain = solver._policy(ctx)
+    eta = solver._eta(ctx)
+
+    N, D = stream.num_agents, stream.feature_dim
+    if theta0 is None:
+        theta = jnp.zeros((N, D), stream.feats.dtype)
+    else:
+        theta = jnp.broadcast_to(
+            jnp.asarray(theta0, stream.feats.dtype), (N, D))
+    params = {"theta": theta}
+    cstate = cns.init_stream_state(ccfg, theta, comm=chain)
+
+    def chunk_fn(carry, n):
+        params, cstate = carry
+        return _stream_chunk(stream, params, cstate, chain, ccfg=ccfg,
+                             num_iters=n, lam=stream.lam,
+                             lr=ctx.online_lr, eta=eta)
+
+    return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]
+
+
 def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
                      ctx: SolveContext, oracle: jax.Array | None,
                      mesh=None):

@@ -66,8 +66,18 @@ class FitConfig:
     cg_maxiter: int = 64             # cg primal: step cap per ADMM iteration
 
     cta_lr: float = 0.9              # CTA diffusion stepsize
-    online_lr: float = 0.3           # streaming COKE stepsize
-    online_batch: int = 16           # streaming COKE minibatch per round
+    online_lr: float = 0.3           # streaming family gradient stepsize
+    online_batch: int = 16           # streaming minibatch per round
+
+    # streaming workload (fit_stream): the generator kind build_stream uses
+    # when no StreamProblem is passed — "stationary" | "drift" (concept
+    # drift) | "shift" (covariate shift); see data.synthetic.stream_synthetic
+    stream: str = "stationary"
+    # qc_odkla proximal coefficient eta: the linearized-ADMM primal solves
+    # to theta - g/(eta + 2 rho deg_i). None = use the gradient stepsize
+    # online_lr instead (the degenerate case in which qc_odkla is exactly
+    # online_coke — the identity contract the streaming tests pin).
+    qc_eta: float | None = None
 
     # graph family ("erdos_renyi" uses krr.graph_p; spmd/fused backends
     # require the circulant family — it is what lowers to collective-permute)
@@ -91,6 +101,15 @@ class FitConfig:
         if self.chunk_size is not None and self.chunk_size < 1:
             raise ValueError(
                 f"chunk_size must be >= 1 or None, got {self.chunk_size}")
+        from repro.data.synthetic import STREAM_KINDS  # local: keep light
+        if self.stream not in STREAM_KINDS:
+            raise ValueError(
+                f"unknown stream kind {self.stream!r}; choose from "
+                f"{STREAM_KINDS}")
+        if self.qc_eta is not None and self.qc_eta <= 0:
+            raise ValueError(
+                f"qc_eta must be positive (or None to reuse online_lr), "
+                f"got {self.qc_eta}")
         if self.comm is not None:
             if self.censor_v is not None or self.censor_mu is not None:
                 raise ValueError(
@@ -138,7 +157,8 @@ class FitConfig:
 @partial(jax.tree_util.register_dataclass,
          data_fields=("comm", "topology"),
          meta_fields=("primal", "inner_steps", "inner_lr", "cg_tol",
-                      "cg_maxiter", "cta_lr", "online_lr", "online_batch"))
+                      "cg_maxiter", "cta_lr", "online_lr", "online_batch",
+                      "qc_eta"))
 @dataclasses.dataclass(frozen=True)
 class SolveContext:
     """The solver-facing slice of a FitConfig, shaped for jit: the comm
@@ -156,6 +176,7 @@ class SolveContext:
     cta_lr: float = 0.9
     online_lr: float = 0.3
     online_batch: int = 16
+    qc_eta: float | None = None
 
     @classmethod
     def from_config(cls, config: FitConfig) -> "SolveContext":
@@ -170,7 +191,8 @@ class SolveContext:
                    cg_maxiter=config.cg_maxiter,
                    cta_lr=config.cta_lr,
                    online_lr=config.online_lr,
-                   online_batch=config.online_batch)
+                   online_batch=config.online_batch,
+                   qc_eta=config.qc_eta)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,6 +267,11 @@ class FitResult:
             "dataset": krr.dataset, "num_agents": krr.num_agents,
             "num_features": krr.num_features, "lam": krr.lam,
             "rho": krr.rho, "seed": krr.seed, "graph": self.config.graph,
+            # the full topology provenance (JSON-friendly), so
+            # KernelModel.partial_fit can rebuild the trained-on graph —
+            # not just its family name
+            "graph_offsets": list(self.config.graph_offsets),
+            "graph_p": krr.graph_p,
         }
         return KernelModel(
             rff_params=params,

@@ -1,8 +1,11 @@
-"""`fit(config) -> FitResult` — the one driver for every algorithm/backend.
+"""`fit(config) -> FitResult` — the one driver for every algorithm/backend
+— and its streaming sibling `fit_stream(config) -> FitResult` for the
+online family over per-agent minibatch streams.
 
 The driver owns the `lax.scan` iteration loop, the per-iteration metric
 recording (train MSE, cumulative transmissions, consensus gap, optional
-distance-to-oracle), and optional chunked host callbacks for streaming
+distance-to-oracle; for streams the regret-protocol instantaneous MSE and
+cumulative bits), and optional chunked host callbacks for streaming
 progress. Algorithm math lives in the registered solvers; distributed
 execution lives in repro.api.backends.
 
@@ -20,11 +23,11 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.api.backends import consensus_runner
+from repro.api.backends import consensus_runner, stream_consensus_runner
 from repro.api.config import FitConfig, FitResult, SolveContext
-from repro.api.problems import build_problem
+from repro.api.problems import StreamProblem, build_problem, build_stream
 from repro.api.registry import (Solver, ensure_primal_supported,
-                                get_solver)
+                                ensure_stream_supported, get_solver)
 from repro.core import ridge
 from repro.core.admm import Problem
 
@@ -106,6 +109,10 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
                   primal="cg" — a sharded (D, D) Cholesky factor would
                   defeat the point.
     """
+    if isinstance(problem, StreamProblem):
+        raise ValueError(
+            "fit() drives batch problems; run a StreamProblem through "
+            "fit_stream(config, stream=...)")
     solver = get_solver(config.algorithm)
     if config.backend not in solver.backends:
         raise ValueError(
@@ -141,6 +148,54 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
     else:
         carry0, chunk_fn, theta_fn = consensus_runner(
             config, solver, problem, ctx, oracle, mesh=mesh)
+
+    carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
+                                   config.chunk_size, progress_cb)
+    return FitResult(config=config, state=carry, history=history,
+                     theta=theta_fn(carry), rff_params=rff_params)
+
+
+def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
+               theta0: jax.Array | None = None,
+               progress_cb: ProgressCb | None = None) -> FitResult:
+    """Run a streaming solver (`online_dkla` / `online_coke` / `qc_odkla`)
+    over a per-agent minibatch stream and record the regret-style history
+    (instantaneous pre-update MSE, cumulative comms/bits, consensus gap)
+    through the same chunked-scan driver as `fit()`.
+
+    stream      — an existing `StreamProblem`; None builds one from
+                  config.krr / config.stream / config.online_batch with
+                  one round per iteration (see repro.api.build_stream).
+    theta0      — optional warm start: (D,) or (N, D) parameters every
+                  agent begins from (theta AND last-broadcast theta_hat) —
+                  what `KernelModel.partial_fit` passes.
+    progress_cb — as in fit(): called after every config.chunk_size
+                  iterations with (iters_done, last_metrics).
+
+    The result deploys exactly like a batch fit: `fit_stream(...)
+    .to_model()` yields a `KernelModel` (predict / evaluate / save /
+    serve) whose RFF map is the stream's featurization.
+    """
+    solver = get_solver(config.algorithm)
+    ensure_stream_supported(config, solver)
+    rff_params = None
+    if stream is None:
+        built = build_stream(config)
+        stream, rff_params = built.stream, built.rff_params
+    if stream.adjacency.shape != (stream.num_agents, stream.num_agents):
+        raise ValueError(
+            f"stream adjacency {stream.adjacency.shape} does not match its "
+            f"{stream.num_agents} agents")
+
+    ctx = SolveContext.from_config(config)
+    if config.backend == "simulator":
+        carry0, chunk_fn, theta_fn = _simulator_runner(
+            config, solver, stream, ctx, None)
+        if theta0 is not None:
+            carry0 = solver.warm_start(carry0, theta0)
+    else:
+        carry0, chunk_fn, theta_fn = stream_consensus_runner(
+            config, solver, stream, ctx, theta0=theta0)
 
     carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
                                    config.chunk_size, progress_cb)

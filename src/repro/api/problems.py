@@ -8,16 +8,19 @@ pytree plus the held-out test split.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.config import FitConfig
 from repro.configs.coke_krr import KRRConfig
 from repro.core import graph as graph_mod
 from repro.core import rff
 from repro.core.admm import Problem, make_problem
-from repro.data.synthetic import paper_synthetic, uci_standin
+from repro.data.synthetic import (StreamDataset, paper_synthetic,
+                                  stream_synthetic, uci_standin)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +34,98 @@ class BuiltProblem:
     # consumes — the model owns featurization at inference time
     x_test: jax.Array | None = None
     y_test: jax.Array | None = None
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("feats", "labels", "adjacency"),
+    meta_fields=("lam", "rho"),
+)
+@dataclasses.dataclass(frozen=True)
+class StreamProblem:
+    """The decentralized *online* learning problem: round k feeds agent n
+    the fresh, already-featurized minibatch (feats[k, n], labels[k, n]).
+    A pytree (array leaves, static lam/rho), so the whole stream traces
+    through the fit scan and is sliced per round by the solver."""
+
+    feats: jax.Array   # (R, N, b, D) RF-mapped minibatch streams
+    labels: jax.Array  # (R, N, b)
+    adjacency: jax.Array  # (N, N)
+    lam: float         # global ridge lambda (split lam/N per agent)
+    rho: float         # ADMM penalty / step size
+
+    @property
+    def num_rounds(self) -> int:
+        return self.feats.shape[0]
+
+    @property
+    def num_agents(self) -> int:
+        return self.feats.shape[1]
+
+    @property
+    def batch(self) -> int:
+        return self.feats.shape[2]
+
+    @property
+    def feature_dim(self) -> int:
+        return self.feats.shape[-1]
+
+    def round_batch(self, k) -> tuple[jax.Array, jax.Array]:
+        """(feats, labels) of round k (traced-friendly, wraps modulo R)."""
+        r = k % self.num_rounds
+        return jnp.take(self.feats, r, axis=0), jnp.take(self.labels, r,
+                                                         axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltStream:
+    stream: StreamProblem
+    graph: graph_mod.Graph
+    rff_params: rff.RFFParams
+    dataset: StreamDataset
+
+
+def stream_from_arrays(rff_params: rff.RFFParams, x, y,
+                       graph_or_adjacency, *, lam: float,
+                       rho: float) -> StreamProblem:
+    """Featurize a raw (R, N, b, d) / (R, N, b) stream with an existing RFF
+    map — how `KernelModel.partial_fit` turns fresh raw traffic into the
+    StreamProblem its thetas were trained against."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if x.ndim != 4 or y.ndim != 3 or x.shape[:3] != y.shape:
+        raise ValueError(
+            "a raw stream is x (R, N, b, d) with labels y (R, N, b); got "
+            f"x {x.shape} / y {y.shape}")
+    adj = (graph_or_adjacency.adjacency
+           if isinstance(graph_or_adjacency, graph_mod.Graph)
+           else graph_or_adjacency)
+    feats = rff.featurize(rff_params, x)
+    return StreamProblem(feats=feats, labels=y,
+                         adjacency=jnp.asarray(adj, feats.dtype),
+                         lam=lam, rho=rho)
+
+
+def build_stream(config: FitConfig,
+                 num_rounds: int | None = None) -> BuiltStream:
+    """Construct the streaming problem a config describes: the per-agent
+    minibatch stream (`config.stream` kind, `config.online_batch` sized,
+    one round per fit iteration unless `num_rounds` overrides), the
+    consensus graph, and the common-seed RFF featurization."""
+    cfg = config.krr
+    R = config.resolved_iters if num_rounds is None else num_rounds
+    if R < 1:
+        raise ValueError(f"a stream needs >= 1 round, got {R}")
+    ds = stream_synthetic(kind=config.stream, num_rounds=R,
+                          num_agents=cfg.num_agents,
+                          batch=config.online_batch,
+                          bandwidth=cfg.bandwidth, seed=cfg.seed)
+    g = build_graph(config, cfg.num_agents, seed=cfg.seed)
+    p = rff.draw_rff(jax.random.PRNGKey(cfg.seed), ds.input_dim,
+                     cfg.num_features, cfg.bandwidth, mapping=cfg.mapping)
+    stream = stream_from_arrays(p, np.asarray(ds.x), np.asarray(ds.y), g,
+                                lam=cfg.lam, rho=cfg.rho)
+    return BuiltStream(stream=stream, graph=g, rff_params=p, dataset=ds)
 
 
 def build_graph(config: FitConfig, num_agents: int,

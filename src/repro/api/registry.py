@@ -36,6 +36,16 @@ class Solver(Protocol):
     #: step; fit() rejects an explicit FitConfig.comm on unaware solvers
     comm_aware: bool
 
+    # Streaming solvers (the online family) additionally carry, by
+    # convention (checked via getattr, not the runtime protocol):
+    #   streaming: bool            — fit_stream() accepts only these
+    #   stream_backends: tuple     — subset of ("simulator", "spmd") the
+    #                                streaming driver can route to (the
+    #                                batch `backends` tuple stays the
+    #                                fit() contract)
+    #   warm_start(state, theta0)  — re-seed a fresh state from deployed
+    #                                parameters (KernelModel.partial_fit)
+
     def prepare_host(self, problem: Any, ctx: Any) -> Any: ...
 
     def prepare_traced(self, problem: Any, ctx: Any, host_aux: Any) -> Any: ...
@@ -95,3 +105,24 @@ def ensure_primal_supported(config, solver: Solver) -> None:
             f"solver {config.algorithm!r} has no (21a) primal subproblem "
             f"for primal={config.primal!r} to solve; leave primal='auto' "
             "or pick an ADMM solver (dkla/coke)")
+
+
+def ensure_stream_supported(config, solver: Solver) -> None:
+    """The fit_stream() admission checks: only the streaming solvers take a
+    StreamProblem, and only on the backends their online update is wired
+    for. Shared by fit_stream() and KernelModel.partial_fit()."""
+    if not getattr(solver, "streaming", False):
+        raise ValueError(
+            f"solver {config.algorithm!r} is a batch algorithm; fit_stream "
+            "drives the streaming family (online_dkla/online_coke/"
+            "qc_odkla) — use fit() instead")
+    stream_backends = getattr(solver, "stream_backends", ())
+    if config.backend not in stream_backends:
+        raise ValueError(
+            f"streaming solver {config.algorithm!r} supports backends "
+            f"{stream_backends}, not {config.backend!r}")
+    if config.topology is not None:
+        raise ValueError(
+            "the streaming solvers run on a static consensus graph; drop "
+            "FitConfig.topology or use the batch ADMM solvers")
+    ensure_primal_supported(config, solver)

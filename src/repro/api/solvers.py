@@ -23,6 +23,14 @@ from repro.core.admm import Problem
 from repro.core.graph import Graph, metropolis_weights
 
 
+def _consensus_gap(theta: jax.Array) -> jax.Array:
+    """max_i ||theta_i - mean theta|| over the (N, D) stack — the one
+    spelling of the Fig.-1 diagnostic every recorder here uses (the legacy
+    `admm.run` arithmetic: bit-parity contract)."""
+    mean_theta = jnp.mean(theta, axis=0, keepdims=True)
+    return jnp.max(jnp.sqrt(jnp.sum((theta - mean_theta) ** 2, axis=-1)))
+
+
 def _stacked_metrics(problem: Problem, theta: jax.Array, comms: jax.Array,
                      bits: jax.Array) -> dict[str, jax.Array]:
     """The paper's per-iteration evaluation triple plus cumulative bits,
@@ -30,9 +38,8 @@ def _stacked_metrics(problem: Problem, theta: jax.Array, comms: jax.Array,
     did (bit-parity contract)."""
     preds = jnp.einsum("ntd,nd->nt", problem.feats, theta)
     mse = jnp.mean((problem.labels - preds) ** 2)
-    mean_theta = jnp.mean(theta, axis=0, keepdims=True)
-    gap = jnp.max(jnp.sqrt(jnp.sum((theta - mean_theta) ** 2, axis=-1)))
-    return {"train_mse": mse, "comms": comms, "consensus_gap": gap,
+    return {"train_mse": mse, "comms": comms,
+            "consensus_gap": _consensus_gap(theta),
             "bits": jnp.asarray(bits, jnp.float32)}
 
 
@@ -161,7 +168,7 @@ class CTASolver:
 
 
 # ---------------------------------------------------------------------------
-# Streaming (online) COKE
+# The streaming family: online-DKLA, online-COKE, QC-ODKLA
 # ---------------------------------------------------------------------------
 
 class OnlineFitState(NamedTuple):
@@ -169,43 +176,89 @@ class OnlineFitState(NamedTuple):
     inst_mse: jax.Array   # pre-update MSE on the round's incoming minibatch
 
 
-@register_solver("online_coke")
-class OnlineCOKESolver:
-    """Streaming COKE over the problem's local shards: round k feeds each
-    agent a rotating `online_batch`-sized window of its own data as the
-    fresh minibatch, takes one censored streaming-ADMM step, and records
-    the online-protocol regret metric (pre-update instantaneous MSE)."""
+def _stream_metrics(theta: jax.Array, comms: jax.Array, bits: jax.Array,
+                    inst: jax.Array) -> dict[str, jax.Array]:
+    """Streaming history: the regret sample (pre-update instantaneous MSE,
+    doubling as the train_mse trajectory — a stream has no fixed train
+    set), cumulative comms/bits, and the consensus gap. Key-identical on
+    every streaming backend (backends._stream_chunk mirrors it)."""
+    return {"train_mse": inst, "instant_mse": inst, "comms": comms,
+            "consensus_gap": _consensus_gap(theta),
+            "bits": jnp.asarray(bits, jnp.float32)}
 
-    backends = ("simulator",)
+
+class _OnlineSolver:
+    """Shared adapter for the streaming family. Works on two problem
+    forms: a `StreamProblem` (fit_stream — round k is the stream's k-th
+    minibatch) and, for backward compatibility, a batch `admm.Problem`
+    (fit — round k is a rotating `online_batch`-sized window over each
+    agent's local shard). Records the online-protocol regret metric
+    (pre-update instantaneous MSE) either way."""
+
+    backends = ("simulator",)              # the batch fit() contract
+    stream_backends = ("simulator", "spmd")
+    streaming = True
     consensus_strategy = None
     comm_aware = True
     topology_aware = False
 
-    def prepare_host(self, problem: Problem, ctx: SolveContext):
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
+        raise NotImplementedError
+
+    def _eta(self, ctx: SolveContext) -> float | None:
+        """Linearized-ADMM proximal coefficient; None = gradient step."""
         return None
 
-    def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
+    def prepare_host(self, problem, ctx: SolveContext):
         return None
 
-    def init_state(self, problem: Problem, ctx: SolveContext):
+    def prepare_traced(self, problem, ctx: SolveContext, host_aux):
+        return None
+
+    def init_state(self, problem, ctx: SolveContext):
         N, D = problem.num_agents, problem.feature_dim
         inner = online.init_state(N, D, problem.feats.dtype,
-                                  policy=ctx.comm)
+                                  policy=self._policy(ctx))
         return OnlineFitState(inner, jnp.zeros((), problem.feats.dtype))
 
-    def step(self, problem: Problem, ctx: SolveContext, aux,
-             state: OnlineFitState):
+    def warm_start(self, state: OnlineFitState, theta0) -> OnlineFitState:
+        """Re-seed a fresh state from deployed parameters: theta AND the
+        last-broadcast theta_hat start at theta0 (every agent knows the
+        deployed model), duals stay zero — KernelModel.partial_fit's
+        online-refinement entry."""
+        theta0 = jnp.broadcast_to(
+            jnp.asarray(theta0, state.inner.theta.dtype),
+            state.inner.theta.shape)
+        inner = state.inner._replace(theta=theta0, theta_hat=theta0)
+        return state._replace(inner=inner)
+
+    def _round_batch(self, problem, ctx: SolveContext, step):
+        from repro.api.problems import StreamProblem  # local: avoid cycle
+
+        if isinstance(problem, StreamProblem):
+            return problem.round_batch(step)
         b, Ti = ctx.online_batch, problem.feats.shape[1]
-        idx = (state.inner.step * b + jnp.arange(b)) % Ti
-        feats = jnp.take(problem.feats, idx, axis=1)
-        labels = jnp.take(problem.labels, idx, axis=1)
-        inner, inst = online.online_coke_step(
-            state.inner, feats, labels, problem.adjacency, ctx.comm,
-            lam=problem.lam, rho=problem.rho, lr=ctx.online_lr)
+        idx = (step * b + jnp.arange(b)) % Ti
+        return (jnp.take(problem.feats, idx, axis=1),
+                jnp.take(problem.labels, idx, axis=1))
+
+    def step(self, problem, ctx: SolveContext, aux,
+             state: OnlineFitState):
+        feats, labels = self._round_batch(problem, ctx, state.inner.step)
+        inner, inst = online.stream_step(
+            state.inner, feats, labels, problem.adjacency,
+            self._policy(ctx), lam=problem.lam, rho=problem.rho,
+            lr=ctx.online_lr, eta=self._eta(ctx))
         return OnlineFitState(inner, inst)
 
-    def metrics(self, problem: Problem, ctx: SolveContext, aux,
+    def metrics(self, problem, ctx: SolveContext, aux,
                 state: OnlineFitState):
+        from repro.api.problems import StreamProblem  # local: avoid cycle
+
+        if isinstance(problem, StreamProblem):
+            return _stream_metrics(state.inner.theta, state.inner.comms,
+                                   jnp.sum(state.inner.comm.bits),
+                                   state.inst_mse)
         m = _stacked_metrics(problem, state.inner.theta, state.inner.comms,
                              jnp.sum(state.inner.comm.bits))
         m["instant_mse"] = state.inst_mse
@@ -213,6 +266,42 @@ class OnlineCOKESolver:
 
     def theta_of(self, state: OnlineFitState) -> jax.Array:
         return state.inner.theta
+
+
+@register_solver("online_dkla")
+class OnlineDKLASolver(_OnlineSolver):
+    """Streaming DKLA: the always-transmit baseline of the online family.
+    Censor thresholds of the configured policy are structurally stripped
+    (like batch DKLA); quantize/drop stages still apply."""
+
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
+        return comm_mod.uncensored(ctx.comm)
+
+
+@register_solver("online_coke")
+class OnlineCOKESolver(_OnlineSolver):
+    """Streaming COKE (the paper's future-work direction): one censored
+    gradient step on the streaming augmented Lagrangian per round."""
+
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
+        return ctx.comm
+
+
+@register_solver("qc_odkla")
+class QCODKLASolver(_OnlineSolver):
+    """QC-ODKLA (Xu et al., 2022): linearized-ADMM primal (closed form,
+    per-agent stepsize 1/(eta + 2 rho deg_i)) with the full
+    Censor/Quantize/Drop policy chain threading through CommState.
+    `qc_eta=None` (the default) reuses the gradient stepsize `online_lr`,
+    in which case qc_odkla with the identity chain extension is
+    bit-identical to online_coke — the contract tests/test_stream.py
+    pins."""
+
+    def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
+        return ctx.comm
+
+    def _eta(self, ctx: SolveContext) -> float | None:
+        return ctx.qc_eta
 
 
 # ---------------------------------------------------------------------------

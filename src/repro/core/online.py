@@ -44,14 +44,30 @@ def init_state(num_agents: int, feature_dim: int,
                        comm_mod.as_chain(policy).init_state(num_agents))
 
 
-def online_coke_step(state: OnlineState, feats: jax.Array,
-                     labels: jax.Array, adjacency: jax.Array,
-                     schedule, *, lam: float, rho: float,
-                     lr: float) -> tuple[OnlineState, jax.Array]:
-    """One streaming round. feats: (N, b, D) fresh minibatch per agent;
-    labels: (N, b). `schedule` accepts any `core.comm` policy (Chain /
-    stage / CensorSchedule / None). Returns (new state, pre-update
-    instantaneous MSE)."""
+def stream_step(state: OnlineState, feats: jax.Array,
+                labels: jax.Array, adjacency: jax.Array,
+                schedule, *, lam: float, rho: float,
+                lr: float, eta: float | None = None
+                ) -> tuple[OnlineState, jax.Array]:
+    """One streaming round, shared by the whole online family.
+    feats: (N, b, D) fresh minibatch per agent; labels: (N, b).
+    `schedule` accepts any `core.comm` policy (Chain / stage /
+    CensorSchedule / None). Returns (new state, pre-update
+    instantaneous MSE — the online-protocol regret sample).
+
+    Primal update:
+      eta=None — one gradient step of size `lr` on the streaming
+        augmented Lagrangian (online-DKLA / online-COKE);
+      eta=float — the QC-ODKLA linearized-ADMM closed form: linearize the
+        local loss at theta^k, keep the consensus quadratic exact, add the
+        proximal term (eta/2)||theta - theta^k||^2. Its stationarity
+        condition solves to  theta^k - g / (eta + 2 rho deg_i)  with g the
+        SAME augmented gradient — i.e. a gradient step with the per-agent
+        stepsize 1/(eta + 2 rho deg_i). We implement it in exactly that
+        subtractive form so the two modes share every other float op
+        (with eta=None and stepsize lr they are bit-identical, the
+        identity contract tests/test_stream.py pins).
+    """
     chain = comm_mod.as_chain(schedule)
     N = feats.shape[0]
     deg = jnp.sum(adjacency, axis=1)
@@ -67,7 +83,10 @@ def online_coke_step(state: OnlineState, feats: jax.Array,
          + 2.0 * rho * deg[:, None] * state.theta
          + state.gamma
          - rho * (deg[:, None] * state.theta_hat + nbr_sum))
-    theta = state.theta - lr * g
+    if eta is None:
+        theta = state.theta - lr * g
+    else:
+        theta = state.theta - g / (eta + 2.0 * rho * deg[:, None])
 
     k = state.step + 1
     comm_state = chain.ensure_state(state.comm, N)
@@ -78,6 +97,15 @@ def online_coke_step(state: OnlineState, feats: jax.Array,
     return OnlineState(theta, theta_hat, gamma, k,
                        state.comms + jnp.sum(send.astype(jnp.int32)),
                        comm_state), inst_mse
+
+
+def online_coke_step(state: OnlineState, feats: jax.Array,
+                     labels: jax.Array, adjacency: jax.Array,
+                     schedule, *, lam: float, rho: float,
+                     lr: float) -> tuple[OnlineState, jax.Array]:
+    """The legacy spelling of `stream_step` with the gradient primal."""
+    return stream_step(state, feats, labels, adjacency, schedule,
+                       lam=lam, rho=rho, lr=lr, eta=None)
 
 
 @partial(jax.jit, static_argnames=("schedule", "lam", "rho", "lr",

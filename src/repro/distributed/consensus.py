@@ -310,6 +310,88 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     return new_params, new_state, metrics
 
 
+def init_stream_state(ccfg: ConsensusConfig, theta0: jax.Array,
+                      comm=None) -> dict[str, Any]:
+    """State carried by `stream_update` alongside the (N, D) params:
+    last-broadcast theta_hat, duals, the neighbor cache (exact rolls of
+    theta_hat — agents may start unequal under a warm start), and the
+    policy's persistent CommState."""
+    chain = comm_mod.as_chain(comm)
+    theta_hat = theta0.astype(jnp.float32)
+    left, right = _ring_neighbors(theta_hat, ccfg.offsets)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "comms": jnp.zeros((), jnp.int32),
+        "theta_hat": theta_hat,
+        "gamma": jnp.zeros_like(theta_hat),
+        "nbr_left": left,
+        "nbr_right": right,
+        "comm": chain.init_state(theta0.shape[0]),
+    }
+
+
+def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
+                  lam: float, lr: float, eta: float | None = None,
+                  comm=None):
+    """One streaming (online) round on the ring runtime — the
+    `consensus_update`-style hook behind `fit_stream`'s spmd backend.
+
+    params: {"theta": (N, D)}; feats/labels: the round's fresh minibatch
+    (N, b, D)/(N, b). Fresh-minibatch gradient, gradient (eta=None) or
+    linearized-ADMM (eta=float, per QC-ODKLA) primal, then the SAME
+    `core.comm` broadcast decision code as the simulator's
+    `core.online.stream_step` — send decisions and bit accounting match
+    across backends — with the dual-update neighbor fetch cached for the
+    next primal (2 permutes per round on a static circulant).
+
+    Returns (new_params, new_state, metrics) with metrics carrying the
+    pre-update instantaneous MSE (the regret sample) and cumulative bits.
+    """
+    theta = params["theta"]
+    theta_hat, gamma = state["theta_hat"], state["gamma"]
+    N = theta.shape[0]
+    deg = ccfg.degree           # static: circulant topologies only
+    rho = ccfg.rho
+    chain = comm_mod.as_chain(comm)
+    k = state["step"] + 1
+
+    preds = jnp.einsum("nbd,nd->nb", feats, theta)
+    inst_mse = jnp.mean((labels - preds) ** 2)
+
+    # streaming augmented-Lagrangian gradient — the simulator's nbr_sum
+    # (adjacency @ theta_hat) served from the cached permutes
+    resid = preds - labels
+    g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
+    nbr_sum = state["nbr_left"] + state["nbr_right"]
+    g = (g_data + (2.0 * lam / N) * theta
+         + 2.0 * rho * deg * theta
+         + gamma
+         - rho * (deg * theta_hat + nbr_sum))
+    if eta is None:
+        new_theta = theta - lr * g
+    else:
+        new_theta = theta - g / (eta + 2.0 * rho * deg)
+
+    # policy-governed broadcast: identical decision code and CommState
+    # evolution as the simulator path (chain.apply on the (N, D) message)
+    comm_state = chain.ensure_state(state.get("comm"), N)
+    new_theta_hat, send, comm_state = chain.apply(new_theta, theta_hat, k,
+                                                  comm_state)
+
+    # dual with theta_hat^k — the round's ONLY neighbor fetch; cached for
+    # the next primal update
+    hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
+    new_gamma = gamma + rho * (deg * new_theta_hat - hat_l - hat_r)
+
+    metrics = {"instant_mse": inst_mse,
+               "bits": jnp.sum(comm_state.bits)}
+    new_state = dict(state, step=k,
+                     comms=state["comms"] + jnp.sum(send.astype(jnp.int32)),
+                     theta_hat=new_theta_hat, gamma=new_gamma,
+                     nbr_left=hat_l, nbr_right=hat_r, comm=comm_state)
+    return {"theta": new_theta}, new_state, metrics
+
+
 def local_update(opt_cfg: OptConfig, params, grads, state):
     """Purely local step (no collectives over the agent axis) — the censored
     rounds of the event-triggered coke_et strategy."""

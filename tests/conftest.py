@@ -1,6 +1,18 @@
-"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
-benches must see the host's real (single) device; only the dry-run sets the
-512-device flag, inside its own process."""
+"""Shared fixtures + the cross-backend conformance harness.
+
+NOTE: no XLA device-count flags here — smoke tests and benches must see
+the host's real (single) device; only the dry-run sets the 512-device
+flag, inside its own process.
+
+The conformance harness is the one way parity is pinned across backends
+(and across config variants that must agree): `assert_fit_parity` runs a
+config on several backends and checks the contract every backend pair in
+this repo satisfies — bit-identical send decisions and bit accounting
+(`exact` history keys), float-close trajectories and final thetas.
+`assert_results_match` is the underlying two-run comparator, reused for
+same-backend contracts (identity chains, primal-mode parity). Every new
+backend/solver must pass through these rather than hand-rolled asserts.
+"""
 import jax
 import numpy as np
 import pytest
@@ -14,3 +26,80 @@ def rng():
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend conformance harness
+# ---------------------------------------------------------------------------
+
+#: every backend pair the batch solvers must agree across
+BACKEND_PAIRS = (("simulator", "spmd"), ("simulator", "fused"),
+                 ("spmd", "fused"))
+
+
+@pytest.fixture(params=BACKEND_PAIRS, ids=lambda p: f"{p[0]}-vs-{p[1]}")
+def backend_pair(request):
+    """Parametrizes a test over every backend pair."""
+    return request.param
+
+
+def assert_results_match(ref, other, *, exact=(), theta_atol=None,
+                         close=None, err=""):
+    """Pin parity between two FitResults.
+
+    exact      — history keys that must match bit-for-bit; the string "*"
+                 means every key of `ref.history` AND the final theta
+                 (the identity-chain / bit-parity contract).
+    theta_atol — absolute tolerance for the final theta stack (None =
+                 skip, unless exact="*").
+    close      — {history_key: assert_allclose kwargs} for float-close
+                 trajectory keys; keys missing from either history are an
+                 error (a silently skipped key is a silently dropped pin).
+    """
+    if exact == "*":
+        for k in ref.history:
+            np.testing.assert_array_equal(
+                np.asarray(ref.history[k]), np.asarray(other.history[k]),
+                err_msg=f"{err}:{k}")
+        np.testing.assert_array_equal(np.asarray(ref.theta),
+                                      np.asarray(other.theta),
+                                      err_msg=f"{err}:theta")
+        return
+    for k in exact:
+        np.testing.assert_array_equal(
+            np.asarray(ref.history[k]), np.asarray(other.history[k]),
+            err_msg=f"{err}:{k}")
+    for k, kw in (close or {}).items():
+        np.testing.assert_allclose(
+            np.asarray(ref.history[k]), np.asarray(other.history[k]),
+            err_msg=f"{err}:{k}", **kw)
+    if theta_atol is not None:
+        np.testing.assert_allclose(np.asarray(ref.theta),
+                                   np.asarray(other.theta),
+                                   atol=theta_atol,
+                                   err_msg=f"{err}:theta")
+
+
+def assert_fit_parity(config, backends, *, problem=None, runner=None,
+                      exact=("comms",), theta_atol=1e-5, close=None):
+    """Run `config` on every backend in `backends` and pin cross-backend
+    parity against the first (the reference).
+
+    runner — None = `repro.api.fit`; pass a callable (config, problem) ->
+             FitResult to conform other drivers (e.g. `fit_stream`, with
+             the StreamProblem as `problem`).
+    Returns {backend: FitResult} for follow-up assertions.
+    """
+    from repro.api import fit
+
+    if runner is None:
+        def runner(cfg, prob):
+            return fit(cfg, problem=prob)
+    results = {b: runner(config.replace(backend=b), problem)
+               for b in backends}
+    ref = results[backends[0]]
+    for b in backends[1:]:
+        assert_results_match(ref, results[b], exact=exact,
+                             theta_atol=theta_atol, close=close,
+                             err=f"{backends[0]}-vs-{b}")
+    return results

@@ -7,6 +7,7 @@ import warnings
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_fit_parity
 
 from repro.api import (FitConfig, KRRConfig, build_problem, fit, get_solver,
                        list_solvers)
@@ -32,8 +33,8 @@ def built():
 
 def test_registry_roundtrip():
     names = list_solvers()
-    assert {"dkla", "coke", "cta", "online_coke",
-            "ridge_oracle"} <= set(names)
+    assert {"dkla", "coke", "cta", "online_dkla", "online_coke",
+            "qc_odkla", "ridge_oracle"} <= set(names)
     for name in names:
         s = get_solver(name)
         assert isinstance(s, Solver)
@@ -143,25 +144,13 @@ def ring_built():
 
 
 @pytest.mark.parametrize("algorithm", ["dkla", "coke"])
-def test_simulator_vs_spmd_parity(ring_built, algorithm):
-    cfg = RING.replace(algorithm=algorithm)
-    sim = fit(cfg, problem=ring_built.problem)
-    spmd = fit(cfg.replace(backend="spmd"), problem=ring_built.problem)
-    np.testing.assert_allclose(np.asarray(sim.theta),
-                               np.asarray(spmd.theta), atol=1e-5)
-    np.testing.assert_allclose(np.asarray(sim.train_mse),
-                               np.asarray(spmd.train_mse), atol=1e-6)
-    np.testing.assert_array_equal(np.asarray(sim.comms),
-                                  np.asarray(spmd.comms))
-
-
-def test_spmd_vs_fused_kernel_parity(ring_built):
-    spmd = fit(RING.replace(backend="spmd"), problem=ring_built.problem)
-    fused = fit(RING.replace(backend="fused"), problem=ring_built.problem)
-    np.testing.assert_allclose(np.asarray(spmd.theta),
-                               np.asarray(fused.theta), atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(spmd.comms),
-                                  np.asarray(fused.comms))
+def test_backend_parity(ring_built, backend_pair, algorithm):
+    """Every backend pair agrees on every iteration's send count exactly
+    and on the trajectories/final thetas to float tolerance — the
+    conformance contract new backends must pass."""
+    assert_fit_parity(RING.replace(algorithm=algorithm), backend_pair,
+                      problem=ring_built.problem, exact=("comms",),
+                      theta_atol=1e-5, close={"train_mse": dict(atol=1e-6)})
 
 
 def test_spmd_rejects_noncirculant_graph(built):
@@ -180,25 +169,16 @@ def test_cross_backend_comm_parity_bit_for_bit(ring_built):
         censor_v=None, censor_mu=None,
         comm=Chain([Censor(0.3, 0.97), Quantize(bits=5, seed=7),
                     Drop(p=0.15, seed=11)]))
-    runs = {b: fit(cfg.replace(backend=b), problem=ring_built.problem)
-            for b in ("simulator", "spmd", "fused")}
-    sim = runs["simulator"]
+    # cumulative send decisions identical at every iteration => the
+    # per-iteration decision sequence is identical; every transmission
+    # accounted at the same bit width; the quantized broadcasts drive
+    # near-identical trajectories
+    runs = assert_fit_parity(cfg, ("simulator", "spmd", "fused"),
+                             problem=ring_built.problem,
+                             exact=("comms", "bits"), theta_atol=1e-5)
     # the policy actually engaged: some sends censored, some payloads lost
+    sim = runs["simulator"]
     assert 0 < int(sim.comms[-1]) < RING.resolved_iters * 4
-    for b in ("spmd", "fused"):
-        r = runs[b]
-        # cumulative send decisions identical at every iteration => the
-        # per-iteration decision sequence is identical
-        np.testing.assert_array_equal(np.asarray(sim.comms),
-                                      np.asarray(r.comms), err_msg=b)
-        # and every transmission was accounted at the same bit width
-        np.testing.assert_array_equal(np.asarray(sim.history["bits"]),
-                                      np.asarray(r.history["bits"]),
-                                      err_msg=b)
-        # the quantized broadcasts drive near-identical trajectories
-        np.testing.assert_allclose(np.asarray(sim.theta),
-                                   np.asarray(r.theta), atol=1e-5,
-                                   err_msg=b)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_results_match
 
 from repro.api import FitConfig, KRRConfig, build_problem, fit
 from repro.core import admm
@@ -38,12 +39,9 @@ def test_cg_matches_cholesky_simulator(ring512):
     through the norm threshold)."""
     chol = fit(RING.replace(primal="cholesky"), problem=ring512.problem)
     cg = fit(RING.replace(primal="cg"), problem=ring512.problem)
-    np.testing.assert_allclose(np.asarray(chol.theta),
-                               np.asarray(cg.theta), atol=1e-4)
-    np.testing.assert_array_equal(np.asarray(chol.comms),
-                                  np.asarray(cg.comms))
-    np.testing.assert_allclose(np.asarray(chol.train_mse),
-                               np.asarray(cg.train_mse), rtol=1e-4)
+    assert_results_match(chol, cg, exact=("comms",), theta_atol=1e-4,
+                         close={"train_mse": dict(rtol=1e-4)},
+                         err="cholesky-vs-cg")
 
 
 @pytest.mark.parametrize("backend", ["spmd", "fused"])
@@ -55,10 +53,8 @@ def test_cg_matches_cholesky_distributed(ring512, backend):
     chol = fit(RING.replace(primal="cholesky"), problem=ring512.problem)
     dist = fit(RING.replace(primal="cg", backend=backend),
                problem=ring512.problem)
-    np.testing.assert_allclose(np.asarray(chol.theta),
-                               np.asarray(dist.theta), atol=2e-4)
-    np.testing.assert_array_equal(np.asarray(chol.comms),
-                                  np.asarray(dist.comms))
+    assert_results_match(chol, dist, exact=("comms",), theta_atol=2e-4,
+                         err=f"cholesky-vs-cg:{backend}")
 
 
 def test_auto_primal_crosses_over():

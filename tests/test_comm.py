@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_fit_parity, assert_results_match
 
 from repro.api import (Censor, Chain, Drop, FitConfig, KRRConfig, Quantize,
                        TopologySchedule, build_problem, fit, sweep)
@@ -216,12 +217,7 @@ def test_identity_chain_bit_identical_to_plain_coke(built):
         censor_v=None, censor_mu=None,
         comm=Chain([Censor(0.5, 0.97), Quantize(bits=float("inf")),
                     Drop(p=0.0)])), problem=built.problem)
-    for key in plain.history:
-        np.testing.assert_array_equal(np.asarray(plain.history[key]),
-                                      np.asarray(ident.history[key]),
-                                      err_msg=key)
-    np.testing.assert_array_equal(np.asarray(plain.theta),
-                                  np.asarray(ident.theta))
+    assert_results_match(plain, ident, exact="*", err="identity-chain")
 
 
 def test_identity_chain_bit_identical_on_spmd_and_fused(ring6):
@@ -235,14 +231,7 @@ def test_identity_chain_bit_identical_on_spmd_and_fused(ring6):
         chained = fit(RING6.replace(backend=backend, censor_v=None,
                                     censor_mu=None, comm=ident),
                       problem=ring6.problem)
-        for key in plain.history:
-            np.testing.assert_array_equal(
-                np.asarray(plain.history[key]),
-                np.asarray(chained.history[key]),
-                err_msg=f"{backend}:{key}")
-        np.testing.assert_array_equal(np.asarray(plain.theta),
-                                      np.asarray(chained.theta),
-                                      err_msg=backend)
+        assert_results_match(plain, chained, exact="*", err=backend)
 
 
 def test_legacy_censor_knobs_map_onto_chain(built):
@@ -347,14 +336,8 @@ def test_single_graph_schedule_matches_static(ring6):
 def test_time_varying_topology_simulator_spmd_parity(ring6):
     cfg = RING6.replace(
         topology=TopologySchedule.circulant_cycle(6, [(1,), (1, 2)]))
-    sim = fit(cfg, problem=ring6.problem)
-    spmd = fit(cfg.replace(backend="spmd"), problem=ring6.problem)
-    np.testing.assert_allclose(np.asarray(sim.theta),
-                               np.asarray(spmd.theta), atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(sim.comms),
-                                  np.asarray(spmd.comms))
-    np.testing.assert_array_equal(np.asarray(sim.bits),
-                                  np.asarray(spmd.bits))
+    assert_fit_parity(cfg, ("simulator", "spmd"), problem=ring6.problem,
+                      exact=("comms", "bits"), theta_atol=1e-5)
 
 
 def test_time_varying_topology_closed_form_primal(ring6):
@@ -464,3 +447,79 @@ def test_sweep_select_tie_breaking_deterministic(built):
     # the rule prefers fewer bits over fewer transmissions: the quantized
     # cells transmit at least as often but pay far fewer bits
     assert int(ev["bits"][1]) < int(ev["bits"][0])
+
+
+def test_cell_config_roundtrips_policies_and_censor_knobs(built):
+    """Satellite: `cell_config(i)` must reproduce exactly the config that
+    fitted cell i — explicit policy cells come back as `comm=` (legacy
+    knobs cleared), numeric (v, mu) cells as the censor knobs — so
+    `fit(sw.cell_config(i))` re-runs the very same cell."""
+    chain_grid = [Chain([Censor(0.5, 0.97), Quantize(4.0)]),
+                  Chain([Censor(0.1, 0.99), Quantize(8.0)])]
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), chain_grid,
+               problem=built.problem)
+    for i, chain in enumerate(chain_grid):
+        cfg = sw.cell_config(i)
+        assert cfg.comm == chain
+        assert cfg.censor_v is None and cfg.censor_mu is None
+        assert cfg.resolved_comm == chain
+    # numeric-pair cells (no stored policies) round-trip as censor knobs
+    import dataclasses
+    pair_grid = ((0.5, 0.97), (0.1, 0.99))
+    sw2 = sweep(BASE.replace(censor_v=None, censor_mu=None), pair_grid,
+                problem=built.problem)
+    sw2 = dataclasses.replace(sw2, policies=())
+    for i, (v, mu) in enumerate(pair_grid):
+        cfg = sw2.cell_config(i)
+        assert cfg.comm is None
+        # censors ride the SweepResult as float32 — equal to f32 precision
+        assert cfg.resolved_censor == pytest.approx((v, mu), rel=1e-6)
+
+
+def test_select_tie_breaks_equal_bits_on_comms_then_index(built):
+    """Satellite: the full tie-break ladder. With test MSEs forced into a
+    tie (huge allowed gap) and bits histories forced equal, the rule must
+    fall through to fewest COMMS; with comms also tied, to the lowest
+    index — pinned by surgically editing a real sweep's histories."""
+    import dataclasses
+
+    grid = ((0.5, 0.97), (0.05, 0.999), (0.3, 0.98))
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), grid,
+               problem=built.problem)
+    x, y = built.x_test, built.y_test
+    G, T = sw.history["bits"].shape
+
+    # equal bits everywhere -> comms decides
+    bits_tied = dict(sw.history, bits=jnp.ones((G, T), jnp.float32))
+    tied = dataclasses.replace(sw, history=bits_tied)
+    idx, _ = tied.select(x, y, max_mse_gap=100.0,
+                         rff_params=built.rff_params)
+    comms = np.asarray(sw.history["comms"][:, -1])
+    assert idx == int(np.flatnonzero(comms == comms.min())[0])
+
+    # equal bits AND equal comms -> lowest index wins, stably
+    all_tied = dict(bits_tied, comms=jnp.ones((G, T), jnp.int32))
+    tied = dataclasses.replace(sw, history=all_tied)
+    picks = [tied.select(x, y, max_mse_gap=100.0,
+                         rff_params=built.rff_params)[0]
+             for _ in range(3)]
+    assert picks == [0, 0, 0]
+
+
+def test_select_on_sweep_with_zero_transmissions(built):
+    """Satellite: a grid whose censor thresholds are so large that NO agent
+    ever transmits must still select deterministically (all cells tie at
+    0 bits / 0 comms -> lowest qualifying index), not divide-by-zero or
+    rank garbage."""
+    grid = ((1e9, 1.0), (1e9, 1.0))
+    sw = sweep(BASE.replace(censor_v=None, censor_mu=None), grid,
+               problem=built.problem)
+    ev = sw.evaluate(built.x_test, built.y_test,
+                     rff_params=built.rff_params)
+    np.testing.assert_array_equal(np.asarray(ev["comms"]), [0, 0])
+    np.testing.assert_array_equal(np.asarray(ev["bits"]), [0.0, 0.0])
+    idx, model = sw.select(built.x_test, built.y_test, max_mse_gap=10.0,
+                           rff_params=built.rff_params)
+    assert idx == 0
+    assert np.isfinite(float(model.evaluate(built.x_test,
+                                            built.y_test)["test_mse"]))

@@ -1,0 +1,393 @@
+"""The streaming subsystem: StreamProblem construction, fit_stream through
+the façade (registry, history, to_model, partial_fit), the QC-ODKLA
+identity-chain contract (simulator AND spmd, pinned via the conformance
+harness), cross-backend streaming parity, and the `core.online` edge cases
+(schedule=None vs identity chain, comms monotonicity, legacy state
+alignment, stationary-stream regret)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_fit_parity, assert_results_match
+from hypothesis_compat import given, settings, st
+
+from repro.api import (Censor, Chain, Drop, FitConfig, KRRConfig, Quantize,
+                       StreamProblem, build_stream, fit, fit_stream,
+                       get_solver, stream_from_arrays)
+from repro.core import comm as comm_mod
+from repro.core import online
+from repro.core.graph import ring
+from repro.data.synthetic import STREAM_KINDS, stream_synthetic
+
+KRR = KRRConfig(num_agents=6, samples_per_agent=50, num_features=16,
+                lam=1e-2, rho=0.1, seed=0)
+BASE = FitConfig(krr=KRR, algorithm="online_coke", graph="ring",
+                 censor_v=0.3, censor_mu=0.99, num_iters=80,
+                 online_batch=8, online_lr=0.3)
+
+
+@pytest.fixture(scope="module")
+def built():
+    return build_stream(BASE)
+
+
+def _run(cfg, stream):
+    return fit_stream(cfg, stream=stream)
+
+
+# ---------------------------------------------------------------------------
+# Generators and StreamProblem construction
+# ---------------------------------------------------------------------------
+
+def test_stream_generators_shapes_and_kinds():
+    for kind in STREAM_KINDS:
+        ds = stream_synthetic(kind=kind, num_rounds=12, num_agents=3,
+                              batch=4, seed=1)
+        assert ds.x.shape == (12, 3, 4, 5) and ds.y.shape == (12, 3, 4)
+        assert ds.kind == kind
+        assert 0.0 <= ds.x.min() and ds.x.max() <= 1.0
+    with pytest.raises(ValueError, match="stream kind"):
+        stream_synthetic(kind="cyclic")
+
+
+def test_drift_moves_the_target_and_shift_moves_the_inputs():
+    stat = stream_synthetic("stationary", num_rounds=40, num_agents=3,
+                            batch=8, seed=2)
+    drift = stream_synthetic("drift", num_rounds=40, num_agents=3,
+                             batch=8, seed=2)
+    shift = stream_synthetic("shift", num_rounds=40, num_agents=3,
+                             batch=8, seed=2)
+    # concept drift: identical raw inputs, different late-round labels
+    np.testing.assert_allclose(stat.x, drift.x, atol=1e-6)
+    assert np.abs(stat.y[-1] - drift.y[-1]).max() > 1e-3
+    # covariate shift: some input coordinate's mean moves between early
+    # and late rounds, far beyond the stationary sampling noise
+    d_stat = np.abs(stat.x[:5].mean((0, 1, 2))
+                    - stat.x[-5:].mean((0, 1, 2))).max()
+    d_shift = np.abs(shift.x[:5].mean((0, 1, 2))
+                     - shift.x[-5:].mean((0, 1, 2))).max()
+    assert d_shift > 3 * max(d_stat, 1e-5)
+
+
+def test_build_stream_and_from_arrays_validate(built):
+    s = built.stream
+    assert isinstance(s, StreamProblem)
+    assert s.feats.shape == (80, 6, 8, 16) and s.labels.shape == (80, 6, 8)
+    assert s.num_rounds == 80 and s.num_agents == 6 and s.batch == 8
+    with pytest.raises(ValueError, match=r"\(R, N, b, d\)"):
+        stream_from_arrays(built.rff_params, np.zeros((4, 3, 2)),
+                           np.zeros((4, 3, 2)), ring(3), lam=0.1, rho=0.1)
+    with pytest.raises(ValueError, match="stream kind"):
+        BASE.replace(stream="cyclic")
+    with pytest.raises(ValueError, match="qc_eta"):
+        BASE.replace(qc_eta=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# fit_stream through the façade
+# ---------------------------------------------------------------------------
+
+def test_streaming_solvers_registered_and_marked():
+    for name in ("online_dkla", "online_coke", "qc_odkla"):
+        s = get_solver(name)
+        assert s.streaming
+        assert s.stream_backends == ("simulator", "spmd")
+        assert s.backends == ("simulator",)  # batch fit() stays simulator
+
+
+def test_fit_stream_learns_censors_and_deploys(built):
+    r = fit_stream(BASE, stream=built.stream)
+    inst = r.history["instant_mse"]
+    assert inst.shape == (80,)
+    # regret: the late-stream instantaneous MSE beats the early one
+    assert float(jnp.mean(inst[-10:])) < float(jnp.mean(inst[1:11]))
+    # censoring engaged
+    assert 0 < int(r.comms[-1]) < 80 * KRR.num_agents
+    # bits accounted for every transmission at full precision
+    np.testing.assert_array_equal(
+        np.asarray(r.bits),
+        np.asarray(r.comms) * KRR.num_features * 32)
+    # the streaming fit deploys exactly like a batch fit
+    model = r.to_model(built.rff_params)
+    preds = model.predict(np.asarray(built.dataset.x[-1, 0]))
+    assert preds.shape == (8,)
+    assert float(np.mean((np.asarray(preds)
+                          - built.dataset.y[-1, 0]) ** 2)) < 0.1
+
+
+def test_fit_stream_builds_stream_from_config_alone():
+    r = fit_stream(BASE.replace(num_iters=12))
+    assert r.history["instant_mse"].shape == (12,)
+    assert r.rff_params is not None
+    assert r.to_model().num_features == KRR.num_features
+
+
+def test_fit_stream_rejects_misuse(built):
+    with pytest.raises(ValueError, match="batch algorithm"):
+        fit_stream(BASE.replace(algorithm="coke"), stream=built.stream)
+    with pytest.raises(ValueError, match="backends"):
+        fit_stream(BASE.replace(backend="fused"), stream=built.stream)
+    with pytest.raises(ValueError, match="primal"):
+        fit_stream(BASE.replace(primal="cg"), stream=built.stream)
+    with pytest.raises(ValueError, match="fit_stream"):
+        fit(BASE, problem=built.stream)
+    from repro.core.graph import TopologySchedule
+    with pytest.raises(ValueError, match="static"):
+        fit_stream(BASE.replace(
+            topology=TopologySchedule.circulant_cycle(6, [(1,)])),
+            stream=built.stream)
+
+
+def test_online_dkla_strips_censor_but_keeps_compression(built):
+    r = fit_stream(BASE.replace(
+        algorithm="online_dkla", censor_v=None, censor_mu=None,
+        comm=Chain([Censor(5.0, 0.999), Quantize(bits=8)])),
+        stream=built.stream)
+    assert int(r.comms[-1]) == 80 * KRR.num_agents  # always transmits
+    assert int(r.bits[-1]) == 80 * KRR.num_agents * (
+        KRR.num_features * 8 + 32)
+
+
+def test_chunked_fit_stream_trajectory_identical(built):
+    full = fit_stream(BASE, stream=built.stream)
+    seen = []
+    chunked = fit_stream(BASE.replace(chunk_size=32), stream=built.stream,
+                         progress_cb=lambda k, m: seen.append(k))
+    assert seen == [32, 64, 80]
+    assert_results_match(full, chunked, exact="*", err="chunked")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the QC-ODKLA identity-chain contract, simulator AND spmd
+# ---------------------------------------------------------------------------
+
+IDENT = Chain([Censor(0.3, 0.99), Quantize(bits=float("inf")),
+               Drop(p=0.0)])
+
+
+@pytest.mark.parametrize("backend", ["simulator", "spmd"])
+def test_qc_odkla_identity_chain_bit_identical_to_online_coke(built,
+                                                              backend):
+    """Acceptance: fit_stream with qc_odkla + Chain([Censor(v, mu),
+    Quantize(inf), Drop(0)]) is bit-identical to online_coke with
+    Censor(v, mu) — the identity-chain contract extended to the streaming
+    path, on both wired backends."""
+    coke = fit_stream(BASE.replace(backend=backend), stream=built.stream)
+    qc = fit_stream(BASE.replace(
+        backend=backend, algorithm="qc_odkla",
+        censor_v=None, censor_mu=None, comm=IDENT), stream=built.stream)
+    assert_results_match(coke, qc, exact="*", err=backend)
+    # the contract is non-vacuous: censoring actually engaged
+    assert 0 < int(coke.comms[-1]) < 80 * KRR.num_agents
+
+
+def test_streaming_simulator_vs_spmd_parity(built):
+    """Cross-backend conformance for the streaming family: identical send
+    decisions and bit accounting at every round, float-close regret
+    trajectories and thetas — and key-identical histories, so any pair is
+    comparable with exact="*"."""
+    for algorithm in ("online_dkla", "online_coke", "qc_odkla"):
+        runs = assert_fit_parity(
+            BASE.replace(algorithm=algorithm),
+            ("simulator", "spmd"), problem=built.stream, runner=_run,
+            exact=("comms", "bits"), theta_atol=1e-5,
+            close={"instant_mse": dict(atol=1e-6),
+                   "consensus_gap": dict(atol=1e-6)})
+        assert (set(runs["simulator"].history)
+                == set(runs["spmd"].history)), algorithm
+
+
+def test_qc_odkla_explicit_eta_differs_but_converges(built):
+    """With an explicit proximal coefficient the linearized-ADMM step is a
+    genuinely different update (per-agent stepsize 1/(eta + 2 rho deg)) —
+    trajectories diverge from online_coke but still learn."""
+    qc = fit_stream(BASE.replace(algorithm="qc_odkla", qc_eta=2.0),
+                    stream=built.stream)
+    coke = fit_stream(BASE, stream=built.stream)
+    assert not np.array_equal(np.asarray(qc.theta), np.asarray(coke.theta))
+    inst = qc.history["instant_mse"]
+    assert float(jnp.mean(inst[-10:])) < float(jnp.mean(inst[1:11]))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: property test — the identity contract over random streams
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=15)
+@given(st.floats(0.0, 2.0), st.floats(0.8, 1.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_qc_odkla_identity_holds_for_any_stream_and_censor(v, mu, seed):
+    """For ANY stream and ANY censor (v, mu): qc_odkla with bits=inf and
+    drop p=0 matches online_coke exactly, round for round."""
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.normal(size=(10, 4, 3, 6)), jnp.float32)
+    labels = jnp.asarray(rng.normal(size=(10, 4, 3)), jnp.float32)
+    stream = StreamProblem(feats=feats, labels=labels,
+                           adjacency=jnp.asarray(ring(4).adjacency,
+                                                 jnp.float32),
+                           lam=1e-2, rho=0.1)
+    base = FitConfig(krr=KRRConfig(num_agents=4, num_features=6),
+                     graph="ring", num_iters=10, online_batch=3,
+                     censor_v=None, censor_mu=None)
+    coke = fit_stream(base.replace(algorithm="online_coke",
+                                   comm=Chain([Censor(v, mu)])),
+                      stream=stream)
+    qc = fit_stream(base.replace(
+        algorithm="qc_odkla",
+        comm=Chain([Censor(v, mu), Quantize(bits=float("inf")),
+                    Drop(p=0.0)])), stream=stream)
+    assert_results_match(coke, qc, exact="*", err=f"v={v},mu={mu}")
+
+
+# ---------------------------------------------------------------------------
+# partial_fit: the deploy -> refine loop
+# ---------------------------------------------------------------------------
+
+def test_partial_fit_warm_starts_from_deployed_model(built):
+    batch_cfg = FitConfig(krr=KRR, algorithm="coke", graph="ring",
+                          censor_v=0.3, censor_mu=0.99, num_iters=150)
+    model = fit(batch_cfg).to_model()
+    refined, res = model.partial_fit(built.stream,
+                                     BASE.replace(num_iters=40))
+    # warm start: the very first regret sample scores with the trained
+    # model, far below a cold start's
+    cold = fit_stream(BASE.replace(num_iters=40), stream=built.stream)
+    assert float(res.history["instant_mse"][0]) < 0.5 * float(
+        cold.history["instant_mse"][0])
+    assert refined.meta["warm_started"] is True
+    assert refined.meta["refined_from"]["algorithm"] == "coke"
+    assert refined.num_features == model.num_features
+    # raw-array spelling featurizes with the model's own map
+    refined2, res2 = model.partial_fit(
+        np.asarray(built.dataset.x[:10]),
+        labels=np.asarray(built.dataset.y[:10]),
+        config=BASE.replace(num_iters=10))
+    assert refined2.meta["warm_started"] is True
+    # an explicit config's krr.lam/rho reach the built stream — a config
+    # with a very different ridge term must change the dynamics
+    import dataclasses
+    heavy = BASE.replace(num_iters=10,
+                         krr=dataclasses.replace(KRR, lam=10.0))
+    _, res3 = model.partial_fit(np.asarray(built.dataset.x[:10]),
+                                labels=np.asarray(built.dataset.y[:10]),
+                                config=heavy)
+    assert not np.array_equal(np.asarray(res2.history["instant_mse"]),
+                              np.asarray(res3.history["instant_mse"]))
+    with pytest.raises(ValueError, match="labels"):
+        model.partial_fit(np.asarray(built.dataset.x[:4]))
+    with pytest.raises(ValueError, match="already carries"):
+        model.partial_fit(built.stream,
+                          labels=np.asarray(built.dataset.y[:4]))
+    with pytest.raises(ValueError, match=r"\(R, N, b, d\)"):
+        model.partial_fit(np.zeros(5), labels=np.zeros(5))
+
+
+def test_partial_fit_default_config_inherits_provenance_graph(built):
+    """With config=None, partial_fit must refine on the graph family the
+    model was trained with (to_model provenance), not silently fall back
+    to a random Erdos-Renyi topology."""
+    model = fit(FitConfig(krr=KRR, algorithm="coke", graph="ring",
+                          censor_v=0.3, censor_mu=0.99,
+                          num_iters=20)).to_model()
+    assert model.meta["graph"] == "ring"
+    refined, res = model.partial_fit(np.asarray(built.dataset.x[:8]),
+                                     labels=np.asarray(built.dataset.y[:8]))
+    assert res.config.graph == "ring"
+    assert res.config.algorithm == "online_coke"
+    assert refined.meta["graph"] == "ring"
+    assert res.history["instant_mse"].shape == (8,)
+    # the FULL topology provenance carries over, not just the family name
+    circ = fit(FitConfig(krr=KRR, algorithm="coke", graph="circulant",
+                         graph_offsets=(1, 2), censor_v=0.3,
+                         censor_mu=0.99, num_iters=10)).to_model()
+    assert tuple(circ.meta["graph_offsets"]) == (1, 2)
+    _, res_c = circ.partial_fit(np.asarray(built.dataset.x[:4]),
+                                labels=np.asarray(built.dataset.y[:4]))
+    assert res_c.config.graph == "circulant"
+    assert res_c.config.graph_offsets == (1, 2)
+
+
+def test_partial_fit_rejects_foreign_feature_dim(built):
+    import dataclasses
+    krr32 = dataclasses.replace(KRR, num_features=32)
+    model = fit(FitConfig(krr=krr32, algorithm="coke", graph="ring",
+                          num_iters=5)).to_model()
+    with pytest.raises(ValueError, match="featurize"):
+        model.partial_fit(built.stream, BASE.replace(num_iters=5))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: core.online edge cases
+# ---------------------------------------------------------------------------
+
+def _core_stream(seed=0, R=30, N=4, b=3, D=6):
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.normal(size=(R, N, b, D)), jnp.float32)
+    labels = jnp.asarray(rng.normal(size=(R, N, b)), jnp.float32)
+    adj = jnp.asarray(ring(N).adjacency, jnp.float32)
+    return feats, labels, adj
+
+
+def _batch_fn(feats, labels):
+    return lambda k: (feats[k], labels[k])
+
+
+def test_run_stream_schedule_none_matches_identity_chain():
+    """schedule=None and the explicit empty Chain are the same policy —
+    bit-identical trajectories, comms and bits."""
+    feats, labels, adj = _core_stream()
+    kw = dict(lam=1e-2, rho=0.1, lr=0.2, num_rounds=30,
+              batch_fn=_batch_fn(feats, labels))
+    s_none = online.init_state(4, 6)
+    s_chain = online.init_state(4, 6, policy=comm_mod.Chain(()))
+    out_n, mse_n, comms_n = online.run_stream(s_none, adj, None, **kw)
+    out_c, mse_c, comms_c = online.run_stream(s_chain, adj,
+                                              comm_mod.Chain(()), **kw)
+    np.testing.assert_array_equal(np.asarray(mse_n), np.asarray(mse_c))
+    np.testing.assert_array_equal(np.asarray(comms_n), np.asarray(comms_c))
+    np.testing.assert_array_equal(np.asarray(out_n.theta),
+                                  np.asarray(out_c.theta))
+    np.testing.assert_array_equal(np.asarray(out_n.comm.bits),
+                                  np.asarray(out_c.comm.bits))
+
+
+def test_run_stream_comms_monotone_nondecreasing():
+    feats, labels, adj = _core_stream(seed=3)
+    state = online.init_state(4, 6, policy=comm_mod.Censor(0.5, 0.97))
+    _, _, comms = online.run_stream(
+        state, adj, comm_mod.Censor(0.5, 0.97), lam=1e-2, rho=0.1, lr=0.2,
+        num_rounds=30, batch_fn=_batch_fn(feats, labels))
+    c = np.asarray(comms)
+    assert (np.diff(c) >= 0).all() and c[0] >= 0
+
+
+def test_legacy_policy_none_state_survives_ensure_state_alignment():
+    """A state built with init_state(policy=None) (empty chain, 0 stages)
+    must run under a censored schedule: ensure_state re-aligns the stage
+    states while the run proceeds and counts comms."""
+    feats, labels, adj = _core_stream(seed=4)
+    legacy = online.init_state(4, 6, policy=None)
+    assert legacy.comm.stages == ()
+    sched = comm_mod.Chain((comm_mod.Censor(0.3, 0.97),))
+    out, mse, comms = online.run_stream(
+        legacy, adj, sched, lam=1e-2, rho=0.1, lr=0.2, num_rounds=20,
+        batch_fn=_batch_fn(feats, labels))
+    assert len(out.comm.stages) == len(sched.stages)
+    assert mse.shape == (20,)
+    assert int(out.comms) == int(np.asarray(comms)[-1])
+    # and a hand-rolled positional state without any comm at all
+    z = jnp.zeros((4, 6), jnp.float32)
+    bare = online.OnlineState(z, z, z, jnp.zeros((), jnp.int32),
+                              jnp.zeros((), jnp.int32))
+    assert bare.comm is None
+    stepped, _ = online.stream_step(bare, feats[0], labels[0], adj, sched,
+                                    lam=1e-2, rho=0.1, lr=0.2)
+    assert stepped.comm is not None and stepped.comm.bits.shape == (4,)
+
+
+def test_regret_decreases_on_stationary_stream(built):
+    """The online protocol's sanity check: on a stationary stream the
+    average regret (running mean of instantaneous MSE) decreases."""
+    r = fit_stream(BASE.replace(num_iters=80), stream=built.stream)
+    inst = np.asarray(r.history["instant_mse"], np.float64)
+    regret = np.cumsum(inst) / np.arange(1, inst.size + 1)
+    assert regret[-1] < 0.5 * regret[4]
