@@ -1,0 +1,174 @@
+"""Many-model serving benchmark: models-resident × QPS × p99 latency.
+
+The question this answers: with one `KernelServer` holding M per-user
+thetas resident in a single (M, D) `ThetaStore` stack, what request
+throughput and tail latency does the multi-tenant gathered scorer sustain
+— and what does paging cost when the working set overflows the store?
+
+Scenarios per M:
+  - resident: store capacity >= M, every model preloaded — the pure
+    gather-scoring ceiling (no faults).
+  - paged:    store capacity = M // 4 against a disk registry, uniform
+    traffic — every flush faults; measures the paging penalty.
+
+Run:  PYTHONPATH=src python -m benchmarks.many_model_bench [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.api import FitConfig, KRRConfig, fit
+from repro.serve import (KernelServeConfig, KernelServer, ModelRegistry,
+                         ThetaStore)
+
+
+def _base_model(D: int = 128):
+    cfg = FitConfig(
+        krr=KRRConfig(num_agents=4, samples_per_agent=50, num_features=D,
+                      lam=1e-3, rho=5e-2, seed=0),
+        algorithm="coke", censor_v=0.1, censor_mu=0.995, num_iters=50)
+    return fit(cfg).to_model()
+
+
+def _variant_thetas(base, M: int) -> np.ndarray:
+    rng = np.random.default_rng(42)
+    return (np.asarray(base.theta)[None, :]
+            + rng.normal(scale=0.1, size=(M, base.num_features))
+            ).astype(np.float32)
+
+
+def _drive(server: KernelServer, ids: list[str], *, clients: int,
+           requests_per_client: int, batch: int, seed: int = 0) -> dict:
+    """Closed-loop load: `clients` threads, each firing tagged requests
+    back-to-back. Returns QPS / latency percentiles."""
+    input_dim = server.model.input_dim
+    latencies: list[float] = []
+    lock = threading.Lock()
+
+    def client(cid: int):
+        rng = np.random.default_rng(seed + cid)
+        mine = []
+        for _ in range(requests_per_client):
+            mid = ids[int(rng.integers(0, len(ids)))]
+            x = rng.uniform(size=(batch, input_dim)).astype(np.float32)
+            t0 = time.perf_counter()
+            server.submit(x, mid).result()
+            mine.append((time.perf_counter() - t0) * 1e3)
+        with lock:
+            latencies.extend(mine)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    lat = np.sort(np.asarray(latencies))
+    n = len(lat)
+    stats = server.stats()
+    return {
+        "requests": n,
+        "qps": n / wall,
+        "rows_per_s": n * batch / wall,
+        "p50_ms": float(lat[n // 2]),
+        "p99_ms": float(lat[min(n - 1, int(n * 0.99))]),
+        "batches": stats["batches"],
+        "faults": stats.get("store", {}).get("faults", 0),
+        "evictions": stats.get("store", {}).get("evictions", 0),
+    }
+
+
+def run(models_resident=(100, 1000), *, D: int = 128, clients: int = 8,
+        requests_per_client: int = 40, batch: int = 4,
+        smoke: bool = False) -> dict:
+    if smoke:
+        models_resident, clients, requests_per_client = (64,), 4, 10
+    base = _base_model(D)
+    cfg = KernelServeConfig(max_delay_ms=1.0)
+    out: dict[str, dict] = {}
+    for M in models_resident:
+        ids = [f"u{i:06d}" for i in range(M)]
+        thetas = _variant_thetas(base, M)
+
+        # resident: everything preloaded, capacity >= M (+1 slot for the
+        # server's default/template model)
+        store = ThetaStore(M + 1, base.num_features)
+        store.put_many(ids, thetas)
+        with KernelServer(model=base, store=store, config=cfg) as server:
+            server.predict(np.zeros((batch, base.input_dim), np.float32),
+                           ids[0])  # warm the jit cache outside timings
+            res = _drive(server, ids, clients=clients,
+                         requests_per_client=requests_per_client,
+                         batch=batch)
+            res["resident"] = len(store)
+            out[f"resident/M{M}"] = res
+
+        # paged: capacity M//4 over a disk registry — uniform traffic
+        # faults constantly; this is the worst-case paging penalty
+        with tempfile.TemporaryDirectory() as root:
+            reg = ModelRegistry(root)
+            for mid, theta in zip(ids, thetas):
+                reg.publish(mid, dataclasses.replace(
+                    base, theta=theta, thetas=None))
+            with KernelServer(model=base, registry=reg,
+                              store_capacity=max(2, M // 4),
+                              config=cfg) as server:
+                server.predict(np.zeros((batch, base.input_dim), np.float32),
+                               ids[0])
+                res = _drive(server, ids, clients=clients,
+                             requests_per_client=requests_per_client,
+                             batch=batch, seed=100)
+                res["resident"] = max(2, M // 4)
+                out[f"paged/M{M}"] = res
+
+        if smoke:
+            # correctness spot check riding along: a tagged answer must be
+            # bit-identical to the row-wise reference for its theta
+            store = ThetaStore(M + 1, base.num_features)
+            store.put_many(ids, thetas)
+            with KernelServer(model=base, store=store, config=cfg) as srv:
+                rng = np.random.default_rng(0)
+                x = rng.uniform(size=(4, base.input_dim)).astype(np.float32)
+                got = np.asarray(srv.predict(x, ids[3]))
+                import jax.numpy as jnp
+                ref = np.asarray(base.score_rows(
+                    x, jnp.broadcast_to(jnp.asarray(thetas[3]),
+                                        (4, base.num_features))))
+                assert np.array_equal(got, ref), \
+                    "smoke: served answer != row-wise reference"
+    return out
+
+
+def main(emit, smoke: bool = False) -> dict:
+    rows = run(smoke=smoke)
+    for name, r in rows.items():
+        emit(f"many_model/{name}", r["p99_ms"] * 1e3,
+             f"qps={r['qps']:.0f};p50_ms={r['p50_ms']:.2f};"
+             f"p99_ms={r['p99_ms']:.2f};resident={r['resident']};"
+             f"faults={r['faults']};evictions={r['evictions']}")
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    rows = main(lambda n, t, d: print(f"{n},{t:.1f},{d}"), smoke=smoke)
+    if "--json" in sys.argv:
+        path = sys.argv[sys.argv.index("--json") + 1] \
+            if len(sys.argv) > sys.argv.index("--json") + 1 \
+            and not sys.argv[sys.argv.index("--json") + 1].startswith("--") \
+            else "BENCH_many_model.json"
+        with open(path, "w") as f:
+            json.dump({"benchmark": "many_model", "smoke": smoke,
+                       "results": rows}, f, indent=2)
+        print(f"wrote {path}")
+    if smoke:
+        print("many_model_bench --smoke OK")

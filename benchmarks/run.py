@@ -1,20 +1,53 @@
 """Benchmark entry point: one function per paper table/figure + kernels +
-roofline. Prints ``name,us_per_call,derived`` CSV."""
+roofline. Prints ``name,us_per_call,derived`` CSV and, with ``--json``,
+writes one consolidated machine-readable record per run.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only a,b] [--smoke] [--json [F]]
+
+--only   comma-separated suite names (default: all).
+--smoke  pass smoke=True to every suite whose main() accepts it — the
+         CI-sized fast path; suites without a smoke knob run as usual.
+--json   write all emitted rows to F (default ``BENCH_all.json`` at the
+         repo root, or ``BENCH_<suite>.json`` when --only names exactly
+         one suite) — the artifact CI uploads per run.
+"""
 from __future__ import annotations
 
-import sys
+import argparse
+import inspect
+import json
+import os
+import platform
 import time
 
-
-def _emit(name: str, us: float, derived: str = "") -> None:
-    print(f"{name},{us:.1f},{derived}", flush=True)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("only", nargs="?", default=None,
+                        help="legacy positional form of --only")
+    parser.add_argument("--only", dest="only_flag", default=None,
+                        help="comma-separated suite names to run")
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI-sized runs for suites that support it")
+    parser.add_argument("--json", nargs="?", const="", default=None,
+                        metavar="PATH",
+                        help="write consolidated results as JSON")
+    args = parser.parse_args(argv)
+
+    rows: list[dict] = []
+
+    def _emit(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
     t0 = time.time()
-    from benchmarks import (big_d_bench, kernel_bench, paper_comm_cost,
-                            paper_convergence, paper_generalization,
-                            paper_online, roofline, serve_kernel_bench)
+    from benchmarks import (big_d_bench, kernel_bench, many_model_bench,
+                            paper_comm_cost, paper_convergence,
+                            paper_generalization, paper_online, roofline,
+                            serve_kernel_bench)
 
     suites = [
         ("paper_convergence", paper_convergence.main),   # Figs 1-2, Tab 1/2/4/5
@@ -23,18 +56,50 @@ def main() -> None:
         ("paper_online", paper_online.main),             # streaming regret/bits
         ("kernels", kernel_bench.main),
         ("serve_kernel", serve_kernel_bench.main),       # deployment surface
+        ("many_model", many_model_bench.main),           # multi-tenant store
         ("big_d", big_d_bench.main),                     # matrix-free CG sweep
         ("roofline", roofline.main),                     # from dry-run cache
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    known = {name for name, _ in suites}
+    selected = args.only_flag or args.only
+    only = None
+    if selected:
+        only = {s.strip() for s in selected.split(",") if s.strip()}
+        unknown = only - known
+        if unknown:
+            parser.error(f"unknown suite(s) {sorted(unknown)}; "
+                         f"choose from {sorted(known)}")
+
     for name, fn in suites:
-        if only and only != name:
+        if only and name not in only:
             continue
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         try:
-            fn(_emit)
+            fn(_emit, **kwargs)
         except Exception as e:  # keep the harness running; report
             _emit(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
     _emit("total_wall_s", (time.time() - t0) * 1e6, "")
+
+    if args.json is not None:
+        path = args.json
+        if not path:
+            stem = f"BENCH_{next(iter(only))}" \
+                if only and len(only) == 1 else "BENCH_all"
+            path = os.path.join(_ROOT, f"{stem}.json")
+        record = {
+            "suites": sorted(only) if only else sorted(known),
+            "smoke": args.smoke,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "wall_s": time.time() - t0,
+            "results": rows,
+        }
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ tests/test_model.py.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Any
@@ -37,6 +38,20 @@ from repro.core import rff
 from repro.kernels.rff.ops import featurize_fused
 
 PREDICT_BACKENDS = ("ref", "fused")
+
+
+@functools.partial(jax.jit, static_argnames=("mapping", "backend"))
+def _score_rows_jit(omega, bias, x, thetas, mapping, backend):
+    # Jitted on purpose: the multi-tenant KernelServer scores through a
+    # jitted gather+einsum, and XLA fuses the featurizer's constant scales
+    # differently under jit than eager — so the bit-level reference must
+    # live on the same side of that fence.
+    params = rff.RFFParams(omega=omega, bias=bias, mapping=mapping)
+    if backend == "fused":
+        phi = featurize_fused(params, x)
+    else:
+        phi = rff.featurize(params, x)
+    return jnp.einsum("bd,bd->b", phi, thetas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +70,11 @@ class KernelModel:
     kernel     — kernel family name (only "gaussian" is drawn today).
     meta       — JSON-serializable provenance from the originating FitConfig
                  (algorithm, censor schedule, iterations, dataset, ...).
+    model_id   — registry identity (`serve.ModelRegistry` key) this artifact
+                 was published under, or None for an unregistered model.
+    version    — registry version the artifact was published as; together
+                 with model_id this makes every saved artifact say exactly
+                 which catalog entry it is.
     """
 
     rff_params: rff.RFFParams
@@ -63,6 +83,8 @@ class KernelModel:
     bandwidth: float = 1.0
     kernel: str = "gaussian"
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+    model_id: str | None = None
+    version: int | None = None
 
     # ---- shape accessors -------------------------------------------------
     @property
@@ -172,6 +194,28 @@ class KernelModel:
             preds = jnp.concatenate(chunks)
         preds = preds.reshape(lead)
         return preds[0] if scalar else preds
+
+    def score_rows(self, x: jax.Array, thetas: jax.Array, *,
+                   backend: str = "ref") -> jax.Array:
+        """Row-tagged scoring: row i of x (b, d) against row i of thetas
+        (b, D) — the formulation the multi-tenant `KernelServer` runs after
+        gathering each request's theta slot (`einsum('bd,bd->b')`).
+
+        This is the bit-level reference for the many-model serving path,
+        and it is jit-compiled for exactly that reason: the jitted
+        featurize+reduce are row-stable for b >= 2, so a request's served
+        rows are a pure function of (its own rows, its own theta),
+        independent of which other tenants landed in the same padded
+        bucket — while an eager evaluation would fuse the featurizer's
+        constant scales differently and drift a few ulps. It differs from
+        `predict`'s (b, D) @ (D,) matvec only by float reduction order
+        (<~1e-6)."""
+        if backend not in PREDICT_BACKENDS or (
+                backend == "fused" and self.rff_params.mapping != "cos_bias"):
+            self.featurize(jnp.zeros_like(jnp.asarray(x)), backend)  # raises
+        return _score_rows_jit(self.rff_params.omega, self.rff_params.bias,
+                               jnp.asarray(x), jnp.asarray(thetas),
+                               self.rff_params.mapping, backend)
 
     def partial_fit(self, stream, config=None, *, labels=None,
                     progress_cb=None) -> tuple["KernelModel", Any]:
@@ -321,12 +365,16 @@ class KernelModel:
             "kernel": self.kernel,
             "bandwidth": self.bandwidth,
             "meta": self.meta,
+            "model_id": self.model_id,
+            "version": self.version,
             "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in self._array_tree().items()},
         }
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path + ".model.json", "w") as f:
+        tmp = f"{path}.model.json.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(sidecar, f)
+        os.replace(tmp, path + ".model.json")
 
     @classmethod
     def load(cls, path: str) -> "KernelModel":
@@ -343,12 +391,15 @@ class KernelModel:
                                bias=jnp.asarray(tree["bias"]),
                                mapping=sidecar["mapping"])
         thetas = tree.get("thetas")
+        version = sidecar.get("version")
         return cls(rff_params=params,
                    theta=jnp.asarray(tree["theta"]),
                    thetas=None if thetas is None else jnp.asarray(thetas),
                    bandwidth=float(sidecar["bandwidth"]),
                    kernel=sidecar["kernel"],
-                   meta=sidecar["meta"])
+                   meta=sidecar["meta"],
+                   model_id=sidecar.get("model_id"),
+                   version=None if version is None else int(version))
 
 
 def predict(model_or_result, x: jax.Array, **kw) -> jax.Array:

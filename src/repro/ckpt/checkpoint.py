@@ -4,6 +4,11 @@ Host-gathers every leaf (device_get handles cross-device sharding), stores a
 flat path->array npz plus a small JSON manifest (step, tree structure).
 Restore rebuilds the pytree and (optionally) re-shards via device_put with
 the caller's shardings.
+
+Writes are atomic: both the npz and the manifest land via write-to-temp +
+`os.replace`, so a reader (or a crashed writer) never observes a
+half-written artifact — the property `serve.ModelRegistry` builds its
+versioned publish on.
 """
 from __future__ import annotations
 
@@ -12,6 +17,20 @@ import os
 
 import jax
 import numpy as np
+
+
+def _write_atomic(path: str, write_fn) -> None:
+    """Write through a same-directory temp file + os.replace (atomic on
+    POSIX): concurrent readers see the old file or the new one, never a
+    torn one."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        write_fn(tmp)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def _flatten(tree):
@@ -28,12 +47,23 @@ def save(path: str, tree, step: int = 0) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, _ = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(path + ".npz", **arrays)
+
+    def _dump_npz(tmp):
+        # np.savez appends .npz when missing — write with the suffix in
+        # place so os.replace moves the exact file we wrote
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+
+    _write_atomic(path + ".npz", _dump_npz)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     manifest = {"step": step, "num_leaves": len(leaves),
                 "treedef": str(treedef)}
-    with open(path + ".json", "w") as f:
-        json.dump(manifest, f)
+
+    def _dump_json(tmp):
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+
+    _write_atomic(path + ".json", _dump_json)
 
 
 def restore(path: str, like, shardings=None):

@@ -279,6 +279,29 @@ def shard_problem(problem, mesh):
         adjacency=put(problem.adjacency, P(lead, None)))
 
 
+def theta_stack_spec(shape: tuple[int, ...], mesh) -> P:
+    """PartitionSpec for the many-model serving `(M, D)` resident-theta
+    stack (`serve.ThetaStore`).
+
+    The slot axis M stays REPLICATED — the multi-tenant scorer gathers
+    per-request rows with dynamic indices, and a batch-sharded slot axis
+    would turn every gather into an all-to-all — while the trailing
+    feature dim shards over the "model" axis iff divisible, matching
+    `feature_spec`'s layout for theta so a store faulted from a D-sharded
+    fit never needs a replicated feature axis on any device. phi(x) @
+    theta rows then contract the sharded dim with one psum under GSPMD,
+    exactly like the single-model serving path."""
+    feat = _div(shape[-1], mesh, "model") if "model" in mesh.axis_names \
+        else None
+    return P(*([None] * (len(shape) - 1)), feat)
+
+
+def shard_theta_stack(stack, mesh):
+    """Place an (M, D) theta stack with its serving layout."""
+    return jax.device_put(
+        stack, NamedSharding(mesh, theta_stack_spec(stack.shape, mesh)))
+
+
 def step_in_specs(cfg: ModelConfig, kind: str, specs: dict, mesh):
     """Input PartitionSpecs for a dry-run step of the given kind."""
     if kind in ("train", "prefill"):

@@ -1,3 +1,5 @@
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
 from repro.serve.kernel_server import (KernelServeConfig,  # noqa: F401
                                        KernelServer)
+from repro.serve.registry import ModelRegistry  # noqa: F401
+from repro.serve.theta_store import ThetaStore  # noqa: F401

@@ -1,4 +1,5 @@
-"""`KernelServer` — microbatched scoring for `KernelModel` artifacts.
+"""`KernelServer` — microbatched scoring for `KernelModel` artifacts,
+single-tenant or many-model.
 
 Sibling to the LLM `Engine`: where the Engine amortizes decode steps over a
 batch of sequences, the KernelServer amortizes RFF scoring over concurrent
@@ -11,14 +12,34 @@ never retraces on ragged traffic however the batch landed — scores them
 sharded over the mesh's data axes via `distributed.sharding`-style
 NamedShardings, and scatters the rows back to each request's future.
 
-This is the "serve heavy traffic" path the random-feature construction
-makes cheap: the whole model is (omega, bias, theta) — a few hundred KB —
-and scoring is one matmul + cosine + matvec, data-parallel in the batch
-dimension with zero cross-request state.
+Two tenancy modes share that machinery:
 
-    server = KernelServer(model)                  # host mesh by default
-    fut = server.submit(x)                        # (b, d) -> Future[(b,)]
+  - **single-tenant** (`KernelServer(model)`): one frozen `KernelModel`,
+    scored as `featurize(x) @ theta` — bit-identical to what this server
+    always did.
+  - **multi-tenant** (`KernelServer(registry=...)` and/or `store=...`):
+    requests are tagged with a model id (`submit(x, model_id="user-42")`).
+    The collector resolves each id to a slot of the `ThetaStore`'s one
+    resident (M, D) stack — faulting misses in from the `ModelRegistry`
+    off the device-call path — and the SAME bucket-padded jitted scorer
+    featurizes once and gathers each row's theta for a batched per-row
+    matvec (`einsum('bd,bd->b', phi, stack[slots])`). No per-model device
+    calls; installing model one million compiles nothing new (the stack
+    shape is static). `publish()` hot-swaps a refined theta atomically:
+    registry first, then the resident slot — in-flight buckets hold an
+    immutable snapshot of the old stack, so no request ever scores a torn
+    theta.
+
+This is the "serve heavy traffic from millions of users" path the
+random-feature construction makes cheap: every user's whole model is one
+(D,) theta against a SHARED featurizer, and scoring a mixed batch is one
+matmul + cosine + gathered row-dot, data-parallel in the batch dimension
+with zero cross-request state.
+
+    server = KernelServer(registry=ModelRegistry("models/"))
+    fut = server.submit(x, model_id="user-42")    # (b, d) -> Future[(b,)]
     y = fut.result()
+    server.publish("user-42", refined_model)      # hot-swap, no restart
     server.stop()
 """
 from __future__ import annotations
@@ -36,10 +57,12 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.api.model import PREDICT_BACKENDS, KernelModel
-from repro.distributed.sharding import batch_specs
+from repro.distributed.sharding import batch_specs, theta_stack_spec
 from repro.launch.mesh import batch_axes, make_host_mesh
+from repro.serve.theta_store import ThetaStore
 
 _STOP = object()
+_DEFAULT_ID = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,17 +87,20 @@ class KernelServeConfig:
 class _Request:
     x: np.ndarray                    # (b, d)
     future: Future
+    model_id: str | None = None      # None = the server's default model
 
 
 class KernelServer:
     """Thread-safe microbatching front-end over one jitted scoring call."""
 
-    def __init__(self, model: KernelModel,
+    def __init__(self, model: KernelModel | None = None,
                  config: KernelServeConfig | None = None,
-                 mesh=None, *, autostart: bool = True):
-        self.model = model
+                 mesh=None, *, registry=None, store: ThetaStore | None = None,
+                 store_capacity: int = 1024, autostart: bool = True):
         self.cfg = config or KernelServeConfig()
         self.mesh = make_host_mesh() if mesh is None else mesh
+        self.registry = registry
+        self.multi_tenant = registry is not None or store is not None
         ba = batch_axes(self.mesh)
         self._extent = (math.prod(self.mesh.shape[a] for a in ba)
                         if ba else 1)
@@ -84,24 +110,82 @@ class KernelServer:
         self._max_batch = -(-self.cfg.max_batch // self._extent) \
             * self._extent
 
+        # the template model defines the one featurizer every tenant
+        # shares (the common-seed RFF premise): an explicit model wins,
+        # else the registry's first catalogued model
+        if model is None:
+            if registry is None:
+                raise ValueError(
+                    "KernelServer needs a model, or a registry to take "
+                    "its featurizer template from")
+            ids = registry.models()
+            if not ids:
+                raise ValueError(
+                    "the registry is empty — pass model= so the server "
+                    "knows its featurizer (input_dim / D / RFF draw)")
+            model = registry.load(ids[0])
+        self.model = model
+
         # eager backend/mapping validation at construction, through the one
         # routing point all scoring paths share
         model.featurize(jnp.zeros((1, model.input_dim), jnp.float32),
                         self.cfg.backend)
-        theta = model.theta
 
-        def score(x):
-            return model.featurize(x, self.cfg.backend) @ theta
-
-        # batch-dim data parallelism from the repo's one sharding rule-set:
-        # queries and predictions shard their leading dim over the batch axes
         probe = self._buckets[-1]
         x_spec, y_spec = batch_specs(None, (
             jax.ShapeDtypeStruct((probe, model.input_dim), jnp.float32),
             jax.ShapeDtypeStruct((probe,), jnp.float32)), self.mesh)
-        self._score = jax.jit(
-            score, in_shardings=NamedSharding(self.mesh, x_spec),
-            out_shardings=NamedSharding(self.mesh, y_spec))
+        x_sh = NamedSharding(self.mesh, x_spec)
+        y_sh = NamedSharding(self.mesh, y_spec)
+
+        if self.multi_tenant:
+            self.store = store if store is not None else ThetaStore(
+                store_capacity, model.num_features, mesh=self.mesh)
+            if self.store.num_features != model.num_features:
+                raise ValueError(
+                    f"store is sized for D={self.store.num_features} but "
+                    f"the featurizer produces D={model.num_features}")
+            if registry is not None:
+                if self.store.fault is None:
+                    self.store.fault = self._fault
+                if self.store.writeback is None:
+                    self.store.writeback = self._writeback
+            self._default_id = model.model_id or _DEFAULT_ID
+            self.store.put(self._default_id, model.theta,
+                           version=model.version,
+                           dirty=model.version is None)
+            stack_sh = NamedSharding(self.mesh, theta_stack_spec(
+                (self.store.capacity, model.num_features), self.mesh))
+            (slot_spec,) = batch_specs(
+                None, (jax.ShapeDtypeStruct((probe,), jnp.int32),),
+                self.mesh)
+            backend = self.cfg.backend
+
+            def score_multi(stack, x, slots):
+                # one featurize for the whole mixed bucket, then a batched
+                # per-row matvec against each row's gathered theta slot —
+                # the formulation `KernelModel.score_rows` pins bit-level
+                phi = model.featurize(x, backend)
+                return jnp.einsum("bd,bd->b", phi, stack[slots])
+
+            self._score_multi = jax.jit(
+                score_multi,
+                in_shardings=(stack_sh, x_sh,
+                              NamedSharding(self.mesh, slot_spec)),
+                out_shardings=y_sh)
+        else:
+            self.store = None
+            self._default_id = model.model_id
+            theta = model.theta
+
+            def score(x):
+                return model.featurize(x, self.cfg.backend) @ theta
+
+            # batch-dim data parallelism from the repo's one sharding
+            # rule-set: queries and predictions shard their leading dim
+            # over the batch axes
+            self._score = jax.jit(score, in_shardings=x_sh,
+                                  out_shardings=y_sh)
 
         self._queue: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
@@ -156,10 +240,77 @@ class KernelServer:
     def __exit__(self, *exc) -> None:
         self.stop()
 
+    # ---- many-model management -------------------------------------------
+    def _check_compatible(self, other: KernelModel, model_id: str) -> None:
+        """Every tenant must share the template's featurizer — that is what
+        lets a mixed bucket featurize once."""
+        tpl = self.model
+        if (other.input_dim != tpl.input_dim
+                or other.num_features != tpl.num_features
+                or other.rff_params.mapping != tpl.rff_params.mapping
+                or not np.array_equal(np.asarray(other.rff_params.omega),
+                                      np.asarray(tpl.rff_params.omega))
+                or not np.array_equal(np.asarray(other.rff_params.bias),
+                                      np.asarray(tpl.rff_params.bias))):
+            raise ValueError(
+                f"model {model_id!r} was fitted against a different RFF "
+                "featurizer than this server's template — many-model "
+                "serving shares ONE common-seed feature map; refit with "
+                "the shared draw or serve it from its own server")
+
+    def _fault(self, model_id: str):
+        """ThetaStore miss handler: load the latest registry version on
+        the collector thread — never inside a device call."""
+        loaded = self.registry.load(model_id)  # KeyError if unknown
+        self._check_compatible(loaded, model_id)
+        return loaded.theta, loaded.version
+
+    def _writeback(self, model_id: str, theta, version):
+        """ThetaStore dirty-eviction handler: page the refined theta back
+        into the registry as a fresh version."""
+        art = dataclasses.replace(
+            self.model, theta=jnp.asarray(theta), thetas=None,
+            meta={**self.model.meta, "published_via": "ThetaStore.evict"})
+        return self.registry.publish(model_id, art)
+
+    def publish(self, model_id: str, model) -> int | None:
+        """Hot-swap one tenant's parameters under live traffic.
+
+        `model` is a refined `KernelModel` (e.g. from `partial_fit`) or a
+        bare (D,) theta. The registry gains the new version FIRST, then
+        the resident slot flips — in-flight buckets finish on their
+        immutable snapshot of the old stack, every later bucket sees the
+        new theta, and a crash in between leaves a valid catalog whose
+        next fault serves the new version. Returns the published version
+        (None when the server has no registry: the theta becomes resident
+        and dirty, to be written back on eviction)."""
+        if not self.multi_tenant:
+            raise RuntimeError(
+                "publish() needs a multi-tenant server — construct with "
+                "registry= and/or store=")
+        if isinstance(model, KernelModel):
+            self._check_compatible(model, model_id)
+            theta = model.theta
+            art = model
+        else:
+            theta = jnp.asarray(model, jnp.float32)
+            art = dataclasses.replace(
+                self.model, theta=theta, thetas=None,
+                meta={**self.model.meta,
+                      "published_via": "KernelServer.publish"})
+        if self.registry is not None:
+            version = self.registry.publish(model_id, art)
+            self.store.put(model_id, theta, version=version, dirty=False)
+            return version
+        self.store.put(model_id, theta, dirty=True)
+        return None
+
     # ---- request path ----------------------------------------------------
-    def submit(self, x) -> Future:
+    def submit(self, x, model_id: str | None = None) -> Future:
         """Enqueue a query batch; resolves to (b,) predictions ((,) for a
-        bare (d,) vector)."""
+        bare (d,) vector). `model_id` tags the request with the tenant to
+        score against (multi-tenant servers; defaults to the server's
+        default model when it has one)."""
         x = np.asarray(x, np.float32)
         scalar = x.ndim == 1
         if scalar:
@@ -168,15 +319,26 @@ class KernelServer:
             raise ValueError(
                 f"expected (b, {self.model.input_dim}) queries, got "
                 f"{x.shape}")
+        if model_id is None:
+            model_id = self._default_id
+            if self.multi_tenant and model_id is None:
+                raise ValueError(
+                    "this multi-tenant server has no default model — tag "
+                    "the request: submit(x, model_id=...)")
+        elif not self.multi_tenant and model_id != self._default_id:
+            raise ValueError(
+                f"this server serves only {self._default_id or 'its one'!s} "
+                f"model, not {model_id!r} — construct with registry=/store= "
+                "for many-model serving")
         fut: Future = Future()
         if scalar:
             inner, fut = fut, Future()
             inner.add_done_callback(
                 lambda f: fut.set_exception(f.exception())
                 if f.exception() else fut.set_result(f.result()[0]))
-            req = _Request(x, inner)
+            req = _Request(x, inner, model_id)
         else:
-            req = _Request(x, fut)
+            req = _Request(x, fut, model_id)
         with self._lock:
             # check-and-enqueue under the stop() lock: either this request
             # lands on the queue ahead of the _STOP sentinel, or it raises
@@ -186,15 +348,17 @@ class KernelServer:
             self._stats["requests"] += 1
         return fut
 
-    def predict(self, x) -> np.ndarray:
+    def predict(self, x, model_id: str | None = None) -> np.ndarray:
         """Synchronous convenience wrapper around submit()."""
-        return self.submit(x).result()
+        return self.submit(x, model_id).result()
 
     def stats(self) -> dict:
         with self._lock:
             s = dict(self._stats)
         s["mean_rows_per_batch"] = (s["rows"] / s["batches"]
                                     if s["batches"] else 0.0)
+        if self.store is not None:
+            s["store"] = self.store.stats()
         return s
 
     # ---- collector -------------------------------------------------------
@@ -247,7 +411,62 @@ class KernelServer:
         preds = np.asarray(jax.device_get(self._score(jnp.asarray(xs))))
         return preds[:n], padded - n
 
+    def _score_padded_multi(self, stack, xs: np.ndarray,
+                            slots: np.ndarray) -> tuple[np.ndarray, int]:
+        """The multi-tenant twin of `_score_padded`: pads rows AND slot
+        ids (padding gathers slot 0 — always a valid row of the stack —
+        and its results are stripped)."""
+        n = xs.shape[0]
+        padded = self._pad_to_bucket(n)
+        if padded != n:
+            xs = np.concatenate(
+                [xs, np.zeros((padded - n, xs.shape[1]), xs.dtype)])
+            slots = np.concatenate(
+                [slots, np.zeros(padded - n, slots.dtype)])
+        preds = np.asarray(jax.device_get(self._score_multi(
+            stack, jnp.asarray(xs), jnp.asarray(slots))))
+        return preds[:n], padded - n
+
     def _flush(self, batch: list[_Request]) -> None:
+        if not self.multi_tenant:
+            self._score_and_scatter(batch)
+            return
+        # Resolve every request's model id to a theta slot (faulting
+        # misses in from the registry) and snapshot ONE consistent stack
+        # per round. A request whose id cannot be resolved fails alone;
+        # requests DEFERRED under capacity pressure (more distinct models
+        # waiting than unpinned slots) page through in follow-up rounds
+        # once the current round's slots free up.
+        remaining = batch
+        while remaining:
+            stack, req_slots, errors = self.store.lookup_batch(
+                [r.model_id for r in remaining])
+            kept, deferred = [], []
+            for r, slot, err in zip(remaining, req_slots, errors):
+                if err is not None:
+                    r.future.set_exception(err)
+                elif slot < 0:
+                    deferred.append(r)
+                else:
+                    kept.append((r, slot))
+            if kept:
+                slots = np.concatenate(
+                    [np.full(r.x.shape[0], slot, np.int32)
+                     for r, slot in kept])
+                self._score_and_scatter([r for r, _ in kept], stack, slots)
+            elif deferred:
+                # no progress is possible — every slot is pinned by work
+                # outside this flush; fail rather than spin
+                err = RuntimeError(
+                    "ThetaStore has no unpinned slot for any waiting "
+                    "model — raise the store capacity")
+                for r in deferred:
+                    r.future.set_exception(err)
+                return
+            remaining = deferred
+
+    def _score_and_scatter(self, batch: list[_Request], stack=None,
+                           slots: np.ndarray | None = None) -> None:
         # The collector coalesces until rows >= max_batch, so the LAST
         # request can overshoot; and a single submit() may exceed max_batch
         # outright. Slice the merged batch into largest-bucket-sized device
@@ -257,8 +476,13 @@ class KernelServer:
         n = xs.shape[0]
         cap = self._buckets[-1]
         try:
-            scored = [self._score_padded(xs[off:off + cap])
-                      for off in range(0, n, cap)]
+            if stack is not None:
+                scored = [self._score_padded_multi(stack, xs[off:off + cap],
+                                                   slots[off:off + cap])
+                          for off in range(0, n, cap)]
+            else:
+                scored = [self._score_padded(xs[off:off + cap])
+                          for off in range(0, n, cap)]
         except Exception as e:  # scoring failed: fail every caller, keep serving
             for r in batch:
                 r.future.set_exception(e)

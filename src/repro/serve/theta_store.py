@@ -1,0 +1,304 @@
+"""`ThetaStore` — the on-device paged home of thousands of resident models.
+
+The random-feature construction makes every fitted model a (D,) theta
+sharing one featurizer, so "thousands of models resident" is just ONE
+(M, D) device array — or (M, D/shards) on a mesh with a "model" axis
+(`distributed.sharding.theta_stack_spec`); the slot axis stays replicated
+so the scorer's per-request row gather never becomes a collective. The
+store manages that array like a page table:
+
+  - slot allocation from a free list, then LRU eviction of unpinned slots
+    (eviction pages the model back to the registry via `writeback` iff the
+    resident theta is dirty — i.e. newer than any published version);
+  - faulting: `ensure(id)` on a miss calls `fault(id) -> (theta, version)`
+    (the registry load, wired up by `KernelServer`) and installs the
+    result — disk I/O happens on the calling (collector) thread, never
+    inside a device call;
+  - pinned slots: `pin`/`unpin` refcounts protect in-flight work — an
+    eviction never reuses a slot some queued bucket still indexes;
+  - atomic snapshots: `lookup_batch(ids)` resolves every id (faulting and
+    pinning as it goes, so an id faulted late in the batch cannot evict
+    one resolved early) and returns (stack, slots) captured under one
+    lock. Because jax arrays are immutable and every write rebinds a
+    functionally-updated stack, a snapshot is torn-proof: concurrent
+    `put`s (hot-swap publishes) are either entirely visible or entirely
+    invisible to it.
+
+Writes go through one jitted `stack.at[slot].set(theta)` with a traced
+slot index — installing the millionth model compiles nothing new. The
+stack is deliberately NOT donated into that update: in-flight snapshots
+keep the old buffer alive, which is exactly the hot-swap atomicity
+contract (a copy per fault/publish is the price, and it is off the
+scoring hot path).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _write(stack, slot, theta):
+    return stack.at[slot].set(theta)
+
+
+def _write_many(stack, slots, thetas):
+    return stack.at[slots].set(thetas)
+
+
+class ThetaStore:
+    """Paged (capacity, D) theta stack with LRU eviction and pinned slots.
+
+    fault     — optional `fault(model_id) -> (theta (D,), version | None)`
+                miss handler (KernelServer wires the registry load here).
+    writeback — optional `writeback(model_id, theta, version) -> version`
+                called when a DIRTY resident model is evicted; without it,
+                evicting a dirty model raises rather than silently losing
+                the only copy of a refined theta.
+    """
+
+    def __init__(self, capacity: int, num_features: int, *,
+                 mesh=None, dtype=jnp.float32,
+                 fault: Callable | None = None,
+                 writeback: Callable | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.num_features = int(num_features)
+        self.dtype = dtype
+        self.fault = fault
+        self.writeback = writeback
+        stack = jnp.zeros((self.capacity, self.num_features), dtype)
+        if mesh is not None:
+            from repro.distributed.sharding import shard_theta_stack
+            stack = shard_theta_stack(stack, mesh)
+        self._stack = stack
+        self._update = jax.jit(_write)
+        self._update_many = jax.jit(_write_many)
+        self._lock = threading.RLock()
+        self._slots: OrderedDict[str, int] = OrderedDict()  # LRU: old → new
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._pins: dict[str, int] = {}
+        self._dirty: set[str] = set()
+        self._versions: dict[str, int | None] = {}
+        self._stats = {"hits": 0, "faults": 0, "evictions": 0,
+                       "writebacks": 0}
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def stack(self):
+        """The current (capacity, D) device array. Snapshot it under
+        `lookup_batch` when slot indices must stay consistent with it."""
+        return self._stack
+
+    def __contains__(self, model_id: str) -> bool:
+        with self._lock:
+            return model_id in self._slots
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._slots)
+
+    def resident(self) -> list[str]:
+        """Resident ids, least-recently-used first."""
+        with self._lock:
+            return list(self._slots)
+
+    def version_of(self, model_id: str) -> int | None:
+        with self._lock:
+            if model_id not in self._slots:
+                raise KeyError(f"model {model_id!r} is not resident")
+            return self._versions[model_id]
+
+    def stats(self) -> dict:
+        with self._lock:
+            s = dict(self._stats)
+            s["resident"] = len(self._slots)
+            s["capacity"] = self.capacity
+            s["pinned"] = sum(1 for c in self._pins.values() if c > 0)
+        return s
+
+    # ---- pinning ---------------------------------------------------------
+    def pin(self, model_id: str) -> None:
+        """Protect a resident model's slot from eviction (refcounted)."""
+        with self._lock:
+            if model_id not in self._slots:
+                raise KeyError(f"model {model_id!r} is not resident")
+            self._pins[model_id] = self._pins.get(model_id, 0) + 1
+
+    def unpin(self, model_id: str) -> None:
+        with self._lock:
+            count = self._pins.get(model_id, 0)
+            if count <= 0:
+                raise RuntimeError(f"model {model_id!r} is not pinned")
+            if count == 1:
+                self._pins.pop(model_id)
+            else:
+                self._pins[model_id] = count - 1
+
+    # ---- allocation / paging --------------------------------------------
+    def _check_theta(self, theta) -> jax.Array:
+        theta = jnp.asarray(theta, self.dtype)
+        if theta.shape != (self.num_features,):
+            raise ValueError(
+                f"theta must be ({self.num_features},), got {theta.shape}")
+        return theta
+
+    def _allocate(self) -> int:
+        """A free slot, evicting the LRU unpinned model if needed.
+        Caller holds the lock."""
+        if self._free:
+            return self._free.pop()
+        for victim in self._slots:  # OrderedDict iterates LRU-first
+            if self._pins.get(victim, 0) == 0:
+                self._evict_locked(victim)
+                return self._free.pop()
+        raise RuntimeError(
+            f"ThetaStore is full ({self.capacity} slots) and every "
+            "resident model is pinned — raise the capacity or reduce the "
+            "number of distinct models in flight at once")
+
+    def _evict_locked(self, model_id: str) -> None:
+        if model_id in self._dirty:
+            if self.writeback is None:
+                raise RuntimeError(
+                    f"evicting dirty model {model_id!r} would lose its "
+                    "only copy — attach a registry writeback or publish "
+                    "it first")
+            new_v = self.writeback(model_id, self._stack[self._slots[model_id]],
+                                   self._versions[model_id])
+            self._dirty.discard(model_id)
+            self._versions[model_id] = new_v
+            self._stats["writebacks"] += 1
+        slot = self._slots.pop(model_id)
+        self._versions.pop(model_id, None)
+        self._free.append(slot)
+        self._stats["evictions"] += 1
+
+    def evict(self, model_id: str) -> None:
+        """Explicitly page one model out (writeback if dirty)."""
+        with self._lock:
+            if model_id not in self._slots:
+                raise KeyError(f"model {model_id!r} is not resident")
+            if self._pins.get(model_id, 0):
+                raise RuntimeError(f"model {model_id!r} is pinned")
+            self._evict_locked(model_id)
+
+    def put(self, model_id: str, theta, *, version: int | None = None,
+            dirty: bool = False) -> int:
+        """Install (or hot-swap) one model's theta; returns its slot.
+
+        An existing resident id keeps its slot — the write rebinds the
+        stack to a functionally-updated array, so snapshots taken before
+        the put keep scoring the old theta (hot-swap atomicity)."""
+        theta = self._check_theta(theta)
+        with self._lock:
+            slot = self._slots.get(model_id)
+            if slot is None:
+                slot = self._allocate()
+                self._slots[model_id] = slot
+            self._slots.move_to_end(model_id)
+            self._stack = self._update(self._stack,
+                                       jnp.asarray(slot, jnp.int32), theta)
+            self._versions[model_id] = version
+            if dirty:
+                self._dirty.add(model_id)
+            else:
+                self._dirty.discard(model_id)
+            return slot
+
+    def put_many(self, ids: list[str], thetas, *,
+                 dirty: bool = False) -> list[int]:
+        """Bulk install (one device call) — the bench/preload path.
+        Preloads default to CLEAN: the caller is assumed to hold them
+        elsewhere, so eviction may simply drop them; pass dirty=True for
+        thetas whose only copy is the store."""
+        thetas = jnp.asarray(thetas, self.dtype)
+        if thetas.shape != (len(ids), self.num_features):
+            raise ValueError(
+                f"expected ({len(ids)}, {self.num_features}) thetas, got "
+                f"{thetas.shape}")
+        with self._lock:
+            slots = []
+            for model_id in ids:
+                slot = self._slots.get(model_id)
+                if slot is None:
+                    slot = self._allocate()
+                    self._slots[model_id] = slot
+                self._slots.move_to_end(model_id)
+                self._versions[model_id] = None
+                if dirty:
+                    self._dirty.add(model_id)
+                else:
+                    self._dirty.discard(model_id)
+                slots.append(slot)
+            self._stack = self._update_many(
+                self._stack, jnp.asarray(np.asarray(slots, np.int32)),
+                thetas)
+            return slots
+
+    def ensure(self, model_id: str) -> int:
+        """Resident slot of `model_id`, faulting it in on a miss."""
+        with self._lock:
+            slot = self._slots.get(model_id)
+            if slot is not None:
+                self._slots.move_to_end(model_id)
+                self._stats["hits"] += 1
+                return slot
+            if self.fault is None:
+                raise KeyError(
+                    f"model {model_id!r} is not resident and the store has "
+                    "no fault handler (registry)")
+            theta, version = self.fault(model_id)
+            self._stats["faults"] += 1
+            return self.put(model_id, theta, version=version, dirty=False)
+
+    def lookup_batch(self, ids: list[str]):
+        """Resolve a batch of ids to one consistent (stack, slots) pair.
+
+        Returns (stack_snapshot, slots int32 (len(ids),), errors). For
+        each id one of three things holds: resolved (slot >= 0, error
+        None); failed (slot -1, errors[i] = the exception — an unknown
+        model fails only its own rows, never the batch); or DEFERRED
+        (slot -1, error None) — the store ran out of unpinned slots
+        because ids resolved earlier in this same batch are pinned, so
+        the caller should score the resolved ids and retry the deferred
+        ones in a fresh round (their slots free up as soon as this one's
+        pins drop). That is how a single flush with more distinct tenants
+        than store capacity pages through in several device rounds
+        instead of erroring.
+
+        Every successfully-resolved id is pinned while later ids fault,
+        so an intra-batch eviction can never reuse a slot this batch
+        indexes; the snapshot is taken before unpinning, under the same
+        lock as every write, so it is consistent with the returned
+        slots."""
+        slots = np.full(len(ids), -1, np.int32)
+        errors: list[Exception | None] = [None] * len(ids)
+        with self._lock:
+            pinned: list[str] = []
+            try:
+                for i, model_id in enumerate(ids):
+                    try:
+                        slots[i] = self.ensure(model_id)
+                    except RuntimeError as e:
+                        # capacity pressure: if it is OUR pins crowding the
+                        # store, defer (slot -1, no error) — a retry after
+                        # this round's pins drop will succeed
+                        if not pinned:
+                            errors[i] = e
+                        continue
+                    except Exception as e:  # unknown id, bad shape, ...
+                        errors[i] = e
+                        continue
+                    self.pin(model_id)
+                    pinned.append(model_id)
+                stack = self._stack
+            finally:
+                for model_id in pinned:
+                    self.unpin(model_id)
+        return stack, slots, errors
