@@ -1,0 +1,83 @@
+"""The perf-regression gate: fail CI when a fresh BENCH json regresses.
+
+Compares per-row `us_per_call` of a fresh `benchmarks.run --json` record
+against a committed baseline, matched BY ROW NAME. A row fails when
+
+    fresh_us > PERF_GATE_FACTOR * baseline_us        (default factor 1.5)
+
+Rows named `total_wall_s` or `*/ERROR` and rows present on only one side
+are reported but never gated (suite composition may drift between the
+baseline and a smoke run; an ERROR row should fail its own CI step, not
+masquerade as a latency regression). The baseline's git sha + timestamp
+stamps (benchmarks/run.py) are echoed so a gate failure names the exact
+commit it regressed against.
+
+    python -m benchmarks.perf_gate BENCH_fresh.json BENCH_gossip.json
+    PERF_GATE_FACTOR=2.0 python -m benchmarks.perf_gate fresh.json base.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _rows(record: dict) -> dict[str, float]:
+    out = {}
+    for row in record.get("results", []):
+        name = row.get("name", "")
+        if name == "total_wall_s" or name.endswith("/ERROR"):
+            continue
+        out[name] = float(row["us_per_call"])
+    return out
+
+
+def gate(fresh: dict, baseline: dict, factor: float) -> list[str]:
+    """-> list of human-readable failures (empty = gate green)."""
+    f_rows, b_rows = _rows(fresh), _rows(baseline)
+    failures = []
+    for name in sorted(f_rows.keys() & b_rows.keys()):
+        new, old = f_rows[name], b_rows[name]
+        ratio = new / old if old > 0 else float("inf")
+        status = "FAIL" if ratio > factor else "ok"
+        print(f"{status:>4}  {name:<40} {old:>12.1f} -> {new:>12.1f} us  "
+              f"({ratio:.2f}x, limit {factor:.2f}x)")
+        if status == "FAIL":
+            failures.append(f"{name}: {old:.1f} -> {new:.1f} us "
+                            f"({ratio:.2f}x > {factor:.2f}x)")
+    for name in sorted(f_rows.keys() - b_rows.keys()):
+        print(f"  new  {name} (no baseline row — not gated)")
+    for name in sorted(b_rows.keys() - f_rows.keys()):
+        print(f"  gone {name} (baseline-only row — not gated)")
+    if not (f_rows.keys() & b_rows.keys()):
+        failures.append("no rows in common between fresh and baseline — "
+                        "the gate compared nothing")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    fresh_path, baseline_path = argv
+    factor = float(os.environ.get("PERF_GATE_FACTOR", "1.5"))
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    print(f"baseline: {baseline_path} "
+          f"(sha={baseline.get('git_sha')}, "
+          f"recorded={baseline.get('timestamp')})")
+    failures = gate(fresh, baseline, factor)
+    if failures:
+        print("\nperf gate FAILED:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("\nperf gate green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

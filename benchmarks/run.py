@@ -19,9 +19,21 @@ import inspect
 import json
 import os
 import platform
+import subprocess
 import time
+from datetime import datetime, timezone
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_sha() -> str | None:
+    """HEAD sha for provenance-stamping BENCH_*.json (None outside git)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_ROOT, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return None
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -44,10 +56,10 @@ def main(argv: list[str] | None = None) -> None:
         rows.append({"name": name, "us_per_call": us, "derived": derived})
 
     t0 = time.time()
-    from benchmarks import (big_d_bench, kernel_bench, many_model_bench,
-                            paper_comm_cost, paper_convergence,
-                            paper_generalization, paper_online, roofline,
-                            serve_kernel_bench)
+    from benchmarks import (big_d_bench, gossip_bench, kernel_bench,
+                            many_model_bench, paper_comm_cost,
+                            paper_convergence, paper_generalization,
+                            paper_online, roofline, serve_kernel_bench)
 
     suites = [
         ("paper_convergence", paper_convergence.main),   # Figs 1-2, Tab 1/2/4/5
@@ -58,6 +70,7 @@ def main(argv: list[str] | None = None) -> None:
         ("serve_kernel", serve_kernel_bench.main),       # deployment surface
         ("many_model", many_model_bench.main),           # multi-tenant store
         ("big_d", big_d_bench.main),                     # matrix-free CG sweep
+        ("gossip", gossip_bench.main),                   # async agent-axis
         ("roofline", roofline.main),                     # from dry-run cache
     ]
     known = {name for name, _ in suites}
@@ -93,6 +106,9 @@ def main(argv: list[str] | None = None) -> None:
             "smoke": args.smoke,
             "platform": platform.platform(),
             "python": platform.python_version(),
+            "git_sha": _git_sha(),
+            "timestamp": datetime.now(timezone.utc).isoformat(
+                timespec="seconds"),
             "wall_s": time.time() - t0,
             "results": rows,
         }

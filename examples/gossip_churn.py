@@ -1,0 +1,59 @@
+"""Async gossip with churn: partial participation, a straggler, and an
+agent that leaves mid-stream and later rejoins.
+
+Twenty agents run online-COKE over a stationary stream under
+`exec="gossip"`: each round a ~50% Bernoulli sample of agents computes
+and (subject to censoring) broadcasts, everyone else holds state and pays
+zero bits. A `ChurnSchedule` scripts the scenario — agent 7 leaves at
+round 50 and rejoins at round 100 (re-entering with zeroed state, then
+re-converging through its neighbors), while agent 3 runs 3x slow and so
+participates ~3x less often. The asserts at the bottom pin the headline
+behavior: regret recovers after the rejoin, and sampling + censoring
+together pay far fewer transmissions than sync always-broadcast would.
+
+Run:  PYTHONPATH=src python examples/gossip_churn.py
+"""
+import numpy as np
+
+from repro.api import ChurnSchedule, FitConfig, KRRConfig, fit_stream
+
+ROUNDS = 160
+LEAVE, REJOIN = 50, 100
+
+base = FitConfig(
+    krr=KRRConfig(num_agents=20, num_features=64, lam=1e-3, rho=5e-2,
+                  seed=0),
+    graph="ring", algorithm="online_coke", stream="stationary",
+    num_iters=ROUNDS, online_batch=8, online_lr=0.3,
+    censor_v=0.2, censor_mu=0.995)
+
+churn = ChurnSchedule(leave=((LEAVE, 7),), join=((REJOIN, 7),),
+                      slowdown=((3, 3.0),))
+gossip = base.replace(exec="gossip", participation=0.5, churn=churn)
+
+sync = fit_stream(base)
+gsp = fit_stream(gossip)
+
+inst = np.asarray(gsp.history["instant_mse"], np.float64)
+print(f"{'round window':>16s}{'gossip regret':>15s}")
+for lo, hi, tag in ((0, 10, "cold start"), (LEAVE - 10, LEAVE, "pre-leave"),
+                    (REJOIN, REJOIN + 10, "rejoin shock"),
+                    (ROUNDS - 10, ROUNDS, "recovered")):
+    print(f"{lo:>6d}-{hi:<4d} {tag:>10s}{inst[lo:hi].mean():15.3e}")
+
+bits = np.asarray(gsp.state.inner.comm.bits)
+print(f"\nstraggler (agent 3, 3x slow) paid {int(bits[3]):,} bits vs "
+      f"{int(bits.mean()):,} mean;\nchurned agent 7 paid "
+      f"{int(bits[7]):,} (absent rounds {LEAVE}-{REJOIN - 1})")
+print(f"transmissions: gossip {int(gsp.comms[-1])} vs sync "
+      f"{int(sync.comms[-1])} (sampling + censoring stack)")
+
+# the demo's contract, pinned --------------------------------------------
+late = inst[-10:].mean()
+assert late < inst[:10].mean(), "regret must recover after the rejoin"
+assert late < 2.0 * inst[LEAVE - 10:LEAVE].mean(), \
+    "post-rejoin regret must return to the pre-leave level"
+assert bits[3] < 0.7 * bits.mean(), "the straggler must pay fewer bits"
+assert int(gsp.comms[-1]) < int(sync.comms[-1]), \
+    "partial participation must save transmissions over sync"
+print("\nOK: regret recovered after churn; gossip saved transmissions.")

@@ -26,6 +26,13 @@ reference), "spmd" (repro.distributed.consensus ring runtime), "fused"
 (spmd + Pallas `coke_update` kernel). The legacy drivers `core.admm.run` /
 `core.cta.run` remain as deprecation shims.
 
+Execution semantics: `FitConfig(exec="gossip", participation=0.25)` runs
+the asynchronous gossip engine — per iteration only a sampled subset of
+agents computes and broadcasts (sleepers hold state, pay zero bits, and
+serve stale values to neighbors), with `ChurnSchedule` scripting straggler
+slowdowns and agent join/leave on the simulator backend. participation=1.0
+reproduces exec="sync" (see repro.core.gossip).
+
 The training-loop integration (consensus data-parallelism for deep nets)
 is re-exported here too, so downstream scripts need only this surface.
 """
@@ -48,6 +55,8 @@ from repro.core.admm import Problem, make_problem  # noqa: F401
 from repro.core.censor import CensorSchedule  # noqa: F401
 from repro.core.comm import (Censor, Chain, CommState,  # noqa: F401
                              Drop, Quantize)
+from repro.core.gossip import (ChurnSchedule, GossipPlan,  # noqa: F401
+                               NeighborTable)
 from repro.core.graph import TopologySchedule  # noqa: F401
 from repro.core.ridge import rf_ridge  # noqa: F401
 

@@ -27,6 +27,7 @@ from repro.api.config import FitConfig, SolveContext
 from repro.api.registry import Solver
 from repro.api.solvers import _stacked_metrics, _uncompressed_bits
 from repro.core import admm
+from repro.core import gossip as gossip_mod
 from repro.core import losses as losses_mod
 from repro.core.admm import Problem
 from repro.core.graph import circulant
@@ -131,24 +132,33 @@ def _cg_primal_solve(problem: Problem, cg_tol: float, cg_maxiter: int):
 
 @partial(jax.jit, static_argnames=("ccfg", "opt_cfg", "num_iters",
                                    "primal_mode", "cg_tol", "cg_maxiter"))
-def _consensus_chunk(problem, params, cstate, oracle, comm, ccfg, opt_cfg,
-                     num_iters, primal_mode=None, cg_tol=1e-8,
+def _consensus_chunk(problem, params, cstate, oracle, comm, gossip, ccfg,
+                     opt_cfg, num_iters, primal_mode=None, cg_tol=1e-8,
                      cg_maxiter=64):
     # the exact primal is built HERE, from the traced problem argument:
     # the static jit key stays the value-hashable (ccfg, opt_cfg, mode,
     # tol, maxiter) tuple, so repeated fits share one compilation
     primal_solve = (_cg_primal_solve(problem, cg_tol, cg_maxiter)
                     if primal_mode == "cg" else None)
+    n_agents = problem.num_agents
 
     def body(carry, _):
         params, cstate = carry
+        # gossip: the round's participation mask, drawn from the SAME
+        # CommState key + iteration fold as the simulator path — both
+        # backends sample identical wake-up schedules, so comms/bits
+        # histories agree exactly across backends
+        participate = None
+        if gossip is not None:
+            participate = gossip_mod.participation_mask(
+                cstate["comm"].key, cstate["step"] + 1, n_agents, gossip)
         if primal_solve is None:
             grads = {"theta": _local_grads(problem, params["theta"])}
         else:  # exact primal: the local gradient is folded into the solve
             grads = {"theta": jnp.zeros_like(params["theta"])}
         params, cstate, extra = cns.consensus_update(
             ccfg, opt_cfg, params, grads, cstate, comm=comm,
-            primal_solve=primal_solve)
+            primal_solve=primal_solve, participate=participate)
         bits = extra.get("bits")
         if bits is None:  # policy-unaware strategy (cta): full precision
             bits = _uncompressed_bits(problem, cstate["comms"])
@@ -167,14 +177,20 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, ccfg, opt_cfg,
 
 @partial(jax.jit, static_argnames=("ccfg", "num_iters", "lam", "lr",
                                    "eta"))
-def _stream_chunk(stream, params, cstate, comm, ccfg, num_iters,
+def _stream_chunk(stream, params, cstate, comm, gossip, ccfg, num_iters,
                   lam, lr, eta):
+    n_agents = stream.num_agents
+
     def body(carry, _):
         params, cstate = carry
+        participate = None
+        if gossip is not None:  # same draw as the simulator (see above)
+            participate = gossip_mod.participation_mask(
+                cstate["comm"].key, cstate["step"] + 1, n_agents, gossip)
         feats, labels = stream.round_batch(cstate["step"])
         params, cstate, extra = cns.stream_update(
             ccfg, params, cstate, feats, labels,
-            lam=lam, lr=lr, eta=eta, comm=comm)
+            lam=lam, lr=lr, eta=eta, comm=comm, participate=participate)
         # exactly the simulator's _stream_metrics keys — streaming
         # histories are key-identical across backends, so the conformance
         # harness can compare any pair with exact="*"
@@ -215,10 +231,12 @@ def stream_consensus_runner(config: FitConfig, solver: Solver, stream,
     params = {"theta": theta}
     cstate = cns.init_stream_state(ccfg, theta, comm=chain)
 
+    gplan = ctx.gossip if ctx.exec == "gossip" else None
+
     def chunk_fn(carry, n):
         params, cstate = carry
-        return _stream_chunk(stream, params, cstate, chain, ccfg=ccfg,
-                             num_iters=n, lam=stream.lam,
+        return _stream_chunk(stream, params, cstate, chain, gplan,
+                             ccfg=ccfg, num_iters=n, lam=stream.lam,
                              lr=ctx.online_lr, eta=eta)
 
     return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]
@@ -283,11 +301,13 @@ def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
         params = shard_features(params, mesh, N)
         cstate = shard_features(cstate, mesh, N)
 
+    gplan = ctx.gossip if ctx.exec == "gossip" else None
+
     def chunk_fn(carry, n):
         params, cstate = carry
         return _consensus_chunk(problem, params, cstate, oracle, chain,
-                                ccfg=ccfg, opt_cfg=opt_cfg, num_iters=n,
-                                primal_mode=primal_mode,
+                                gplan, ccfg=ccfg, opt_cfg=opt_cfg,
+                                num_iters=n, primal_mode=primal_mode,
                                 cg_tol=ctx.cg_tol,
                                 cg_maxiter=ctx.cg_maxiter)
 

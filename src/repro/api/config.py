@@ -42,6 +42,24 @@ class FitConfig:
     censor_v: float | None = None
     censor_mu: float | None = None
 
+    # execution semantics — the async axis (see repro.core.gossip):
+    #   "sync"   = bulk-synchronous: every agent computes and exchanges
+    #              every iteration (the paper's Algorithms 1/2 as written);
+    #   "gossip" = per iteration a Bernoulli(participation) or fixed-size
+    #              (gossip_size) sample of agents runs the primal step and
+    #              broadcasts; everyone else holds state, neighbors read
+    #              stale values, duals are delayed-but-correct, and
+    #              non-participants pay zero bits. participation=1.0 with
+    #              no churn reproduces "sync" (bit-for-bit on deg-2
+    #              graphs — the conformance pin).
+    exec: str = "sync"
+    participation: float = 1.0       # gossip: Bernoulli wake-up rate
+    gossip_size: int | None = None   # gossip: fixed-size sample (overrides
+    #                                  the Bernoulli rate when set)
+    # population dynamics (simulator gossip only): straggler slowdowns and
+    # scheduled agent join/leave events — a core.gossip.ChurnSchedule
+    churn: object | None = None
+
     # time-varying consensus graph; None = the static `graph` family below.
     # The spmd/fused backends require schedule.offsets (circulant lowering).
     topology: TopologySchedule | None = None
@@ -110,6 +128,30 @@ class FitConfig:
             raise ValueError(
                 f"qc_eta must be positive (or None to reuse online_lr), "
                 f"got {self.qc_eta}")
+        from repro.core.gossip import EXEC_MODES, ChurnSchedule
+        if self.exec not in EXEC_MODES:
+            raise ValueError(
+                f"unknown exec mode {self.exec!r}; choose from {EXEC_MODES}")
+        if self.exec == "sync":
+            if self.participation != 1.0 or self.gossip_size is not None \
+                    or self.churn is not None:
+                raise ValueError(
+                    "participation/gossip_size/churn are gossip-execution "
+                    "knobs; set exec='gossip' to use them")
+        else:
+            if not 0.0 < self.participation <= 1.0:
+                raise ValueError(
+                    f"participation must be in (0, 1], got "
+                    f"{self.participation}")
+            if self.gossip_size is not None and self.gossip_size < 1:
+                raise ValueError(
+                    f"gossip_size must be >= 1 or None, got "
+                    f"{self.gossip_size}")
+            if self.churn is not None and not isinstance(self.churn,
+                                                         ChurnSchedule):
+                raise ValueError(
+                    "churn must be a repro.core.gossip.ChurnSchedule, got "
+                    f"{type(self.churn).__name__}")
         if self.comm is not None:
             if self.censor_v is not None or self.censor_mu is not None:
                 raise ValueError(
@@ -155,19 +197,23 @@ class FitConfig:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("comm", "topology"),
+         data_fields=("comm", "topology", "gossip"),
          meta_fields=("primal", "inner_steps", "inner_lr", "cg_tol",
                       "cg_maxiter", "cta_lr", "online_lr", "online_batch",
-                      "qc_eta"))
+                      "qc_eta", "exec"))
 @dataclasses.dataclass(frozen=True)
 class SolveContext:
     """The solver-facing slice of a FitConfig, shaped for jit: the comm
-    policy's numeric knobs (v, mu, bits, p) and the topology schedule's
-    adjacency stack are array *data* (traced — policy sweeps share one
-    compilation); everything else is static metadata."""
+    policy's numeric knobs (v, mu, bits, p), the topology schedule's
+    adjacency stack, and the gossip plan's participation/liveness arrays
+    are array *data* (traced — policy sweeps share one compilation);
+    everything else is static metadata."""
 
     comm: comm_mod.Chain             # policy with float32 array leaves
     topology: TopologySchedule | None = None
+    # compiled gossip execution plan (core.gossip.GossipPlan) when
+    # exec == "gossip"; None under synchronous execution
+    gossip: object | None = None
     primal: str = "auto"
     inner_steps: int = 50
     inner_lr: float = 0.1
@@ -177,13 +223,29 @@ class SolveContext:
     online_lr: float = 0.3
     online_batch: int = 16
     qc_eta: float | None = None
+    exec: str = "sync"
 
     @classmethod
-    def from_config(cls, config: FitConfig) -> "SolveContext":
+    def from_config(cls, config: FitConfig,
+                    num_agents: int | None = None) -> "SolveContext":
+        from repro.core.gossip import ChurnSchedule  # local: avoid cycle
+
         chain = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
                              config.resolved_comm)
+        gossip = None
+        if config.exec == "gossip":
+            if num_agents is None:
+                raise ValueError(
+                    "exec='gossip' needs the agent count to compile its "
+                    "participation/churn plan; pass num_agents")
+            sched = config.churn if config.churn is not None \
+                else ChurnSchedule()
+            gossip = sched.plan(num_agents,
+                                participation=config.participation,
+                                size=config.gossip_size)
         return cls(comm=chain,
                    topology=config.topology,
+                   gossip=gossip,
                    primal=config.primal,
                    inner_steps=config.inner_steps,
                    inner_lr=config.inner_lr,
@@ -192,7 +254,8 @@ class SolveContext:
                    cta_lr=config.cta_lr,
                    online_lr=config.online_lr,
                    online_batch=config.online_batch,
-                   qc_eta=config.qc_eta)
+                   qc_eta=config.qc_eta,
+                   exec=config.exec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,6 +324,7 @@ class FitResult:
         meta = {
             "algorithm": self.config.algorithm,
             "backend": self.config.backend,
+            "exec": self.config.exec,
             "num_iters": self.config.resolved_iters,
             "censor_v": v, "censor_mu": mu,
             "comm": self.config.resolved_comm.describe(),

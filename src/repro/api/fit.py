@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.api.backends import consensus_runner, stream_consensus_runner
 from repro.api.config import FitConfig, FitResult, SolveContext
 from repro.api.problems import StreamProblem, build_problem, build_stream
-from repro.api.registry import (Solver, ensure_primal_supported,
+from repro.api.registry import (Solver, ensure_exec_supported,
+                                ensure_primal_supported,
                                 ensure_stream_supported, get_solver)
 from repro.core import ridge
 from repro.core.admm import Problem
@@ -129,6 +130,7 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
             f"solver {config.algorithm!r} does not support a time-varying "
             "topology schedule; drop FitConfig.topology or pick dkla/coke")
     ensure_primal_supported(config, solver)
+    ensure_exec_supported(config, solver)
     rff_params = None
     if problem is None:
         built = build_problem(config)
@@ -141,7 +143,7 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
             f"topology schedule is over {config.topology.num_agents} "
             f"agents but the problem has {problem.num_agents}")
 
-    ctx = SolveContext.from_config(config)
+    ctx = SolveContext.from_config(config, num_agents=problem.num_agents)
     if config.backend == "simulator":
         carry0, chunk_fn, theta_fn = _simulator_runner(
             config, solver, problem, ctx, oracle, mesh=mesh)
@@ -178,6 +180,7 @@ def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
     """
     solver = get_solver(config.algorithm)
     ensure_stream_supported(config, solver)
+    ensure_exec_supported(config, solver)
     rff_params = None
     if stream is None:
         built = build_stream(config)
@@ -187,7 +190,7 @@ def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
             f"stream adjacency {stream.adjacency.shape} does not match its "
             f"{stream.num_agents} agents")
 
-    ctx = SolveContext.from_config(config)
+    ctx = SolveContext.from_config(config, num_agents=stream.num_agents)
     if config.backend == "simulator":
         carry0, chunk_fn, theta_fn = _simulator_runner(
             config, solver, stream, ctx, None)

@@ -107,6 +107,36 @@ def ensure_primal_supported(config, solver: Solver) -> None:
             "or pick an ADMM solver (dkla/coke)")
 
 
+def ensure_exec_supported(config, solver: Solver) -> None:
+    """The exec="gossip" admission checks, shared by fit(), fit_stream()
+    and sweep(): only solvers with asynchronous update semantics
+    (gossip_aware — the ADMM and streaming families) can run under
+    sampled participation, gossip needs a static graph, and churn
+    (population dynamics) is implemented on the vectorized simulator with
+    a degree-tracking primal."""
+    if config.exec != "gossip":
+        return
+    if not getattr(solver, "gossip_aware", False):
+        raise ValueError(
+            f"solver {config.algorithm!r} has no gossip execution "
+            "semantics; use exec='sync' or pick the ADMM (dkla/coke) or "
+            "streaming (online_dkla/online_coke/qc_odkla) families")
+    if config.topology is not None:
+        raise ValueError(
+            "gossip execution samples participants on a static consensus "
+            "graph; drop FitConfig.topology or use exec='sync'")
+    if config.churn is not None:
+        if config.backend != "simulator":
+            raise ValueError(
+                "churn (agent join/leave, stragglers) is implemented on "
+                f"the vectorized simulator backend, not {config.backend!r}")
+        if config.primal == "cholesky":
+            raise ValueError(
+                "churn makes the graph degrees time-varying; the "
+                "prefactored Cholesky primal cannot follow them — use "
+                "primal='auto', 'cg' or 'gradient'")
+
+
 def ensure_stream_supported(config, solver: Solver) -> None:
     """The fit_stream() admission checks: only the streaming solvers take a
     StreamProblem, and only on the backends their online update is wired

@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.api.config import SolveContext
 from repro.api.registry import register_solver
-from repro.core import admm, comm as comm_mod, cta, online, ridge
+from repro.core import admm, comm as comm_mod, cta, gossip as gossip_mod
+from repro.core import online, ridge
 from repro.core.admm import Problem
 from repro.core.graph import Graph, metropolis_weights
 
@@ -62,19 +63,36 @@ class _ADMMSolver:
     # solves apply to; fit() rejects forcing those modes on solvers without
     # one (cta/online/oracle) instead of silently running something else
     primal_aware = True
+    # the ADMM update has a well-defined asynchronous form (sampled
+    # participants step, sleepers hold, duals delayed-but-correct) —
+    # exec="gossip" admits these solvers (core.gossip.gossip_coke_step)
+    gossip_aware = True
 
     def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
         raise NotImplementedError
 
     def prepare_host(self, problem: Problem, ctx: SolveContext):
+        # gossip execution reads the graph through a padded neighbor-index
+        # table (gathers, no dense (N, N) on the hot path) — built once,
+        # eagerly, from the host adjacency
+        if ctx.exec == "gossip":
+            return gossip_mod.NeighborTable.from_adjacency(
+                np.asarray(problem.adjacency))
         return None
 
     def _primal_mode(self, problem: Problem, ctx: SolveContext) -> str:
         """The concrete primal update for this (problem, context) pair:
         Cholesky / CG across the big-D crossover, gradient for general
-        losses — see core.admm.resolve_primal."""
-        return admm.resolve_primal(ctx.primal, problem.feature_dim,
+        losses — see core.admm.resolve_primal. Under churn the graph
+        degrees are time-varying, so "auto" falls through to the matrix-
+        free CG solve (an explicit primal="cholesky" is rejected up front
+        by registry.ensure_exec_supported)."""
+        mode = admm.resolve_primal(ctx.primal, problem.feature_dim,
                                    problem.loss)
+        if (mode == "cholesky" and ctx.gossip is not None
+                and ctx.gossip.has_churn):
+            mode = "cg"
+        return mode
 
     def prepare_traced(self, problem: Problem, ctx: SolveContext, host_aux):
         # Cholesky factors inside the compiled loop, exactly where the
@@ -82,6 +100,11 @@ class _ADMMSolver:
         # the (18a) normal matrix depends on the per-graph degrees, so a
         # (M, N, D, D) stack is factored and coke_step gathers per k.
         # The cg / gradient primals are matrix-free: no aux at all.
+        if ctx.exec == "gossip":
+            chol = None
+            if self._primal_mode(problem, ctx) == "cholesky":
+                chol = admm._ridge_factors(problem, deg=host_aux.degrees())
+            return {"table": host_aux, "chol": chol}
         if self._primal_mode(problem, ctx) != "cholesky":
             return None
         if ctx.topology is None:
@@ -95,6 +118,13 @@ class _ADMMSolver:
 
     def step(self, problem: Problem, ctx: SolveContext, aux, state):
         mode = self._primal_mode(problem, ctx)
+        if ctx.exec == "gossip":
+            return gossip_mod.gossip_coke_step(
+                problem, self._policy(ctx), state, aux["table"], ctx.gossip,
+                chol=aux["chol"], inner_steps=ctx.inner_steps,
+                inner_lr=ctx.inner_lr,
+                primal=mode if mode in ("cg", "cholesky") else "gradient",
+                cg_tol=ctx.cg_tol, cg_maxiter=ctx.cg_maxiter)
         return admm.coke_step(problem, self._policy(ctx), state, aux,
                               ctx.inner_steps, ctx.inner_lr,
                               topology=ctx.topology,
@@ -201,6 +231,10 @@ class _OnlineSolver:
     consensus_strategy = None
     comm_aware = True
     topology_aware = False
+    # the streaming round has the same asynchronous form as the ADMM one:
+    # sampled participants take the minibatch step and gossip, sleepers
+    # hold (core.gossip.gossip_stream_step)
+    gossip_aware = True
 
     def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
         raise NotImplementedError
@@ -210,10 +244,13 @@ class _OnlineSolver:
         return None
 
     def prepare_host(self, problem, ctx: SolveContext):
+        if ctx.exec == "gossip":
+            return gossip_mod.NeighborTable.from_adjacency(
+                np.asarray(problem.adjacency))
         return None
 
     def prepare_traced(self, problem, ctx: SolveContext, host_aux):
-        return None
+        return host_aux  # gossip: the neighbor table; sync: None
 
     def init_state(self, problem, ctx: SolveContext):
         N, D = problem.num_agents, problem.feature_dim
@@ -245,10 +282,16 @@ class _OnlineSolver:
     def step(self, problem, ctx: SolveContext, aux,
              state: OnlineFitState):
         feats, labels = self._round_batch(problem, ctx, state.inner.step)
-        inner, inst = online.stream_step(
-            state.inner, feats, labels, problem.adjacency,
-            self._policy(ctx), lam=problem.lam, rho=problem.rho,
-            lr=ctx.online_lr, eta=self._eta(ctx))
+        if ctx.exec == "gossip":
+            inner, inst = gossip_mod.gossip_stream_step(
+                state.inner, feats, labels, aux, self._policy(ctx),
+                ctx.gossip, lam=problem.lam, rho=problem.rho,
+                lr=ctx.online_lr, eta=self._eta(ctx))
+        else:
+            inner, inst = online.stream_step(
+                state.inner, feats, labels, problem.adjacency,
+                self._policy(ctx), lam=problem.lam, rho=problem.rho,
+                lr=ctx.online_lr, eta=self._eta(ctx))
         return OnlineFitState(inner, inst)
 
     def metrics(self, problem, ctx: SolveContext, aux,

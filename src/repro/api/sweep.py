@@ -31,8 +31,8 @@ import numpy as np
 from repro.api.config import FitConfig, SolveContext
 from repro.api.model import KernelModel
 from repro.api.problems import build_problem
-from repro.api.registry import (Solver, ensure_primal_supported,
-                                get_solver)
+from repro.api.registry import (Solver, ensure_exec_supported,
+                                ensure_primal_supported, get_solver)
 from repro.core import comm as comm_mod
 from repro.core.admm import Problem
 
@@ -142,12 +142,16 @@ def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
 
     solver = get_solver(base.algorithm)
     ensure_primal_supported(base, solver)
+    ensure_exec_supported(base, solver)
     rff_params = None
     if problem is None:
         built = build_problem(base)
         problem, rff_params = built.problem, built.rff_params
 
-    ctx = SolveContext.from_config(base)
+    # under exec="gossip" each vmapped cell's participation schedule is
+    # independent: the draw folds the cell's CommState key, which already
+    # folds every (per-cell) numeric policy parameter
+    ctx = SolveContext.from_config(base, num_agents=problem.num_agents)
     host_aux = solver.prepare_host(problem, ctx)
     policies = _stack_policies(cells)
 

@@ -164,10 +164,13 @@ def resolve_primal(primal: str, feature_dim: int, loss: str) -> str:
     return primal
 
 
-def _ridge_factors(problem: Problem):
-    """Per-agent Cholesky factors of the (18a) normal matrix (quadratic loss)."""
+def _ridge_factors(problem: Problem, deg=None):
+    """Per-agent Cholesky factors of the (18a) normal matrix (quadratic
+    loss). deg overrides problem.degrees (e.g. a NeighborTable's live
+    degrees in gossip execution — same values, no dense adjacency read)."""
     N, Ti, D = problem.feats.shape
-    deg = problem.degrees
+    if deg is None:
+        deg = problem.degrees
 
     def factor(phi, d_i):
         A = (2.0 / Ti) * phi.T @ phi

@@ -248,13 +248,23 @@ class Chain:
         return state
 
     def apply(self, theta: jax.Array, prev: jax.Array, k,
-              state: CommState) -> tuple[jax.Array, jax.Array, CommState]:
+              state: CommState,
+              active: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array, CommState]:
         """Run one broadcast round: (N, D) candidate values against the
-        (N, D) stale copies. Returns (theta_hat, send, new_state)."""
+        (N, D) stale copies. Returns (theta_hat, send, new_state).
+
+        active — optional (N,) bool participation mask (gossip execution):
+        an inactive agent is structurally silent this round — it cannot
+        send regardless of the stage decisions, pays zero bits, and its
+        receivers keep the stale value. `active=None` (and an all-true
+        mask) is exactly the bulk-synchronous broadcast."""
         num_agents = theta.shape[0]
         dim = theta.shape[-1]
+        send0 = (jnp.ones((num_agents,), bool) if active is None
+                 else active.astype(bool))
         msg = Msg(payload=theta, prev=prev,
-                  send=jnp.ones((num_agents,), bool),
+                  send=send0,
                   delivered=jnp.ones((num_agents,), bool),
                   bits_per_value=jnp.asarray(FP_BITS, jnp.float32),
                   overhead_bits=jnp.zeros((), jnp.float32))
@@ -356,15 +366,17 @@ def unflatten_agents(flat: jax.Array, leaves: list, treedef=None):
 
 
 def apply_tree(chain: Chain, params_tree, prev_tree, k,
-               state: CommState):
+               state: CommState, active: jax.Array | None = None):
     """Chain.apply over agent-stacked pytrees: flatten both trees to
     (N, D_total) float32, run the policy once over the concatenated
     coordinates (one decision per agent, as in the flat form), unflatten
     the resulting broadcast. Bit-compatible with the flat path when the
-    tree has a single (N, D) leaf — the cross-backend parity contract."""
+    tree has a single (N, D) leaf — the cross-backend parity contract.
+    `active` is the gossip participation mask (see Chain.apply)."""
     flat, leaves = flatten_agents(params_tree)
     prev_flat, _ = flatten_agents(prev_tree)
-    hat_flat, send, state = chain.apply(flat, prev_flat, k, state)
+    hat_flat, send, state = chain.apply(flat, prev_flat, k, state,
+                                        active=active)
     hat_tree = unflatten_agents(hat_flat, leaves,
                                 jax.tree.structure(params_tree))
     return hat_tree, send, state

@@ -1,0 +1,468 @@
+"""Asynchronous gossip execution — the second execution semantics of the
+solver registry.
+
+Every solver in this repo was born bulk-synchronous: each iteration, ALL
+agents compute and ALL agents exchange. Real decentralized traffic is not
+like that — Koppel et al. (arXiv 1710.04062) and the paper's own
+time-varying-network discussion describe the regime where, per tick, only
+a *sampled subset* of agents wakes up, computes, and gossips with its
+neighbors, while everyone else holds state and neighbors are served stale
+values. This module implements that regime as `FitConfig(exec="gossip")`:
+
+  * **participation sampling** — a Bernoulli(rate) or fixed-size subset of
+    agents performs the primal step and broadcasts each iteration. The
+    draw comes from the `CommState` chain-level PRNG key (folded with the
+    iteration and a dedicated stage tag), NOT a static seed: under
+    `sweep()`'s vmap every grid cell carries its own independent
+    participation schedule, identical cells stay bit-identical, and the
+    simulator / spmd backends derive the SAME masks from the same state
+    (so comms/bits agree exactly across backends).
+  * **stale-neighbor fallback** — non-participants neither transmit nor
+    pay bits; their last broadcast (`theta_hat`) keeps serving neighbor
+    reads, generalizing the one-theta_hat-per-agent stale-value machinery
+    `Drop` already relies on.
+  * **delayed-but-correct duals** — a non-participant's dual variable is
+    frozen; when it next participates, the (21b) update runs against the
+    *current* broadcast values, accumulating the drift it slept through
+    exactly once.
+  * **churn** — a `ChurnSchedule` scripts straggler slowdowns and agent
+    join/leave events at scheduled iterations. Liveness is traced data
+    (an event-indexed alive stack), so churn runs inside the compiled
+    scan: a leaver is removed from every neighbor sum and degree, a
+    (re)joiner restarts from zero state, and surviving agents'
+    trajectories are unperturbed except through the graph.
+
+Scaling contract: the simulator gossip path is a vectorized masked update
+over the agent-stacked state — no Python loop over N, and **no dense
+(N, N) adjacency is ever read or materialized** (`NeighborTable` gathers
+over a padded (N, K) neighbor-index table), so N in the thousands fits.
+Pinned by jaxpr inspection in tests/test_gossip.py.
+
+Degeneracy contract: at participation = 1.0 with no churn and no
+stragglers, every masked update reduces to the synchronous step —
+bit-identical to `exec="sync"` on deg-2 graphs (ring), where the
+gather-sum and the dense `A @ x` accumulate identical partial sums, and
+float-close on denser graphs (summation-order ulps only). The conformance
+harness (`tests/conftest.py::assert_gossip_degenerate`) pins the
+bit-identical form on simulator and spmd.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm as comm_mod
+from repro.core.admm import (COKEState, Problem, _primal_cg,
+                             _primal_closed_form, _primal_gradient)
+from repro.core.online import OnlineState
+
+EXEC_MODES = ("sync", "gossip")
+
+#: fold-in tag separating the participation stream from the comm stages'
+#: per-round streams (Chain.apply folds the stage *index*; this sentinel
+#: can never collide with one)
+PARTICIPATION_TAG = np.uint32(0x9E3779B1)
+
+
+# ---------------------------------------------------------------------------
+# NeighborTable: the sparse neighbor view (no dense (N, N) on the hot path)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("idx", "nmask"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class NeighborTable:
+    """Padded neighbor-index form of an undirected graph: row i lists
+    agent i's neighbors in ascending index order, padded to the max
+    degree. All neighbor reductions are gathers over this table —
+    O(N * K * D), never an (N, N) matmul — which is what lets the
+    simulator hold thousands of agents.
+
+    On deg-2 rows the two-term gather-sum is bit-identical to the dense
+    `A @ x` row (adding zeros and reordering a two-term sum are exact),
+    the property the ring-graph degeneracy pin leans on."""
+
+    idx: jax.Array    # (N, K) int32 neighbor indices (0-padded)
+    nmask: jax.Array  # (N, K) float32: 1.0 real neighbor, 0.0 padding
+
+    @property
+    def num_agents(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.idx.shape[1]
+
+    @classmethod
+    def from_adjacency(cls, adjacency) -> "NeighborTable":
+        """Host-side build from a dense (N, N) adjacency (numpy); the
+        dense form never reaches the compiled step."""
+        A = np.asarray(adjacency)
+        if A.ndim != 2 or A.shape[0] != A.shape[1]:
+            raise ValueError(f"adjacency must be square, got {A.shape}")
+        N = A.shape[0]
+        rows = [np.nonzero(A[i])[0] for i in range(N)]
+        K = max((len(r) for r in rows), default=0) or 1
+        idx = np.zeros((N, K), np.int32)
+        msk = np.zeros((N, K), np.float32)
+        for i, r in enumerate(rows):
+            idx[i, : len(r)] = r
+            msk[i, : len(r)] = 1.0
+        return cls(idx=jnp.asarray(idx), nmask=jnp.asarray(msk))
+
+    def _weights(self, alive: jax.Array | None) -> jax.Array:
+        if alive is None:
+            return self.nmask
+        return self.nmask * alive[self.idx].astype(self.nmask.dtype)
+
+    def degrees(self, alive: jax.Array | None = None) -> jax.Array:
+        """(N,) live degree — dead neighbors (churn) drop out."""
+        return jnp.sum(self._weights(alive), axis=1)
+
+    def nbr_sum(self, x: jax.Array,
+                alive: jax.Array | None = None) -> jax.Array:
+        """sum_{n in N(i)} x_n for agent-stacked x (N, ...) — the gossip
+        spelling of `adjacency @ x`, restricted to live neighbors."""
+        g = x[self.idx]                       # (N, K, ...)
+        w = self._weights(alive)
+        return jnp.einsum("nk,nk...->n...", w, g)
+
+
+# ---------------------------------------------------------------------------
+# ChurnSchedule (host description) -> GossipPlan (traced scan data)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule:
+    """Scenario knobs for population dynamics, scripted per iteration.
+
+    leave / join   — ((iteration, agent), ...) events, 1-based iterations;
+                     effective AT the named iteration. An agent may leave
+                     and later rejoin (it restarts from zero state).
+    slowdown       — ((agent, factor), ...) straggler factors >= 1: agent
+                     i's participation probability is rate / factor (a
+                     2x-slow straggler joins half as often).
+    start_absent   — agents dead at iteration 1 (they join later).
+    """
+
+    leave: tuple = ()
+    join: tuple = ()
+    slowdown: tuple = ()
+    start_absent: tuple = ()
+
+    @property
+    def has_events(self) -> bool:
+        return bool(self.leave or self.join or self.start_absent)
+
+    def plan(self, num_agents: int, participation: float = 1.0,
+             size: int | None = None) -> "GossipPlan":
+        """Compile the schedule into the traced arrays the gossip step
+        consumes: an event-indexed alive stack plus the straggler vector."""
+        def _check_agent(a):
+            a = int(a)
+            if not 0 <= a < num_agents:
+                raise ValueError(
+                    f"churn names agent {a} but the problem has "
+                    f"{num_agents} agents")
+            return a
+
+        if size is not None and not 1 <= size <= num_agents:
+            raise ValueError(
+                f"gossip_size={size} out of range for {num_agents} agents")
+
+        events: list[tuple[int, int, bool]] = []
+        for it, a in self.leave:
+            if int(it) < 1:
+                raise ValueError(f"churn iterations are 1-based, got {it}")
+            events.append((int(it), _check_agent(a), False))
+        for it, a in self.join:
+            if int(it) < 1:
+                raise ValueError(f"churn iterations are 1-based, got {it}")
+            events.append((int(it), _check_agent(a), True))
+        seen = set()
+        for it, a, _ in events:
+            if (it, a) in seen:
+                raise ValueError(
+                    f"conflicting churn events for agent {a} at "
+                    f"iteration {it}")
+            seen.add((it, a))
+
+        alive = np.ones((num_agents,), bool)
+        for a in self.start_absent:
+            alive[_check_agent(a)] = False
+
+        event_iters, stack = [], [alive.copy()]
+        for it in sorted({e[0] for e in events}):
+            for eit, a, up in events:
+                if eit == it:
+                    alive[a] = up
+            event_iters.append(it)
+            stack.append(alive.copy())
+
+        slow = None
+        if self.slowdown:
+            slow = np.ones((num_agents,), np.float32)
+            for a, f in self.slowdown:
+                if float(f) < 1.0:
+                    raise ValueError(
+                        f"straggler factors are >= 1 (a slowdown), got {f}")
+                slow[_check_agent(a)] = float(f)
+
+        return GossipPlan(
+            participation=jnp.asarray(participation, jnp.float32),
+            size=size,
+            slowdown=None if slow is None else jnp.asarray(slow),
+            event_iters=(jnp.asarray(event_iters, jnp.int32)
+                         if event_iters else None),
+            alive_stack=(jnp.asarray(np.stack(stack))
+                         if self.has_events else None))
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("participation", "slowdown", "event_iters",
+                      "alive_stack"),
+         meta_fields=("size",))
+@dataclasses.dataclass(frozen=True)
+class GossipPlan:
+    """The traced execution plan of one gossip run. All liveness /
+    participation quantities are pytree data, so churn scenarios and
+    participation sweeps share one compiled scan."""
+
+    participation: jax.Array          # scalar f32 Bernoulli rate
+    size: int | None = None           # fixed-size sampling (overrides rate)
+    slowdown: jax.Array | None = None  # (N,) straggler factors >= 1
+    event_iters: jax.Array | None = None  # (E,) sorted 1-based iterations
+    alive_stack: jax.Array | None = None  # (E + 1, N) bool
+
+    @property
+    def has_churn(self) -> bool:
+        return self.alive_stack is not None
+
+    def alive_at(self, k) -> jax.Array | None:
+        """(N,) liveness during (possibly traced) iteration k; None when
+        the run has no churn events (everyone lives)."""
+        if self.alive_stack is None:
+            return None
+        i = jnp.sum((self.event_iters <= k).astype(jnp.int32))
+        return self.alive_stack[i]
+
+
+def participation_mask(key: jax.Array, k, num_agents: int,
+                       plan: GossipPlan,
+                       alive: jax.Array | None = None) -> jax.Array:
+    """(N,) bool — who computes and broadcasts this round.
+
+    key is the chain-level `CommState.key`: folding (iteration k,
+    PARTICIPATION_TAG, the rate's f32 bit pattern) gives a stream that is
+    (a) independent of the comm stages' draws, (b) per-cell under sweep's
+    vmap (the chain key already folds every policy parameter), and (c)
+    identical on every backend carrying the same CommState. Straggler
+    slowdowns scale the *threshold*, not the stream — common random
+    numbers across slowdown scenarios. rate = 1.0 is exactly the all-ones
+    mask (uniform draws live in [0, 1)), the degeneracy contract."""
+    r = jax.random.fold_in(key, jnp.asarray(k, jnp.uint32))
+    r = jax.random.fold_in(r, PARTICIPATION_TAG)
+    r = comm_mod._fold_value(r, plan.participation)
+    u = jax.random.uniform(r, (num_agents,))
+    if plan.size is not None:
+        score = u if alive is None else jnp.where(alive, u, jnp.inf)
+        _, sel = jax.lax.top_k(-score, plan.size)
+        m = jnp.zeros((num_agents,), bool).at[sel].set(True)
+    else:
+        p = jnp.asarray(plan.participation, jnp.float32)
+        if plan.slowdown is not None:
+            p = jnp.minimum(p / plan.slowdown, 1.0)
+        m = u < p
+    if alive is not None:
+        m = m & alive
+    return m
+
+
+def _mask_rows(m: jax.Array, new, old):
+    """where(m) over agent-stacked pytrees: row i takes `new` iff m[i]."""
+    def sel(a, b):
+        return jnp.where(m.reshape(m.shape + (1,) * (a.ndim - 1)), a, b)
+    return jax.tree.map(sel, new, old)
+
+
+# ---------------------------------------------------------------------------
+# One gossip iteration — the ADMM family (DKLA / COKE)
+# ---------------------------------------------------------------------------
+
+def gossip_coke_step(
+    problem: Problem,
+    policy,
+    state: COKEState,
+    table: NeighborTable,
+    plan: GossipPlan,
+    chol: jax.Array | None = None,
+    inner_steps: int = 50,
+    inner_lr: float = 0.1,
+    primal: str = "cg",
+    cg_tol: float = 1e-8,
+    cg_maxiter: int = 64,
+) -> COKEState:
+    """One asynchronous iteration of Algorithm 1/2: the sampled
+    participants run the (21a) primal + policy-governed broadcast +
+    delayed (21b) dual; everyone else holds state and pays zero bits.
+
+    Reads the graph ONLY through `table` — `problem.adjacency` is never
+    consumed, so the traced step touches no (N, N) value (the scaling
+    contract, pinned by jaxpr inspection)."""
+    chain = comm_mod.as_chain(policy)
+    N = state.theta.shape[0]
+    k = state.step + 1
+    comm_state = chain.ensure_state(state.comm, N)
+
+    theta0, theta_hat0, gamma0 = state.theta, state.theta_hat, state.gamma
+    alive = plan.alive_at(k)
+    if plan.has_churn:
+        # a (re)joining agent restarts cold: zero primal/broadcast/dual
+        joined = alive & ~plan.alive_at(k - 1)
+        theta0, theta_hat0, gamma0 = _mask_rows(
+            joined, jax.tree.map(jnp.zeros_like, (theta0, theta_hat0,
+                                                  gamma0)),
+            (theta0, theta_hat0, gamma0))
+
+    deg = table.degrees(alive)
+    nbr_hat = table.nbr_sum(theta_hat0, alive)
+
+    if primal == "cg":
+        theta_new = _primal_cg(problem, gamma0, theta_hat0, nbr_hat, deg,
+                               theta0=theta0, tol=cg_tol,
+                               maxiter=cg_maxiter)
+    elif primal == "cholesky":
+        if chol is None:
+            raise ValueError("primal='cholesky' needs the factor stack")
+        theta_new = _primal_closed_form(problem, chol, gamma0, theta_hat0,
+                                        nbr_hat, deg)
+    else:
+        theta_new = _primal_gradient(problem, inner_steps, inner_lr,
+                                     theta0, gamma0, theta_hat0, nbr_hat,
+                                     deg)
+
+    m = participation_mask(comm_state.key, k, N, plan, alive)
+    theta = _mask_rows(m, theta_new, theta0)
+
+    # broadcast: participants run the comm policy (censor/quantize/drop),
+    # non-participants are structurally silent (active mask) — zero bits
+    theta_hat, send, comm_state = chain.apply(theta, theta_hat0, k,
+                                              comm_state, active=m)
+
+    # delayed dual: participants integrate (21b) against the CURRENT
+    # broadcast values; sleepers' duals freeze until they next wake
+    nbr_new = table.nbr_sum(theta_hat, alive)
+    gamma = _mask_rows(
+        m, gamma0 + problem.rho * (deg[:, None] * theta_hat - nbr_new),
+        gamma0)
+
+    return COKEState(
+        theta=theta, theta_hat=theta_hat, gamma=gamma, step=k,
+        comms=state.comms + jnp.sum(send.astype(jnp.int32)),
+        comm=comm_state)
+
+
+# ---------------------------------------------------------------------------
+# One gossip round — the streaming family (online DKLA/COKE, QC-ODKLA)
+# ---------------------------------------------------------------------------
+
+def gossip_stream_step(
+    state: OnlineState,
+    feats: jax.Array,
+    labels: jax.Array,
+    table: NeighborTable,
+    schedule,
+    plan: GossipPlan,
+    *,
+    lam: float,
+    rho: float,
+    lr: float,
+    eta: float | None = None,
+) -> tuple[OnlineState, jax.Array]:
+    """The asynchronous `core.online.stream_step`: the round's sampled
+    participants take the streaming augmented-Lagrangian step on their
+    fresh minibatch and gossip; sleepers hold. Returns (state, pre-update
+    instantaneous MSE over the full stack — the stream keeps flowing
+    whether or not an agent woke up to learn from it)."""
+    chain = comm_mod.as_chain(schedule)
+    N = feats.shape[0]
+    k = state.step + 1
+    comm_state = chain.ensure_state(state.comm, N)
+
+    theta0, theta_hat0, gamma0 = state.theta, state.theta_hat, state.gamma
+    alive = plan.alive_at(k)
+    if plan.has_churn:
+        joined = alive & ~plan.alive_at(k - 1)
+        theta0, theta_hat0, gamma0 = _mask_rows(
+            joined, jax.tree.map(jnp.zeros_like, (theta0, theta_hat0,
+                                                  gamma0)),
+            (theta0, theta_hat0, gamma0))
+
+    deg = table.degrees(alive)
+    preds = jnp.einsum("nbd,nd->nb", feats, theta0)
+    inst_mse = jnp.mean((labels - preds) ** 2)
+
+    resid = preds - labels
+    g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
+    nbr_sum = table.nbr_sum(theta_hat0, alive)
+    g = (g_data + (2.0 * lam / N) * theta0
+         + 2.0 * rho * deg[:, None] * theta0
+         + gamma0
+         - rho * (deg[:, None] * theta_hat0 + nbr_sum))
+    if eta is None:
+        theta_new = theta0 - lr * g
+    else:
+        theta_new = theta0 - g / (eta + 2.0 * rho * deg[:, None])
+
+    m = participation_mask(comm_state.key, k, N, plan, alive)
+    theta = _mask_rows(m, theta_new, theta0)
+    theta_hat, send, comm_state = chain.apply(theta, theta_hat0, k,
+                                              comm_state, active=m)
+    nbr_new = table.nbr_sum(theta_hat, alive)
+    gamma = _mask_rows(
+        m, gamma0 + rho * (deg[:, None] * theta_hat - nbr_new), gamma0)
+
+    return OnlineState(theta, theta_hat, gamma, k,
+                       state.comms + jnp.sum(send.astype(jnp.int32)),
+                       comm_state), inst_mse
+
+
+# ---------------------------------------------------------------------------
+# ensure_state-style grow/shrink of agent-stacked state
+# ---------------------------------------------------------------------------
+
+def grow_agents(tree, old_n: int, new_n: int):
+    """Pad every agent-stacked leaf (leading axis == old_n) with zero rows
+    up to new_n agents; other leaves (scalars, PRNG keys) pass through.
+    The capacity-extension half of churn: existing agents' rows are
+    untouched bit-for-bit, new rows start cold (exactly how a joiner
+    initializes)."""
+    if new_n < old_n:
+        raise ValueError(f"grow_agents: {new_n} < current {old_n} "
+                         "(use take_agents to shrink)")
+
+    def pad(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == old_n:
+            z = jnp.zeros((new_n - old_n, *x.shape[1:]), x.dtype)
+            return jnp.concatenate([x, z], axis=0)
+        return x
+
+    return jax.tree.map(pad, tree)
+
+
+def take_agents(tree, old_n: int, index):
+    """Select (shrink / reorder) the agent rows of every agent-stacked
+    leaf (leading axis == old_n); other leaves pass through. Surviving
+    rows are bit-identical — the shrink half of churn."""
+    idx = jnp.asarray(index, jnp.int32)
+
+    def take(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == old_n:
+            return jnp.take(x, idx, axis=0)
+        return x
+
+    return jax.tree.map(take, tree)

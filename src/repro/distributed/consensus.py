@@ -183,12 +183,24 @@ def _agent_norms(diff_tree) -> jax.Array:
     return jnp.sqrt(sq)
 
 
+def _mask_rows(m: jax.Array, new, old):
+    """Row-select over agent-stacked pytrees: agent i's leaves take `new`
+    iff m[i] (gossip participation); scalar leaves pass through. With an
+    all-true mask this is bitwise `new` — the degenerate-gossip contract."""
+    def sel(a, b):
+        if a.ndim == 0:
+            return a
+        return jnp.where(m.reshape(m.shape + (1,) * (a.ndim - 1)), a, b)
+    return jax.tree.map(sel, new, old)
+
+
 # ---------------------------------------------------------------------------
 # One consensus update given per-agent local gradients
 # ---------------------------------------------------------------------------
 
 def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
-                     params, grads, state, comm=None, primal_solve=None):
+                     params, grads, state, comm=None, primal_solve=None,
+                     participate=None):
     """params/grads: agent-stacked pytrees (N, ...). Returns
     (new_params, new_state, metrics).
 
@@ -203,7 +215,16 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     inexact optimizer update (grads and the optimizer state are then
     untouched). This is how the matrix-free CG primal runs distributed:
     the solve sees only agent-local trees plus the already-permuted
-    neighbor sum, so it composes with any circulant topology."""
+    neighbor sum, so it composes with any circulant topology.
+
+    participate — optional (N,) bool gossip participation mask (ADMM
+    strategies only): non-participating agents hold params / optimizer
+    state / dual, are structurally silent in the broadcast (the chain's
+    `active` mask — they pay zero bits, receivers keep the stale value),
+    and integrate the dual drift delayed-but-correct on their next wake.
+    The permutes still execute every round (SPMD is bulk-synchronous at
+    the collective level; sleeping is value-masking, exactly like the
+    censor semantics). An all-true mask is bitwise `participate=None`."""
     step = state["step"] + 1
     metrics: dict[str, jax.Array] = {}
     if ccfg.offset_schedule and ccfg.strategy not in ("dkla", "coke",
@@ -211,6 +232,10 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
         raise ValueError(
             "offset_schedule (time-varying topology) is implemented for "
             f"the ADMM strategies, not {ccfg.strategy!r}")
+    if participate is not None and not ccfg.is_admm:
+        raise ValueError(
+            "gossip participation masking is implemented for the ADMM "
+            f"strategies (dkla/coke/coke_et), not {ccfg.strategy!r}")
 
     if ccfg.strategy == "cta":
         left, right = _ring_neighbors(params, ccfg.offsets)
@@ -283,12 +308,18 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
         )(g_aug, state["opt"], params)
         new_params = apply_updates(params, updates)
 
+    # gossip: sleepers hold their primal iterate and optimizer state
+    if participate is not None:
+        new_params = _mask_rows(participate, new_params, params)
+        opt = _mask_rows(participate, opt, state["opt"])
+
     # communication policy (censor (19)/(20) / quantize / drop) over the
     # flattened agent-stacked message, with stale-value fallback — shared
     # decision code with the simulator (cross-backend parity contract)
     comm_state = chain.ensure_state(state.get("comm"), num_agents)
     new_theta_hat, send, comm_state = comm_mod.apply_tree(
-        chain, new_params, theta_hat, step, comm_state)
+        chain, new_params, theta_hat, step, comm_state,
+        active=participate)
 
     # dual (21b) with theta_hat^k values — the step's ONLY neighbor fetch
     # on a static topology (2 permutes); cached for the next primal update
@@ -300,6 +331,10 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     new_gamma = jax.tree.map(
         lambda gm, th, l, r: gm + ccfg.rho * (deg * th - l - r),
         gamma, new_theta_hat, hat_l, hat_r)
+    # gossip: sleepers' duals freeze (delayed-but-correct — the next wake
+    # integrates (21b) against the then-current broadcast values)
+    if participate is not None:
+        new_gamma = _mask_rows(participate, new_gamma, gamma)
 
     metrics["send_frac"] = jnp.mean(send.astype(jnp.float32))
     metrics["bits"] = jnp.sum(comm_state.bits)
@@ -332,7 +367,7 @@ def init_stream_state(ccfg: ConsensusConfig, theta0: jax.Array,
 
 def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
                   lam: float, lr: float, eta: float | None = None,
-                  comm=None):
+                  comm=None, participate=None):
     """One streaming (online) round on the ring runtime — the
     `consensus_update`-style hook behind `fit_stream`'s spmd backend.
 
@@ -343,6 +378,13 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     `core.online.stream_step` — send decisions and bit accounting match
     across backends — with the dual-update neighbor fetch cached for the
     next primal (2 permutes per round on a static circulant).
+
+    participate — optional (N,) bool gossip participation mask, with the
+    same semantics as `consensus_update`: sleepers hold theta and gamma,
+    are structurally silent in the broadcast (zero bits), and catch up on
+    the dual drift at their next wake. The round's minibatch still flows
+    (the regret sample is measured on every agent's incoming data whether
+    or not it woke up to learn from it).
 
     Returns (new_params, new_state, metrics) with metrics carrying the
     pre-update instantaneous MSE (the regret sample) and cumulative bits.
@@ -372,16 +414,24 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     else:
         new_theta = theta - g / (eta + 2.0 * rho * deg)
 
+    # gossip: sleepers hold their primal iterate
+    if participate is not None:
+        new_theta = _mask_rows(participate, new_theta, theta)
+
     # policy-governed broadcast: identical decision code and CommState
     # evolution as the simulator path (chain.apply on the (N, D) message)
     comm_state = chain.ensure_state(state.get("comm"), N)
     new_theta_hat, send, comm_state = chain.apply(new_theta, theta_hat, k,
-                                                  comm_state)
+                                                  comm_state,
+                                                  active=participate)
 
     # dual with theta_hat^k — the round's ONLY neighbor fetch; cached for
     # the next primal update
     hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
     new_gamma = gamma + rho * (deg * new_theta_hat - hat_l - hat_r)
+    # gossip: sleepers' duals freeze (delayed-but-correct)
+    if participate is not None:
+        new_gamma = _mask_rows(participate, new_gamma, gamma)
 
     metrics = {"instant_mse": inst_mse,
                "bits": jnp.sum(comm_state.bits)}

@@ -80,6 +80,37 @@ def assert_results_match(ref, other, *, exact=(), theta_atol=None,
                                    err_msg=f"{err}:theta")
 
 
+def assert_gossip_degenerate(config, backends, *, problem=None,
+                             runner=None):
+    """The degenerate-gossip pin: `exec="gossip"` at participation=1.0
+    with zero staleness (no churn, no stragglers) must reproduce
+    `exec="sync"` BIT-FOR-BIT on every backend — every masked update
+    collapses to the synchronous step, the all-true participation mask is
+    drawn but selects everything, and non-participation bit savings are
+    vacuous. Use deg-2 (ring) graphs: there the gather-based neighbor sum
+    is bitwise equal to the dense adjacency matmul (two-term sums are
+    order-exact), which is what makes the pin exact rather than close.
+
+    runner — as in assert_fit_parity (None = fit; pass fit_stream-shaped
+             callables for the streaming family).
+    Returns {backend: (sync_result, gossip_result)}.
+    """
+    from repro.api import fit
+
+    if runner is None:
+        def runner(cfg, prob):
+            return fit(cfg, problem=prob)
+    out = {}
+    for b in backends:
+        sync = runner(config.replace(backend=b, exec="sync"), problem)
+        gsp = runner(config.replace(backend=b, exec="gossip",
+                                    participation=1.0), problem)
+        assert_results_match(sync, gsp, exact="*",
+                             err=f"gossip-degenerate:{b}")
+        out[b] = (sync, gsp)
+    return out
+
+
 def assert_fit_parity(config, backends, *, problem=None, runner=None,
                       exact=("comms",), theta_atol=1e-5, close=None):
     """Run `config` on every backend in `backends` and pin cross-backend

@@ -1,0 +1,305 @@
+"""The async gossip execution engine: degenerate-gossip bit-parity pins
+(simulator/spmd/fused, batch and streaming), CommState-keyed participation
+randomness (the PR-4 contract extended to scheduling), no-(N, N) jaxpr
+pinning at N=512, churn prefix-invariance, partial-participation
+convergence (the acceptance criterion), grow/shrink helpers, and the
+exec-axis validation surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_gossip_degenerate
+
+from repro.api import (Censor, Chain, ChurnSchedule, FitConfig, KRRConfig,
+                       TopologySchedule, build_problem, fit, fit_stream,
+                       sweep)
+from repro.core import admm
+from repro.core import gossip as G
+from repro.core.graph import ring
+
+KRR = KRRConfig(num_agents=8, samples_per_agent=12, num_features=16,
+                lam=1e-3, rho=0.1, seed=0)
+BATCH = FitConfig(krr=KRR, graph="ring", censor_v=0.3, censor_mu=0.97,
+                  num_iters=40)
+STREAM = FitConfig(algorithm="online_coke", krr=KRR, graph="ring",
+                   censor_v=0.3, censor_mu=0.99, num_iters=60,
+                   online_batch=6, online_lr=0.3)
+
+
+def _run_stream(cfg, _prob):
+    return fit_stream(cfg)
+
+
+# ---------------------------------------------------------------------------
+# The degenerate-gossip pin: participation=1.0 == sync, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["dkla", "coke"])
+def test_degenerate_gossip_batch(algorithm):
+    assert_gossip_degenerate(BATCH.replace(algorithm=algorithm),
+                             ("simulator", "spmd", "fused"))
+
+
+def test_degenerate_gossip_streaming():
+    assert_gossip_degenerate(STREAM, ("simulator", "spmd"),
+                             runner=_run_stream)
+
+
+def test_gossip_masks_agree_across_backends():
+    """At partial participation the simulator and the spmd ring must draw
+    the SAME participation schedule (both derive it from the same
+    CommState key), so comms/bits histories are bit-identical even though
+    trajectories only float-match."""
+    cfg = STREAM.replace(exec="gossip", participation=0.4)
+    sim = fit_stream(cfg.replace(backend="simulator"))
+    spmd = fit_stream(cfg.replace(backend="spmd"))
+    for k in ("comms", "bits"):
+        np.testing.assert_array_equal(np.asarray(sim.history[k]),
+                                      np.asarray(spmd.history[k]),
+                                      err_msg=f"gossip-mask:{k}")
+    np.testing.assert_allclose(np.asarray(sim.theta),
+                               np.asarray(spmd.theta), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Participation randomness rides the CommState PRNG fold-in (the bugfix)
+# ---------------------------------------------------------------------------
+
+def test_participation_masks_fold_the_chain_key():
+    """Masks are a pure function of (chain key, iteration, plan): same
+    inputs reproduce bit-identically, a different censor parameter (hence
+    a different chain key) or a different participation rate moves the
+    whole schedule — no static seed anywhere."""
+    plan = ChurnSchedule().plan(8, participation=0.5)
+    ka = Chain((Censor(0.3, 0.97),)).chain_key()
+    kb = Chain((Censor(0.5, 0.97),)).chain_key()
+
+    def masks(key, p):
+        return np.asarray([G.participation_mask(key, k, 8, p)
+                           for k in range(1, 40)])
+
+    assert np.array_equal(masks(ka, plan), masks(ka, plan))
+    assert not np.array_equal(masks(ka, plan), masks(kb, plan))
+    plan75 = ChurnSchedule().plan(8, participation=0.75)
+    assert not np.array_equal(masks(ka, plan), masks(ka, plan75))
+
+
+def test_sweep_cells_draw_independent_schedules():
+    """Two identical sweep cells must be bit-identical; a cell with a
+    different policy draws a different participation schedule (its chain
+    key folds every numeric policy parameter)."""
+    base = BATCH.replace(algorithm="coke", exec="gossip",
+                         participation=0.5, censor_v=None, censor_mu=None)
+    sw = sweep(base, [(0.3, 0.97), (0.3, 0.97), (0.5, 0.97)])
+    comms = np.asarray(sw.history["comms"])
+    np.testing.assert_array_equal(comms[0], comms[1],
+                                  err_msg="identical cells must agree")
+    assert not np.array_equal(comms[0], comms[2]), \
+        "distinct cells must draw distinct participation schedules"
+
+
+# ---------------------------------------------------------------------------
+# No dense (N, N) on the gossip hot path (N=512 fits, N=2000+ scales)
+# ---------------------------------------------------------------------------
+
+def _count_nn_uses(jaxpr, n: int) -> int:
+    """Number of equations CONSUMING an (n, n)-shaped value (recursively).
+    The outvar counter alone would miss a step that merely reads the
+    problem's adjacency invar without producing new (N, N) arrays."""
+    hits = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.invars:
+            shape = getattr(getattr(var, "aval", None), "shape", ())
+            if tuple(shape[-2:]) == (n, n):
+                hits += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            hits += _count_nn_uses(sub, n)
+    return hits
+
+
+def test_gossip_step_touches_no_dense_nn_at_512():
+    from benchmarks.big_d_bench import count_dd_arrays
+
+    n = 512
+    cfg = FitConfig(
+        krr=KRRConfig(num_agents=n, samples_per_agent=2, num_features=32,
+                      lam=1e-3, rho=0.1, seed=0),
+        graph="ring", algorithm="coke", censor_v=0.3, censor_mu=0.97)
+    problem = build_problem(cfg).problem
+    policy = cfg.resolved_comm
+    table = G.NeighborTable.from_adjacency(np.asarray(problem.adjacency))
+    plan = ChurnSchedule().plan(n, participation=0.25)
+    state0 = admm.init_state(problem, policy=policy)
+
+    def gossip_step(problem, state):
+        return G.gossip_coke_step(problem, policy, state, table, plan,
+                                  primal="cg")
+
+    jx = jax.make_jaxpr(gossip_step)(problem, state0).jaxpr
+    assert count_dd_arrays(jx, n) == 0, \
+        "gossip step materialized a dense (N, N) array"
+    assert _count_nn_uses(jx, n) == 0, \
+        "gossip step consumed the dense (N, N) adjacency"
+
+    # the sync simulator step, by contrast, runs through the adjacency
+    # matmul — the detector is live, not vacuously green
+    def sync_step(problem, state):
+        return admm.coke_step(problem, policy, state, None, primal="cg")
+
+    assert _count_nn_uses(
+        jax.make_jaxpr(sync_step)(problem, state0).jaxpr, n) > 0
+
+
+# ---------------------------------------------------------------------------
+# Churn: leave/rejoin mid-stream, survivors unperturbed up to the event
+# ---------------------------------------------------------------------------
+
+def test_churn_leave_rejoin_prefix_invariance():
+    """An agent leaving at round 20 and rejoining at 50 must not disturb
+    ANY agent's comms/bits/train-mse history before the leave event — the
+    participation draw excludes liveness from the key fold, so the
+    schedules coincide until the population actually changes."""
+    churn = ChurnSchedule(leave=((20, 3),), join=((50, 3),))
+    base = STREAM.replace(exec="gossip", participation=0.6, num_iters=80)
+    with_churn = fit_stream(base.replace(churn=churn))
+    without = fit_stream(base)
+    for k in ("comms", "bits"):
+        np.testing.assert_array_equal(
+            np.asarray(with_churn.history[k])[:19],
+            np.asarray(without.history[k])[:19],
+            err_msg=f"churn-prefix:{k}")
+    # trajectories coincide too — only to float tolerance, because the
+    # churn program carries the alive-mask ops (different XLA fusion)
+    np.testing.assert_allclose(
+        np.asarray(with_churn.history["train_mse"])[:19],
+        np.asarray(without.history["train_mse"])[:19],
+        rtol=1e-5, err_msg="churn-prefix:train_mse")
+    # the run still learns through the churn event
+    inst = np.asarray(with_churn.history["instant_mse"])
+    assert inst[-10:].mean() < inst[:10].mean()
+
+
+def test_straggler_slowdown_reduces_participation():
+    """A 4x-slower agent participates ~4x less often, hence pays fewer
+    bits; everyone else keeps the base rate."""
+    churn = ChurnSchedule(slowdown=((0, 4.0),))
+    res = fit_stream(STREAM.replace(exec="gossip", participation=0.8,
+                                    churn=churn))
+    bits = np.asarray(res.state.inner.comm.bits)
+    assert bits[0] < 0.6 * bits[1:].mean()
+
+
+def test_fixed_size_gossip_samples_exactly_k():
+    """gossip_size=k draws exactly k participants per round; with
+    censoring disabled every participant broadcasts, so the cumulative
+    comms counter advances by exactly k each round."""
+    res = fit_stream(STREAM.replace(exec="gossip", gossip_size=3,
+                                    censor_v=0.0))
+    comms = np.asarray(res.history["comms"])
+    assert comms[0] == 3
+    assert np.all(np.diff(comms) == 3)
+
+
+def test_grow_take_agents_roundtrip():
+    tree = {"theta": jnp.arange(24.0).reshape(8, 3),
+            "step": jnp.zeros((), jnp.int32)}
+    big = G.grow_agents(tree, 8, 12)
+    assert big["theta"].shape == (12, 3)
+    np.testing.assert_array_equal(np.asarray(big["theta"][8:]), 0.0)
+    back = G.take_agents(big, 12, jnp.arange(8))
+    np.testing.assert_array_equal(np.asarray(back["theta"]),
+                                  np.asarray(tree["theta"]))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: partial participation still converges (N=200, p=0.25)
+# ---------------------------------------------------------------------------
+
+def test_quarter_participation_converges_n200():
+    """gossip at participation=0.25 on N=200 reaches within 2x of the sync
+    final train-MSE. Gossip gets 4x the rounds — equal EXPECTED per-agent
+    work — which is the standard partial-participation accounting (each
+    tick updates ~N/4 agents)."""
+    cfg = FitConfig(
+        krr=KRRConfig(num_agents=200, samples_per_agent=5, num_features=32,
+                      lam=1e-3, rho=0.1, seed=0),
+        graph="ring", algorithm="coke", censor_v=0.3, censor_mu=0.97,
+        primal="cg", num_iters=100)
+    problem = build_problem(cfg).problem
+    sync = fit(cfg, problem=problem)
+    gsp = fit(cfg.replace(exec="gossip", participation=0.25,
+                          num_iters=400), problem=problem)
+    sync_mse = float(sync.history["train_mse"][-1])
+    gsp_mse = float(gsp.history["train_mse"][-1])
+    assert gsp_mse <= 2.0 * sync_mse, (gsp_mse, sync_mse)
+    # sampling holds per-round traffic to ~N/4: across 4x the rounds the
+    # total transmission count stays under 4x sync's censored total (and
+    # far under the 400 * 200 full-broadcast count)
+    assert float(gsp.history["comms"][-1]) < \
+        4.0 * float(sync.history["comms"][-1])
+    assert float(gsp.history["comms"][-1]) < 0.25 * 400 * 200
+
+
+# ---------------------------------------------------------------------------
+# Validation surface
+# ---------------------------------------------------------------------------
+
+def test_exec_axis_validation():
+    with pytest.raises(ValueError, match="exec"):
+        FitConfig(exec="async")
+    # gossip knobs are rejected under sync — a silently ignored
+    # participation rate would be a silently dropped experiment axis
+    with pytest.raises(ValueError, match="participation"):
+        FitConfig(participation=0.5)
+    with pytest.raises(ValueError, match="gossip_size"):
+        FitConfig(gossip_size=3)
+    with pytest.raises(ValueError, match="churn"):
+        FitConfig(churn=ChurnSchedule(leave=((5, 1),)))
+    with pytest.raises(ValueError, match="participation"):
+        FitConfig(exec="gossip", participation=0.0)
+    with pytest.raises(ValueError, match="gossip_size"):
+        FitConfig(exec="gossip", gossip_size=0)
+
+
+def test_exec_support_validation():
+    # CTA / the centralized oracle have no gossip semantics
+    for algorithm in ("cta", "ridge_oracle"):
+        with pytest.raises(ValueError, match="gossip"):
+            fit(BATCH.replace(algorithm=algorithm, exec="gossip",
+                              num_iters=2))
+    # time-varying topology and gossip both rewrite the neighbor view
+    adj = jnp.asarray(ring(8).adjacency, jnp.float32)
+    topo = TopologySchedule(jnp.stack([adj, adj]))
+    with pytest.raises(ValueError, match="topology"):
+        fit(BATCH.replace(algorithm="coke", exec="gossip",
+                          topology=topo, num_iters=2))
+    # churn needs the simulator's grow/shrink machinery
+    with pytest.raises(ValueError, match="churn"):
+        fit(BATCH.replace(algorithm="coke", exec="gossip", backend="spmd",
+                          churn=ChurnSchedule(leave=((5, 1),)),
+                          num_iters=2))
+    # a traced alive-mask makes degrees dynamic: no static Cholesky
+    with pytest.raises(ValueError, match="Cholesky"):
+        fit(BATCH.replace(algorithm="coke", exec="gossip",
+                          primal="cholesky",
+                          churn=ChurnSchedule(leave=((5, 1),)),
+                          num_iters=2))
+
+
+def test_churn_schedule_validation():
+    with pytest.raises(ValueError, match="agent"):
+        ChurnSchedule(leave=((5, 9),)).plan(8)
+    with pytest.raises(ValueError, match="iteration"):
+        ChurnSchedule(leave=((0, 1),)).plan(8)
+    with pytest.raises(ValueError, match="conflict"):
+        ChurnSchedule(leave=((5, 1),), join=((5, 1),)).plan(8)
+    with pytest.raises(ValueError, match="factor"):
+        ChurnSchedule(slowdown=((1, 0.5),)).plan(8)
+    with pytest.raises(ValueError, match="size"):
+        ChurnSchedule().plan(8, size=9)
+
+
+def test_exec_recorded_in_model_meta():
+    res = fit(BATCH.replace(algorithm="coke", exec="gossip",
+                            participation=0.5, num_iters=4))
+    assert res.to_model().meta["exec"] == "gossip"
