@@ -91,7 +91,10 @@ def run(models_resident=(100, 1000), *, D: int = 128, clients: int = 8,
         requests_per_client: int = 40, batch: int = 4,
         smoke: bool = False) -> dict:
     if smoke:
-        models_resident, clients, requests_per_client = (64,), 4, 10
+        # keep M=100 so the smoke rows (resident/M100, paged/M100) match
+        # the committed BENCH_many_model.json baseline BY NAME and the
+        # perf gate has rows to compare
+        models_resident, clients, requests_per_client = (100,), 4, 10
     base = _base_model(D)
     cfg = KernelServeConfig(max_delay_ms=1.0)
     out: dict[str, dict] = {}

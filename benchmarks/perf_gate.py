@@ -12,6 +12,12 @@ masquerade as a latency regression). The baseline's git sha + timestamp
 stamps (benchmarks/run.py) are echoed so a gate failure names the exact
 commit it regressed against.
 
+Committed baselines at the repo root: `BENCH_gossip.json` (agent-axis
+scaling), `BENCH_many_model.json` (multi-tenant serving), and
+`BENCH_personalize.json` (personalized vs consensus on clustered
+non-IID data) — CI runs the matching suite with --smoke and gates each
+fresh record against its baseline.
+
     python -m benchmarks.perf_gate BENCH_fresh.json BENCH_gossip.json
     PERF_GATE_FACTOR=2.0 python -m benchmarks.perf_gate fresh.json base.json
 """

@@ -1,0 +1,122 @@
+"""Personalized-vs-consensus on clustered non-IID data at EQUAL bits.
+
+The acceptance experiment for the personalization subsystem: N=20 agents
+over K=3 latent tasks (`data.synthetic.heterogeneous`), censor_v=0 so
+both arms transmit every iteration — cumulative bits are bit-identical
+by construction (asserted) and any per-agent test-MSE gap is purely the
+learned collaboration graph vs strict consensus. Two row families:
+
+    personalize/consensus/N20      static-ring COKE, consensus-averaged
+    personalize/personalized/N20   learned mutual-top-k graph, per-agent
+
+`us_per_call` is the best-of-N latency of the jitted per-iteration step
+(static coke_step vs refresh+dense-proximity step), so the perf gate
+compares like against like; derived fields carry mean per-agent test MSE,
+cumulative bits, and the graph-recovery score (intra-cluster edge-mass
+fraction vs the generator's ground-truth clusters). The run FAILS — no
+silent rows — unless personalized beats consensus and bits match.
+--smoke shrinks iteration counts but keeps the SAME N, so CI smoke rows
+match the committed BENCH_personalize.json baseline by name.
+
+    python -m benchmarks.personalize_bench            # full
+    python -m benchmarks.personalize_bench --smoke    # CI
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.gossip_bench import time_min
+from repro.api import (FitConfig, KRRConfig, Personalization, build_problem,
+                       fit)
+from repro.core import admm
+from repro.core import personalize as P
+
+NUM_AGENTS = 20
+NUM_TASKS = 3
+PZ = Personalization(k=5, every=5, warmup=30)
+
+KRR = KRRConfig(dataset="heterogeneous", num_agents=NUM_AGENTS,
+                samples_per_agent=100, num_tasks=NUM_TASKS,
+                num_features=64, lam=1e-3, rho=0.01,
+                censor_v=0.0, censor_mu=0.97, seed=0)
+
+
+def _per_agent_test_mse(built, theta) -> float:
+    pred = jnp.einsum("nsd,nd->ns", built.feats_test, theta)
+    return float(jnp.mean((built.labels_test - pred) ** 2))
+
+
+def _step_latencies(built, policy, timing_iters: int) -> tuple[float, float]:
+    """Best-of-N us/call of the static step vs the personalized live step
+    (graph-refresh cond + dense proximity update), both jitted."""
+    problem = built.problem
+    state0 = admm.init_state(problem, policy=policy)
+
+    def static_step(problem, state):
+        return admm.coke_step(problem, policy, state, None, primal="cg")
+
+    pz_state0 = P.PersonalizedState(
+        state0, jnp.asarray(problem.adjacency, jnp.float32))
+
+    def pz_step(problem, state):
+        A = P.maybe_update(PZ, state.inner.theta, state.inner.step + 1,
+                           state.adjacency)
+        inner = admm.coke_step(dataclasses.replace(problem, adjacency=A),
+                               policy, state.inner, None, primal="cg")
+        return P.PersonalizedState(inner, A)
+
+    us_static = time_min(jax.jit(static_step), problem, state0,
+                         iters=timing_iters)
+    us_pz = time_min(jax.jit(pz_step), problem, pz_state0,
+                     iters=timing_iters)
+    return us_static, us_pz
+
+
+def main(emit, smoke: bool = False) -> dict:
+    num_iters = 80 if smoke else 300
+    timing_iters = 20 if smoke else 50
+    cfg = FitConfig(krr=KRR, graph="ring", num_iters=num_iters, primal="cg")
+    built = build_problem(cfg)
+
+    cons = fit(cfg, problem=built.problem)
+    pers = fit(cfg.replace(personalization=PZ), problem=built.problem)
+
+    # the equal-bits contract: censor_v=0 means both arms broadcast every
+    # iteration — if this ever drifts the comparison is meaningless
+    if not np.array_equal(np.asarray(cons.history["bits"]),
+                          np.asarray(pers.history["bits"])):
+        raise AssertionError("bit trajectories differ — the equal-bits "
+                            "protocol is broken")
+
+    mse_cons = _per_agent_test_mse(built, jnp.broadcast_to(
+        jnp.mean(cons.theta, axis=0), cons.theta.shape))
+    mse_pers = _per_agent_test_mse(built, pers.theta)
+    recovery = float(P.graph_recovery(pers.learned_adjacency,
+                                      built.clusters))
+    if not mse_pers < mse_cons:
+        raise AssertionError(
+            f"personalized ({mse_pers:.5f}) did not beat consensus "
+            f"({mse_cons:.5f}) on mean per-agent test MSE")
+
+    bits = int(cons.history["bits"][-1])
+    us_static, us_pz = _step_latencies(built, cfg.resolved_comm,
+                                       timing_iters)
+    emit(f"personalize/consensus/N{NUM_AGENTS}", us_static,
+         f"per_agent_test_mse={mse_cons:.5f};bits={bits};"
+         f"iters={num_iters}")
+    emit(f"personalize/personalized/N{NUM_AGENTS}", us_pz,
+         f"per_agent_test_mse={mse_pers:.5f};bits={bits};"
+         f"iters={num_iters};recovery={recovery:.3f};"
+         f"k={PZ.k};every={PZ.every};warmup={PZ.warmup}")
+    return {"mse_consensus": mse_cons, "mse_personalized": mse_pers,
+            "recovery": recovery, "bits": bits}
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"),
+         smoke="--smoke" in sys.argv[1:])

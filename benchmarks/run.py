@@ -59,7 +59,8 @@ def main(argv: list[str] | None = None) -> None:
     from benchmarks import (big_d_bench, gossip_bench, kernel_bench,
                             many_model_bench, paper_comm_cost,
                             paper_convergence, paper_generalization,
-                            paper_online, roofline, serve_kernel_bench)
+                            paper_online, personalize_bench, roofline,
+                            serve_kernel_bench)
 
     suites = [
         ("paper_convergence", paper_convergence.main),   # Figs 1-2, Tab 1/2/4/5
@@ -71,6 +72,7 @@ def main(argv: list[str] | None = None) -> None:
         ("many_model", many_model_bench.main),           # multi-tenant store
         ("big_d", big_d_bench.main),                     # matrix-free CG sweep
         ("gossip", gossip_bench.main),                   # async agent-axis
+        ("personalize", personalize_bench.main),         # learned-graph vs consensus
         ("roofline", roofline.main),                     # from dry-run cache
     ]
     known = {name for name, _ in suites}

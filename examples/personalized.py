@@ -1,0 +1,93 @@
+"""Personalized decentralized learning over clustered non-IID data.
+
+Twenty agents draw from three latent tasks (`data.synthetic.
+heterogeneous`): each cluster's labels come from its own kernel mixture,
+so the strict-consensus COKE average fits none of them well. With
+`FitConfig(personalization=...)` the fit alternates ADMM steps with a
+graph-update step: after a warmup on the static ring, pairwise theta
+affinities are re-estimated every few iterations and rewritten as a
+sparse mutual-top-k adjacency, and the consensus constraint relaxes to a
+similarity-weighted proximity penalty — agents keep distinct models and
+collaborate only with the peers that look like them. Both arms transmit
+every iteration (censor_v=0), so cumulative bits are identical and the
+comparison is pure modeling.
+
+The asserts pin the headline results: personalized beats consensus on
+mean per-agent test MSE, and the learned graph's edge mass concentrates
+inside the ground-truth clusters. The finale publishes all 20 per-agent
+models into a `serve.ModelRegistry` — the personalization -> many-model
+serving hand-off.
+
+Run:  PYTHONPATH=src python examples/personalized.py
+"""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import (FitConfig, KRRConfig, Personalization, build_problem,
+                       fit)
+from repro.core.personalize import graph_recovery
+from repro.serve.registry import ModelRegistry
+
+N, K = 20, 3
+
+base = FitConfig(
+    krr=KRRConfig(dataset="heterogeneous", num_agents=N, num_tasks=K,
+                  samples_per_agent=100, num_features=64, lam=1e-3,
+                  rho=0.01, censor_v=0.0, seed=0),
+    graph="ring", algorithm="coke", primal="cg", num_iters=120)
+
+built = build_problem(base)
+consensus = fit(base, problem=built.problem)
+personalized = fit(
+    base.replace(personalization=Personalization(k=5, every=5, warmup=30)),
+    problem=built.problem)
+
+# equal bits by construction: censor_v=0 -> every agent broadcasts every
+# iteration in both arms
+assert np.array_equal(np.asarray(consensus.bits),
+                      np.asarray(personalized.bits))
+
+
+def per_agent_mse(theta):           # agent n scores its shard with theta_n
+    pred = jnp.einsum("nsd,nd->ns", built.feats_test, theta)
+    return np.asarray(jnp.mean((built.labels_test - pred) ** 2, axis=-1))
+
+
+mse_cons = per_agent_mse(jnp.broadcast_to(jnp.mean(consensus.theta, axis=0),
+                                          consensus.theta.shape))
+mse_pers = per_agent_mse(personalized.theta)
+
+print(f"{'agent':>6s}{'cluster':>9s}{'consensus':>12s}{'personalized':>14s}")
+for n in range(N):
+    print(f"{n:>6d}{int(built.clusters[n]):>9d}{mse_cons[n]:>12.5f}"
+          f"{mse_pers[n]:>14.5f}")
+print(f"\nmean per-agent test MSE: consensus {mse_cons.mean():.5f}, "
+      f"personalized {mse_pers.mean():.5f} "
+      f"({mse_cons.mean() / mse_pers.mean():.2f}x better at equal bits)")
+assert mse_pers.mean() < mse_cons.mean()
+
+# the learned graph found the latent clusters without being told them
+A = np.asarray(personalized.learned_adjacency)
+rec = float(graph_recovery(A, built.clusters))
+print(f"learned graph: {int((A > 0).sum()) // 2} edges, "
+      f"{100 * rec:.1f}% of edge mass intra-cluster "
+      f"(chance ~{100 * (N / K - 1) / (N - 1):.0f}%)")
+assert rec > 0.6
+
+# consensus averaging would refuse: per-agent models are the artifact
+try:
+    personalized.to_model()
+except ValueError as e:
+    print(f"\nto_model() on a personalized fit: ValueError ({str(e)[:42]}...)")
+
+with tempfile.TemporaryDirectory() as root:
+    registry = ModelRegistry(root)
+    published = personalized.publish_models(registry, prefix="agent",
+                                            rff_params=built.rff_params)
+    m7 = registry.load("agent-007")
+    x = np.asarray(built.x_test[7][:4])
+    print(f"published {len(published)} per-agent models; agent-007 v1 "
+          f"predicts {np.asarray(m7.predict(x)).round(3)}")
+    assert len(registry.models()) == N

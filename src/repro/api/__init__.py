@@ -33,6 +33,13 @@ serve stale values to neighbors), with `ChurnSchedule` scripting straggler
 slowdowns and agent join/leave on the simulator backend. participation=1.0
 reproduces exec="sync" (see repro.core.gossip).
 
+Personalization: `FitConfig(personalization=Personalization(k=3))` learns
+a sparse mutual-top-k collaboration graph from theta affinities alongside
+the ADMM/streaming iterations, so agents with heterogeneous (non-IID)
+data keep distinct models and collaborate only with their cluster (see
+repro.core.personalize; `result.to_models()` exports one KernelModel per
+agent, `data.synthetic.heterogeneous` generates the clustered workload).
+
 The training-loop integration (consensus data-parallelism for deep nets)
 is re-exported here too, so downstream scripts need only this surface.
 """
@@ -58,7 +65,10 @@ from repro.core.comm import (Censor, Chain, CommState,  # noqa: F401
 from repro.core.gossip import (ChurnSchedule, GossipPlan,  # noqa: F401
                                NeighborTable)
 from repro.core.graph import TopologySchedule  # noqa: F401
+from repro.core.personalize import (Personalization,  # noqa: F401
+                                    graph_recovery)
 from repro.core.ridge import rf_ridge  # noqa: F401
+from repro.data.synthetic import heterogeneous  # noqa: F401
 
 # consensus data-parallel training surface (deep-net workloads)
 from repro.distributed.consensus import ConsensusConfig  # noqa: F401

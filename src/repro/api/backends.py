@@ -25,10 +25,12 @@ import numpy as np
 
 from repro.api.config import FitConfig, SolveContext
 from repro.api.registry import Solver
-from repro.api.solvers import _stacked_metrics, _uncompressed_bits
+from repro.api.solvers import (_per_agent_mse, _stacked_metrics,
+                               _uncompressed_bits)
 from repro.core import admm
 from repro.core import gossip as gossip_mod
 from repro.core import losses as losses_mod
+from repro.core import personalize as personalize_mod
 from repro.core.admm import Problem
 from repro.core.graph import circulant
 from repro.distributed import consensus as cns
@@ -131,10 +133,12 @@ def _cg_primal_solve(problem: Problem, cg_tol: float, cg_maxiter: int):
 
 
 @partial(jax.jit, static_argnames=("ccfg", "opt_cfg", "num_iters",
-                                   "primal_mode", "cg_tol", "cg_maxiter"))
-def _consensus_chunk(problem, params, cstate, oracle, comm, gossip, ccfg,
-                     opt_cfg, num_iters, primal_mode=None, cg_tol=1e-8,
-                     cg_maxiter=64):
+                                   "primal_mode", "cg_tol", "cg_maxiter",
+                                   "pz_metric"))
+def _consensus_chunk(problem, params, cstate, oracle, comm, gossip,
+                     personalize, ccfg, opt_cfg, num_iters,
+                     primal_mode=None, cg_tol=1e-8, cg_maxiter=64,
+                     pz_metric=False):
     # the exact primal is built HERE, from the traced problem argument:
     # the static jit key stays the value-hashable (ccfg, opt_cfg, mode,
     # tol, maxiter) tuple, so repeated fits share one compilation
@@ -152,19 +156,32 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, gossip, ccfg,
         if gossip is not None:
             participate = gossip_mod.participation_mask(
                 cstate["comm"].key, cstate["step"] + 1, n_agents, gossip)
+        # personalization: refresh the learned graph if due (same cadence
+        # and affinity computation as the simulator — graphs match
+        # bit-for-bit), then run the round dense on it
+        adjacency = None
+        if personalize is not None:
+            adjacency = personalize_mod.maybe_update(
+                personalize, params["theta"], cstate["step"] + 1,
+                cstate["adjacency"])
         if primal_solve is None:
             grads = {"theta": _local_grads(problem, params["theta"])}
         else:  # exact primal: the local gradient is folded into the solve
             grads = {"theta": jnp.zeros_like(params["theta"])}
         params, cstate, extra = cns.consensus_update(
             ccfg, opt_cfg, params, grads, cstate, comm=comm,
-            primal_solve=primal_solve, participate=participate)
+            primal_solve=primal_solve, participate=participate,
+            adjacency=adjacency)
+        if personalize is not None:
+            cstate = dict(cstate, adjacency=adjacency)
         bits = extra.get("bits")
         if bits is None:  # policy-unaware strategy (cta): full precision
             bits = _uncompressed_bits(problem, cstate["comms"])
         m = _stacked_metrics(problem, params["theta"], cstate["comms"],
                              bits)
         m.update(extra)
+        if pz_metric:  # key-parity with the simulator personalized path
+            m["per_agent_mse"] = _per_agent_mse(problem, params["theta"])
         if oracle is not None:
             m["dist_to_oracle"] = jnp.max(jnp.linalg.norm(
                 params["theta"] - oracle, axis=-1))
@@ -177,8 +194,8 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, gossip, ccfg,
 
 @partial(jax.jit, static_argnames=("ccfg", "num_iters", "lam", "lr",
                                    "eta"))
-def _stream_chunk(stream, params, cstate, comm, gossip, ccfg, num_iters,
-                  lam, lr, eta):
+def _stream_chunk(stream, params, cstate, comm, gossip, personalize,
+                  ccfg, num_iters, lam, lr, eta):
     n_agents = stream.num_agents
 
     def body(carry, _):
@@ -187,10 +204,18 @@ def _stream_chunk(stream, params, cstate, comm, gossip, ccfg, num_iters,
         if gossip is not None:  # same draw as the simulator (see above)
             participate = gossip_mod.participation_mask(
                 cstate["comm"].key, cstate["step"] + 1, n_agents, gossip)
+        adjacency = None
+        if personalize is not None:  # same refresh as the simulator
+            adjacency = personalize_mod.maybe_update(
+                personalize, params["theta"], cstate["step"] + 1,
+                cstate["adjacency"])
         feats, labels = stream.round_batch(cstate["step"])
         params, cstate, extra = cns.stream_update(
             ccfg, params, cstate, feats, labels,
-            lam=lam, lr=lr, eta=eta, comm=comm, participate=participate)
+            lam=lam, lr=lr, eta=eta, comm=comm, participate=participate,
+            adjacency=adjacency)
+        if personalize is not None:
+            cstate = dict(cstate, adjacency=adjacency)
         # exactly the simulator's _stream_metrics keys — streaming
         # histories are key-identical across backends, so the conformance
         # harness can compare any pair with exact="*"
@@ -209,7 +234,9 @@ def stream_consensus_runner(config: FitConfig, solver: Solver, stream,
     """-> (carry0, chunk_fn, theta_fn) for fit_stream's spmd backend: the
     ring runtime's `stream_update` (collective-permute neighbor exchange,
     shared `core.comm` decision code) over the StreamProblem's rounds.
-    Requires the circulant graph family, like the batch consensus path."""
+    Requires the circulant graph family, like the batch consensus path —
+    personalized runs included: their warmup phase executes the exact
+    ring-permute program before the learned dense graph takes over."""
     offsets = config.graph_offsets
     _validate_topology(stream, offsets)
 
@@ -230,14 +257,18 @@ def stream_consensus_runner(config: FitConfig, solver: Solver, stream,
             jnp.asarray(theta0, stream.feats.dtype), (N, D))
     params = {"theta": theta}
     cstate = cns.init_stream_state(ccfg, theta, comm=chain)
+    pz_live = ctx.personalization is not None and not ctx.pz_warmup
+    if pz_live:
+        cstate["adjacency"] = jnp.asarray(stream.adjacency, jnp.float32)
+    personalize = ctx.personalization if pz_live else None
 
     gplan = ctx.gossip if ctx.exec == "gossip" else None
 
     def chunk_fn(carry, n):
         params, cstate = carry
         return _stream_chunk(stream, params, cstate, chain, gplan,
-                             ccfg=ccfg, num_iters=n, lam=stream.lam,
-                             lr=ctx.online_lr, eta=eta)
+                             personalize, ccfg=ccfg, num_iters=n,
+                             lam=stream.lam, lr=ctx.online_lr, eta=eta)
 
     return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]
 
@@ -301,14 +332,26 @@ def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
         params = shard_features(params, mesh, N)
         cstate = shard_features(cstate, mesh, N)
 
+    # personalized live phase: the learned (N, N) graph rides in the
+    # carry, added after the feature-dim placement above (it has no
+    # feature dim to shard). The warmup phase runs the exact static
+    # program — no adjacency in the carry, no graph machinery traced.
+    pz_live = ctx.personalization is not None and not ctx.pz_warmup
+    if pz_live:
+        cstate["adjacency"] = jnp.asarray(problem.adjacency, jnp.float32)
+    personalize = ctx.personalization if pz_live else None
+    pz_metric = ctx.personalization is not None
+
     gplan = ctx.gossip if ctx.exec == "gossip" else None
 
     def chunk_fn(carry, n):
         params, cstate = carry
         return _consensus_chunk(problem, params, cstate, oracle, chain,
-                                gplan, ccfg=ccfg, opt_cfg=opt_cfg,
-                                num_iters=n, primal_mode=primal_mode,
+                                gplan, personalize, ccfg=ccfg,
+                                opt_cfg=opt_cfg, num_iters=n,
+                                primal_mode=primal_mode,
                                 cg_tol=ctx.cg_tol,
-                                cg_maxiter=ctx.cg_maxiter)
+                                cg_maxiter=ctx.cg_maxiter,
+                                pz_metric=pz_metric)
 
     return (params, cstate), chunk_fn, lambda carry: carry[0]["theta"]

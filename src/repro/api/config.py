@@ -64,6 +64,14 @@ class FitConfig:
     # The spmd/fused backends require schedule.offsets (circulant lowering).
     topology: TopologySchedule | None = None
 
+    # personalization — the learned-collaboration-graph axis (a
+    # core.personalize.Personalization): the fit alternates solver steps
+    # with a graph-update step that relearns a mutual top-k adjacency from
+    # theta affinities and relaxes strict consensus to a similarity-
+    # weighted proximity penalty (per-agent models over non-IID data).
+    # None = today's consensus path, bit-for-bit.
+    personalization: object | None = None
+
     num_iters: int | None = None     # None = krr.num_iters
 
     # primal update — the big-D axis:
@@ -152,6 +160,24 @@ class FitConfig:
                 raise ValueError(
                     "churn must be a repro.core.gossip.ChurnSchedule, got "
                     f"{type(self.churn).__name__}")
+        if self.personalization is not None:
+            from repro.core.personalize import Personalization
+            if not isinstance(self.personalization, Personalization):
+                raise ValueError(
+                    "personalization must be a repro.core.personalize."
+                    "Personalization, got "
+                    f"{type(self.personalization).__name__}")
+            if self.topology is not None:
+                raise ValueError(
+                    "personalization learns its own collaboration graph; "
+                    "it does not compose with a scripted "
+                    "FitConfig.topology schedule — drop one of them")
+            if self.churn is not None:
+                raise ValueError(
+                    "personalization does not compose with churn: a "
+                    "learned graph over a changing population is "
+                    "ill-defined (joiners restart at theta = 0, hijacking "
+                    "the affinity ranking) — drop one of them")
         if self.comm is not None:
             if self.censor_v is not None or self.censor_mu is not None:
                 raise ValueError(
@@ -197,10 +223,10 @@ class FitConfig:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("comm", "topology", "gossip"),
+         data_fields=("comm", "topology", "gossip", "personalization"),
          meta_fields=("primal", "inner_steps", "inner_lr", "cg_tol",
                       "cg_maxiter", "cta_lr", "online_lr", "online_batch",
-                      "qc_eta", "exec"))
+                      "qc_eta", "exec", "pz_warmup"))
 @dataclasses.dataclass(frozen=True)
 class SolveContext:
     """The solver-facing slice of a FitConfig, shaped for jit: the comm
@@ -214,6 +240,9 @@ class SolveContext:
     # compiled gossip execution plan (core.gossip.GossipPlan) when
     # exec == "gossip"; None under synchronous execution
     gossip: object | None = None
+    # learned-collaboration-graph axis (core.personalize.Personalization);
+    # its numeric scale is array data, so scale sweeps share a compilation
+    personalization: object | None = None
     primal: str = "auto"
     inner_steps: int = 50
     inner_lr: float = 0.1
@@ -224,6 +253,13 @@ class SolveContext:
     online_batch: int = 16
     qc_eta: float | None = None
     exec: str = "sync"
+    # personalized warmup phase: the fit driver runs iterations
+    # 1..warmup as a SEPARATE compiled program that takes the exact
+    # static-consensus code path (no graph machinery in the scan body at
+    # all — only the extra per-agent metric readout), so the pre-refresh
+    # prefix is bit-identical to the consensus run BY CONSTRUCTION, not
+    # by XLA fusion luck. Static metadata: each phase is its own trace.
+    pz_warmup: bool = False
 
     @classmethod
     def from_config(cls, config: FitConfig,
@@ -243,9 +279,14 @@ class SolveContext:
             gossip = sched.plan(num_agents,
                                 participation=config.participation,
                                 size=config.gossip_size)
+        pz = config.personalization
+        if pz is not None:
+            pz = dataclasses.replace(
+                pz, scale=jnp.asarray(pz.scale, jnp.float32))
         return cls(comm=chain,
                    topology=config.topology,
                    gossip=gossip,
+                   personalization=pz,
                    primal=config.primal,
                    inner_steps=config.inner_steps,
                    inner_lr=config.inner_lr,
@@ -296,32 +337,32 @@ class FitResult:
                                              axis=-1)))
 
     def summary(self) -> dict[str, float]:
-        out = {k: float(v[-1]) for k, v in self.history.items()}
+        # vector-valued entries (e.g. the personalized per_agent_mse
+        # trajectory, (K, N)) summarize as the mean of their final row
+        out = {k: (float(jnp.mean(v[-1])) if jnp.ndim(v[-1]) else
+                   float(v[-1]))
+               for k, v in self.history.items()}
         out["num_iters"] = int(self.history["train_mse"].shape[0])
         return out
 
-    def to_model(self, rff_params=None, *, include_per_agent: bool = True):
-        """Package the fitted thetas with their RFF map into a deployable
-        `repro.api.KernelModel` (predict / evaluate / save / serve).
+    @property
+    def learned_adjacency(self) -> jax.Array | None:
+        """The final learned collaboration graph of a personalized fit
+        ((N, N) weighted, symmetric, zero-diagonal); None when the run
+        was not personalized."""
+        if self.config.personalization is None:
+            return None
+        A = getattr(self.state, "adjacency", None)  # PersonalizedState &c
+        if A is not None:
+            return A
+        if isinstance(self.state, tuple):   # spmd: (params, cstate) carry
+            return self.state[1]["adjacency"]
+        return None
 
-        rff_params — required when fit() was handed a pre-built problem
-                     (take it from `build_problem(...).rff_params`);
-                     inferred automatically when fit() built the problem.
-        include_per_agent — keep the (N, D) per-agent stack alongside the
-                     consensus average (needed for the paper's per-agent
-                     test protocol; drop it for a minimal serving artifact).
-        """
-        from repro.api.model import KernelModel  # local: avoid import cycle
-
-        params = self.rff_params if rff_params is None else rff_params
-        if params is None:
-            raise ValueError(
-                "this FitResult has no RFF parameters (fit() was given a "
-                "pre-built problem); pass them explicitly: "
-                "result.to_model(built.rff_params)")
+    def _model_meta(self) -> dict:
         krr = self.config.krr
         v, mu = self.config.resolved_censor
-        meta = {
+        return {
             "algorithm": self.config.algorithm,
             "backend": self.config.backend,
             "exec": self.config.exec,
@@ -337,8 +378,72 @@ class FitResult:
             "graph_offsets": list(self.config.graph_offsets),
             "graph_p": krr.graph_p,
         }
+
+    def _resolved_rff(self, rff_params):
+        params = self.rff_params if rff_params is None else rff_params
+        if params is None:
+            raise ValueError(
+                "this FitResult has no RFF parameters (fit() was given a "
+                "pre-built problem); pass them explicitly: "
+                "result.to_model(built.rff_params)")
+        return params
+
+    def to_model(self, rff_params=None, *, include_per_agent: bool = True):
+        """Package the fitted thetas with their RFF map into a deployable
+        `repro.api.KernelModel` (predict / evaluate / save / serve).
+
+        rff_params — required when fit() was handed a pre-built problem
+                     (take it from `build_problem(...).rff_params`);
+                     inferred automatically when fit() built the problem.
+        include_per_agent — keep the (N, D) per-agent stack alongside the
+                     consensus average (needed for the paper's per-agent
+                     test protocol; drop it for a minimal serving artifact).
+        """
+        from repro.api.model import KernelModel  # local: avoid import cycle
+
+        if self.config.personalization is not None:
+            raise ValueError(
+                "this fit was personalized: its per-agent thetas were "
+                "never meant to agree, and consensus-averaging them "
+                "destroys the per-cluster models — use to_models() (one "
+                "KernelModel per agent) or index result.theta yourself")
+        params = self._resolved_rff(rff_params)
+        krr = self.config.krr
         return KernelModel(
             rff_params=params,
             theta=jnp.mean(self.theta, axis=0),
             thetas=self.theta if include_per_agent else None,
-            bandwidth=krr.bandwidth, kernel="gaussian", meta=meta)
+            bandwidth=krr.bandwidth, kernel="gaussian",
+            meta=self._model_meta())
+
+    def to_models(self, rff_params=None) -> list:
+        """One deployable `KernelModel` per agent — the personalized
+        serving path (also works on a consensus fit, where the N models
+        are near-identical). Model i predicts with theta_i alone; its
+        meta records the agent index and the personalization knobs."""
+        from repro.api.model import KernelModel  # local: avoid import cycle
+
+        params = self._resolved_rff(rff_params)
+        krr = self.config.krr
+        meta = self._model_meta()
+        pz = self.config.personalization
+        if pz is not None:
+            meta["personalization"] = {
+                "k": pz.k, "every": pz.every, "warmup": pz.warmup,
+                "affinity": pz.affinity, "scale": float(pz.scale)}
+        return [KernelModel(rff_params=params, theta=self.theta[i],
+                            thetas=None, bandwidth=krr.bandwidth,
+                            kernel="gaussian", meta={**meta, "agent": i})
+                for i in range(self.theta.shape[0])]
+
+    def publish_models(self, registry, *, prefix: str = "agent",
+                       rff_params=None) -> list[tuple[str, int]]:
+        """Publish every per-agent model into a `repro.serve.ModelRegistry`
+        as `{prefix}-{i:03d}` — the personalized fit -> many-model serving
+        hand-off (KernelServer pages them through its ThetaStore by id).
+        Returns the [(model_id, version), ...] it published."""
+        out = []
+        for i, model in enumerate(self.to_models(rff_params)):
+            model_id = f"{prefix}-{i:03d}"
+            out.append((model_id, registry.publish(model_id, model)))
+        return out

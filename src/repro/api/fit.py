@@ -17,6 +17,7 @@ num_iters) instead of retracing per float pair as the legacy
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Callable
 
@@ -27,6 +28,7 @@ from repro.api.backends import consensus_runner, stream_consensus_runner
 from repro.api.config import FitConfig, FitResult, SolveContext
 from repro.api.problems import StreamProblem, build_problem, build_stream
 from repro.api.registry import (Solver, ensure_exec_supported,
+                                ensure_personalization_supported,
                                 ensure_primal_supported,
                                 ensure_stream_supported, get_solver)
 from repro.core import ridge
@@ -88,6 +90,67 @@ def _chunked_scan(chunk_fn, carry, num_iters: int, chunk_size: int | None,
     return carry, jax.tree.map(lambda *xs: jnp.concatenate(xs), *hists)
 
 
+def _pz_enter_live(carry, adjacency):
+    """Attach the starting adjacency when a personalized fit crosses the
+    warmup -> live boundary: the live program's carry holds the learned
+    graph as loop state, the warmup program's carry does not."""
+    from repro.api.solvers import OnlineFitState
+    from repro.core.admm import COKEState
+    from repro.core.personalize import PersonalizedState
+
+    A0 = jnp.asarray(adjacency, jnp.float32)
+    if isinstance(carry, OnlineFitState):
+        return carry._replace(adjacency=A0)
+    if isinstance(carry, COKEState):
+        return PersonalizedState(carry, A0)
+    params, cstate = carry  # spmd/fused (params, cstate) carry
+    return params, dict(cstate, adjacency=A0)
+
+
+def _pz_phased_runner(ctx: SolveContext, make_runner, num_iters: int,
+                      adjacency):
+    """Two-phase personalized driver. Iterations 1..warmup run a SEPARATE
+    compiled program (ctx.pz_warmup=True) that takes the exact
+    static-consensus code path — no graph machinery in its trace — so the
+    warmup prefix is bit-identical to a personalization=None run by
+    construction rather than by XLA fusion luck (a lax.cond in the scan
+    body measurably perturbs float rounding). At the boundary the carry
+    gains the starting adjacency and the live program (graph refresh +
+    similarity-weighted proximity penalty) takes over."""
+    W = min(int(ctx.personalization.warmup), num_iters)
+    if W <= 0:
+        return make_runner(ctx)
+    ctx_warm = dataclasses.replace(ctx, pz_warmup=True)
+    carry0, chunk_warm, _ = make_runner(ctx_warm)
+    _, chunk_live, theta_fn = make_runner(ctx)
+    phase = {"done": 0, "live": False}
+
+    def chunk_fn(carry, n):
+        hists, left = [], n
+        while True:
+            if not phase["live"]:
+                m = min(left, W - phase["done"])
+                carry, h = chunk_warm(carry, m)
+                phase["done"] += m
+                left -= m
+                hists.append(h)
+                if phase["done"] >= W:
+                    carry = _pz_enter_live(carry, adjacency)
+                    phase["live"] = True
+                if left == 0:
+                    break
+            else:
+                carry, h = chunk_live(carry, left)
+                phase["done"] += left
+                hists.append(h)
+                break
+        if len(hists) == 1:
+            return carry, hists[0]
+        return carry, jax.tree.map(lambda *xs: jnp.concatenate(xs), *hists)
+
+    return carry0, chunk_fn, theta_fn
+
+
 def fit(config: FitConfig, problem: Problem | None = None, *,
         progress_cb: ProgressCb | None = None,
         oracle: jax.Array | None = None,
@@ -131,6 +194,7 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
             "topology schedule; drop FitConfig.topology or pick dkla/coke")
     ensure_primal_supported(config, solver)
     ensure_exec_supported(config, solver)
+    ensure_personalization_supported(config, solver)
     rff_params = None
     if problem is None:
         built = build_problem(config)
@@ -144,12 +208,19 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
             f"agents but the problem has {problem.num_agents}")
 
     ctx = SolveContext.from_config(config, num_agents=problem.num_agents)
-    if config.backend == "simulator":
-        carry0, chunk_fn, theta_fn = _simulator_runner(
-            config, solver, problem, ctx, oracle, mesh=mesh)
+
+    def make_runner(c: SolveContext):
+        if config.backend == "simulator":
+            return _simulator_runner(config, solver, problem, c, oracle,
+                                     mesh=mesh)
+        return consensus_runner(config, solver, problem, c, oracle,
+                                mesh=mesh)
+
+    if ctx.personalization is not None:
+        carry0, chunk_fn, theta_fn = _pz_phased_runner(
+            ctx, make_runner, config.resolved_iters, problem.adjacency)
     else:
-        carry0, chunk_fn, theta_fn = consensus_runner(
-            config, solver, problem, ctx, oracle, mesh=mesh)
+        carry0, chunk_fn, theta_fn = make_runner(ctx)
 
     carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
                                    config.chunk_size, progress_cb)
@@ -181,6 +252,7 @@ def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
     solver = get_solver(config.algorithm)
     ensure_stream_supported(config, solver)
     ensure_exec_supported(config, solver)
+    ensure_personalization_supported(config, solver)
     rff_params = None
     if stream is None:
         built = build_stream(config)
@@ -191,14 +263,20 @@ def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
             f"{stream.num_agents} agents")
 
     ctx = SolveContext.from_config(config, num_agents=stream.num_agents)
-    if config.backend == "simulator":
-        carry0, chunk_fn, theta_fn = _simulator_runner(
-            config, solver, stream, ctx, None)
-        if theta0 is not None:
-            carry0 = solver.warm_start(carry0, theta0)
+
+    def make_runner(c: SolveContext):
+        if config.backend == "simulator":
+            return _simulator_runner(config, solver, stream, c, None)
+        return stream_consensus_runner(config, solver, stream, c,
+                                       theta0=theta0)
+
+    if ctx.personalization is not None:
+        carry0, chunk_fn, theta_fn = _pz_phased_runner(
+            ctx, make_runner, config.resolved_iters, stream.adjacency)
     else:
-        carry0, chunk_fn, theta_fn = stream_consensus_runner(
-            config, solver, stream, ctx, theta0=theta0)
+        carry0, chunk_fn, theta_fn = make_runner(ctx)
+    if config.backend == "simulator" and theta0 is not None:
+        carry0 = solver.warm_start(carry0, theta0)
 
     carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
                                    config.chunk_size, progress_cb)

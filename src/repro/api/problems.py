@@ -19,8 +19,9 @@ from repro.configs.coke_krr import KRRConfig
 from repro.core import graph as graph_mod
 from repro.core import rff
 from repro.core.admm import Problem, make_problem
-from repro.data.synthetic import (StreamDataset, paper_synthetic,
-                                  stream_synthetic, uci_standin)
+from repro.data.synthetic import (StreamDataset, heterogeneous,
+                                  paper_synthetic, stream_synthetic,
+                                  uci_standin)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,10 @@ class BuiltProblem:
     # consumes — the model owns featurization at inference time
     x_test: jax.Array | None = None
     y_test: jax.Array | None = None
+    # ground-truth latent-task assignment (N,), only for clustered non-IID
+    # datasets — what personalize.graph_recovery scores learned graphs
+    # against
+    clusters: np.ndarray | None = None
 
 
 @partial(
@@ -158,6 +163,10 @@ def build_problem(config: FitConfig | KRRConfig,
         ds = paper_synthetic(num_agents=cfg.num_agents, samples_per_agent=n,
                              seed=cfg.seed)
         g = build_graph(config, cfg.num_agents, seed=cfg.seed)
+    elif cfg.dataset == "heterogeneous":
+        ds = heterogeneous(num_agents=cfg.num_agents, samples_per_agent=n,
+                           num_tasks=cfg.num_tasks, seed=cfg.seed)
+        g = build_graph(config, cfg.num_agents, seed=cfg.seed)
     else:
         ds = uci_standin(cfg.dataset, num_agents=cfg.num_agents,
                          subsample=n * cfg.num_agents)
@@ -172,4 +181,5 @@ def build_problem(config: FitConfig | KRRConfig,
     return BuiltProblem(
         problem=prob, graph=g, rff_params=p,
         feats_test=rff.featurize(p, x_test),
-        labels_test=y_test, x_test=x_test, y_test=y_test)
+        labels_test=y_test, x_test=x_test, y_test=y_test,
+        clusters=getattr(ds, "cluster", None))

@@ -137,6 +137,34 @@ def ensure_exec_supported(config, solver: Solver) -> None:
                 "primal='auto', 'cg' or 'gradient'")
 
 
+def ensure_personalization_supported(config, solver: Solver) -> None:
+    """The FitConfig.personalization admission checks, shared by fit(),
+    fit_stream() and sweep(): only the ADMM and streaming families have
+    the proximity-penalty update a learned weighted graph plugs into, the
+    fused kernel bakes the graph degree in statically, and the
+    prefactored Cholesky primal cannot follow time-varying learned
+    degrees. (Structural conflicts — topology schedules, churn — are
+    rejected by FitConfig.__post_init__ itself.)"""
+    if config.personalization is None:
+        return
+    if not getattr(solver, "personalization_aware", False):
+        raise ValueError(
+            f"solver {config.algorithm!r} has no consensus-penalty term "
+            "for a learned collaboration graph to reweight; pick the ADMM "
+            "(dkla/coke) or streaming (online_dkla/online_coke/qc_odkla) "
+            "families, or drop FitConfig.personalization")
+    if config.backend == "fused":
+        raise ValueError(
+            "the fused Pallas coke_update kernel bakes the graph degree "
+            "in as a static parameter; a learned graph is time-varying — "
+            "use backend='simulator' or 'spmd'")
+    if config.primal == "cholesky":
+        raise ValueError(
+            "a learned collaboration graph makes the degrees time-"
+            "varying; the prefactored Cholesky primal cannot follow them "
+            "— use primal='auto', 'cg' or 'gradient'")
+
+
 def ensure_stream_supported(config, solver: Solver) -> None:
     """The fit_stream() admission checks: only the streaming solvers take a
     StreamProblem, and only on the backends their online update is wired

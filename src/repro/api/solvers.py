@@ -19,9 +19,10 @@ import numpy as np
 from repro.api.config import SolveContext
 from repro.api.registry import register_solver
 from repro.core import admm, comm as comm_mod, cta, gossip as gossip_mod
-from repro.core import online, ridge
+from repro.core import online, personalize as personalize_mod, ridge
 from repro.core.admm import Problem
 from repro.core.graph import Graph, metropolis_weights
+from repro.core.personalize import PersonalizedState
 
 
 def _consensus_gap(theta: jax.Array) -> jax.Array:
@@ -51,6 +52,24 @@ def _uncompressed_bits(problem: Problem, comms: jax.Array) -> jax.Array:
         comm_mod.FP_BITS * problem.feature_dim)
 
 
+def _per_agent_mse(problem: Problem, theta: jax.Array) -> jax.Array:
+    """(N,) per-agent train MSE — the personalized-history metric (mean
+    over agents of the consensus `train_mse` only when thetas agree)."""
+    preds = jnp.einsum("ntd,nd->nt", problem.feats, theta)
+    return jnp.mean((problem.labels - preds) ** 2, axis=-1)
+
+
+def _pz_live(ctx: SolveContext) -> bool:
+    """Is the learned-graph machinery active in THIS compiled program?
+    The fit driver splits a personalized run into two programs: the
+    warmup phase (ctx.pz_warmup=True) takes the exact static-consensus
+    step path — only the per-agent metric readout differs — so the
+    pre-refresh prefix is bit-identical to the consensus trajectory by
+    construction; the live phase carries the learned adjacency and
+    refreshes it on cadence."""
+    return ctx.personalization is not None and not ctx.pz_warmup
+
+
 # ---------------------------------------------------------------------------
 # DKLA (Alg. 1) and COKE (Alg. 2): the ADMM family
 # ---------------------------------------------------------------------------
@@ -67,6 +86,10 @@ class _ADMMSolver:
     # participants step, sleepers hold, duals delayed-but-correct) —
     # exec="gossip" admits these solvers (core.gossip.gossip_coke_step)
     gossip_aware = True
+    # the consensus penalty rho sum_n ||theta_i - theta_hat_n||^2 accepts
+    # a learned weighted graph directly (deg_i becomes sum_j w_ij) —
+    # FitConfig.personalization admits these solvers
+    personalization_aware = True
 
     def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
         raise NotImplementedError
@@ -74,8 +97,11 @@ class _ADMMSolver:
     def prepare_host(self, problem: Problem, ctx: SolveContext):
         # gossip execution reads the graph through a padded neighbor-index
         # table (gathers, no dense (N, N) on the hot path) — built once,
-        # eagerly, from the host adjacency
-        if ctx.exec == "gossip":
+        # eagerly, from the host adjacency. The live personalized phase
+        # relearns its graph inside the scan, which a host-built static
+        # table cannot follow: the dense personalized steps need no aux
+        # (the warmup phase runs the static table path).
+        if ctx.exec == "gossip" and not _pz_live(ctx):
             return gossip_mod.NeighborTable.from_adjacency(
                 np.asarray(problem.adjacency))
         return None
@@ -83,14 +109,15 @@ class _ADMMSolver:
     def _primal_mode(self, problem: Problem, ctx: SolveContext) -> str:
         """The concrete primal update for this (problem, context) pair:
         Cholesky / CG across the big-D crossover, gradient for general
-        losses — see core.admm.resolve_primal. Under churn the graph
-        degrees are time-varying, so "auto" falls through to the matrix-
-        free CG solve (an explicit primal="cholesky" is rejected up front
-        by registry.ensure_exec_supported)."""
+        losses — see core.admm.resolve_primal. Under churn or a learned
+        collaboration graph the degrees are time-varying, so "auto" falls
+        through to the matrix-free CG solve (an explicit
+        primal="cholesky" is rejected up front by the registry checks)."""
         mode = admm.resolve_primal(ctx.primal, problem.feature_dim,
                                    problem.loss)
-        if (mode == "cholesky" and ctx.gossip is not None
-                and ctx.gossip.has_churn):
+        if mode == "cholesky" and (
+                ctx.personalization is not None
+                or (ctx.gossip is not None and ctx.gossip.has_churn)):
             mode = "cg"
         return mode
 
@@ -100,6 +127,8 @@ class _ADMMSolver:
         # the (18a) normal matrix depends on the per-graph degrees, so a
         # (M, N, D, D) stack is factored and coke_step gathers per k.
         # The cg / gradient primals are matrix-free: no aux at all.
+        if _pz_live(ctx):
+            return None     # matrix-free primal, graph lives in the state
         if ctx.exec == "gossip":
             chol = None
             if self._primal_mode(problem, ctx) == "cholesky":
@@ -114,10 +143,38 @@ class _ADMMSolver:
                 ctx.topology.adjacencies)
 
     def init_state(self, problem: Problem, ctx: SolveContext):
-        return admm.init_state(problem, policy=self._policy(ctx))
+        inner = admm.init_state(problem, policy=self._policy(ctx))
+        if _pz_live(ctx):
+            # the learned graph starts as the configured static one and
+            # rides in the carry so refreshes happen inside the scan
+            return PersonalizedState(
+                inner, jnp.asarray(problem.adjacency, jnp.float32))
+        return inner
 
     def step(self, problem: Problem, ctx: SolveContext, aux, state):
         mode = self._primal_mode(problem, ctx)
+        if _pz_live(ctx):
+            pz = ctx.personalization
+            if ctx.exec == "gossip":
+                return personalize_mod.gossip_coke_step_dense(
+                    problem, self._policy(ctx), pz, state, ctx.gossip,
+                    inner_steps=ctx.inner_steps, inner_lr=ctx.inner_lr,
+                    primal="cg" if mode == "cg" else "gradient",
+                    cg_tol=ctx.cg_tol, cg_maxiter=ctx.cg_maxiter)
+            # sync: refresh the graph if due, then delegate to the
+            # unmodified coke_step on it — before the first refresh this
+            # is bit-identical to the static-topology run (the
+            # prefix-invariance pin)
+            A = personalize_mod.maybe_update(
+                pz, state.inner.theta, state.inner.step + 1,
+                state.adjacency)
+            inner = admm.coke_step(
+                dataclasses.replace(problem, adjacency=A),
+                self._policy(ctx), state.inner, None,
+                ctx.inner_steps, ctx.inner_lr,
+                primal="cg" if mode == "cg" else "auto",
+                cg_tol=ctx.cg_tol, cg_maxiter=ctx.cg_maxiter)
+            return PersonalizedState(inner, A)
         if ctx.exec == "gossip":
             return gossip_mod.gossip_coke_step(
                 problem, self._policy(ctx), state, aux["table"], ctx.gossip,
@@ -132,10 +189,20 @@ class _ADMMSolver:
                               cg_tol=ctx.cg_tol, cg_maxiter=ctx.cg_maxiter)
 
     def metrics(self, problem: Problem, ctx: SolveContext, aux, state):
-        return _stacked_metrics(problem, state.theta, state.comms,
-                                jnp.sum(state.comm.bits))
+        # both personalized phases emit per_agent_mse (key parity across
+        # the warmup/live history concatenation); the warmup-phase state
+        # is a bare COKEState
+        inner = state.inner if isinstance(state, PersonalizedState) \
+            else state
+        m = _stacked_metrics(problem, inner.theta, inner.comms,
+                             jnp.sum(inner.comm.bits))
+        if ctx.personalization is not None:
+            m["per_agent_mse"] = _per_agent_mse(problem, inner.theta)
+        return m
 
     def theta_of(self, state) -> jax.Array:
+        if isinstance(state, PersonalizedState):
+            return state.inner.theta
         return state.theta
 
 
@@ -204,6 +271,9 @@ class CTASolver:
 class OnlineFitState(NamedTuple):
     inner: online.OnlineState
     inst_mse: jax.Array   # pre-update MSE on the round's incoming minibatch
+    # learned collaboration graph, carried only under personalization
+    # (None otherwise — a static pytree shape on every other path)
+    adjacency: jax.Array | None = None
 
 
 def _stream_metrics(theta: jax.Array, comms: jax.Array, bits: jax.Array,
@@ -235,6 +305,9 @@ class _OnlineSolver:
     # sampled participants take the minibatch step and gossip, sleepers
     # hold (core.gossip.gossip_stream_step)
     gossip_aware = True
+    # the streaming consensus penalty takes a learned weighted graph the
+    # same way the batch one does (deg_i = sum_j w_ij)
+    personalization_aware = True
 
     def _policy(self, ctx: SolveContext) -> comm_mod.Chain:
         raise NotImplementedError
@@ -244,7 +317,7 @@ class _OnlineSolver:
         return None
 
     def prepare_host(self, problem, ctx: SolveContext):
-        if ctx.exec == "gossip":
+        if ctx.exec == "gossip" and not _pz_live(ctx):
             return gossip_mod.NeighborTable.from_adjacency(
                 np.asarray(problem.adjacency))
         return None
@@ -256,7 +329,10 @@ class _OnlineSolver:
         N, D = problem.num_agents, problem.feature_dim
         inner = online.init_state(N, D, problem.feats.dtype,
                                   policy=self._policy(ctx))
-        return OnlineFitState(inner, jnp.zeros((), problem.feats.dtype))
+        A = None
+        if _pz_live(ctx):
+            A = jnp.asarray(problem.adjacency, jnp.float32)
+        return OnlineFitState(inner, jnp.zeros((), problem.feats.dtype), A)
 
     def warm_start(self, state: OnlineFitState, theta0) -> OnlineFitState:
         """Re-seed a fresh state from deployed parameters: theta AND the
@@ -282,6 +358,22 @@ class _OnlineSolver:
     def step(self, problem, ctx: SolveContext, aux,
              state: OnlineFitState):
         feats, labels = self._round_batch(problem, ctx, state.inner.step)
+        if _pz_live(ctx):
+            # refresh the learned graph if due, then take the round on it
+            A = personalize_mod.maybe_update(
+                ctx.personalization, state.inner.theta,
+                state.inner.step + 1, state.adjacency)
+            if ctx.exec == "gossip":
+                inner, inst = personalize_mod.gossip_stream_step_dense(
+                    state.inner, feats, labels, A, self._policy(ctx),
+                    ctx.gossip, lam=problem.lam, rho=problem.rho,
+                    lr=ctx.online_lr, eta=self._eta(ctx))
+            else:
+                inner, inst = online.stream_step(
+                    state.inner, feats, labels, A, self._policy(ctx),
+                    lam=problem.lam, rho=problem.rho,
+                    lr=ctx.online_lr, eta=self._eta(ctx))
+            return OnlineFitState(inner, inst, A)
         if ctx.exec == "gossip":
             inner, inst = gossip_mod.gossip_stream_step(
                 state.inner, feats, labels, aux, self._policy(ctx),
@@ -299,12 +391,17 @@ class _OnlineSolver:
         from repro.api.problems import StreamProblem  # local: avoid cycle
 
         if isinstance(problem, StreamProblem):
+            # stream histories stay scalar-per-round even under
+            # personalization: a stream has no fixed per-agent test set
+            # to score, and the regret sample is already per-round
             return _stream_metrics(state.inner.theta, state.inner.comms,
                                    jnp.sum(state.inner.comm.bits),
                                    state.inst_mse)
         m = _stacked_metrics(problem, state.inner.theta, state.inner.comms,
                              jnp.sum(state.inner.comm.bits))
         m["instant_mse"] = state.inst_mse
+        if ctx.personalization is not None:
+            m["per_agent_mse"] = _per_agent_mse(problem, state.inner.theta)
         return m
 
     def theta_of(self, state: OnlineFitState) -> jax.Array:

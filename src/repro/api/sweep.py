@@ -143,6 +143,12 @@ def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
     solver = get_solver(base.algorithm)
     ensure_primal_supported(base, solver)
     ensure_exec_supported(base, solver)
+    if base.personalization is not None:
+        raise ValueError(
+            "sweep() vmaps ONE compiled fit program over policy cells; the "
+            "personalized two-phase driver (separate warmup and live "
+            "programs with a carry handoff) does not fit that shape — run "
+            "personalized fits individually through fit()")
     rff_params = None
     if problem is None:
         built = build_problem(base)

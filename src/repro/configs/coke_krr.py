@@ -13,10 +13,12 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class KRRConfig:
     name: str = "coke-krr"
-    dataset: str = "synthetic"      # synthetic | toms_hardware | twitter |
+    dataset: str = "synthetic"      # synthetic | heterogeneous |
+                                    # toms_hardware | twitter |
                                     # twitter_large | energy | air_quality
     num_agents: int = 20
     samples_per_agent: int = 500
+    num_tasks: int = 3              # heterogeneous only: K latent tasks
     num_features: int = 100         # L random features
     bandwidth: float = 1.0          # training kernel bandwidth (Sec 5.3)
     lam: float = 5e-5               # regularization lambda

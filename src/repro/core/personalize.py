@@ -1,0 +1,318 @@
+"""Personalization: learned collaboration graphs + per-agent models.
+
+Full consensus on a human-chosen topology is exactly wrong when agents
+hold heterogeneous (non-IID) data — the regime Koppel et al. (arXiv
+1710.04062) describe as functions that only *partially* agree across a
+network. Following Dada (Zantedeschi et al., AISTATS 2020), this module
+alternates the existing DKLA/COKE/online ADMM steps with a graph-update
+step: pairwise affinities over the agent-stacked (N, D) thetas are
+sparsified to a mutual top-k collaboration graph whose *weights* rescale
+the consensus penalty — agents with similar models pull hard on each
+other, agents in different clusters decouple and keep distinct models.
+
+The machinery is deliberately thin: the learned adjacency threads into
+the SAME update equations every backend already runs (`deg_i = sum_j
+w_ij`, `nbr_sum = A @ theta_hat`, dual `gamma += rho (deg theta_hat -
+A theta_hat)`), so strict consensus (w_ij in {0, 1} on the configured
+graph) relaxes to a similarity-weighted proximity penalty with no new
+update rule. `personalization=None` leaves every code path untouched —
+bit-identical to the consensus trajectories (the conformance pin).
+
+Affinity computation is row-blocked (`lax.map` over (B, N) tiles): no
+full (N, N) affinity matrix is ever materialized — only the sparse
+top-k result, scattered into the dense adjacency the existing backends
+consume (the simulator's neighbor exchange is an adjacency matmul
+already).
+
+Graph-update cadence: iteration k refreshes the graph iff k > warmup
+and (k - warmup - 1) % every == 0 — the first refresh happens AT
+iteration warmup + 1, so iterations 1..warmup are bit-identical to the
+static-topology run (the prefix-invariance pin), and warmup >=
+num_iters never refreshes at all (bit-identical end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm as comm_mod
+from repro.core.admm import (COKEState, Problem, _primal_cg,
+                             _primal_gradient)
+from repro.core.gossip import GossipPlan, _mask_rows, participation_mask
+from repro.core.online import OnlineState
+
+AFFINITY_KINDS = ("rbf", "cosine")
+
+#: guard for zero distances / zero norms in the affinity kernels
+_EPS = 1e-12
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("scale",),
+         meta_fields=("k", "every", "warmup", "affinity"))
+@dataclasses.dataclass(frozen=True)
+class Personalization:
+    """The `FitConfig.personalization` axis: how and when the
+    collaboration graph is learned from the agent-stacked thetas.
+
+    k        — neighbors kept per agent (mutual top-k sparsification;
+               learned row degrees are <= k).
+    every    — graph-refresh period in iterations.
+    warmup   — iterations run on the configured static graph before the
+               first refresh (thetas start identical — let them separate
+               before inferring affinity from them).
+    affinity — "rbf": w_ij = exp(-||t_i - t_j||^2 / s_ij) ranked by
+               distance; "cosine": clipped cosine similarity.
+    scale    — rbf length scale. 0.0 (default) = local auto-scaling
+               (Zelnik-Manor & Perona): s_ij = sigma_i sigma_j with
+               sigma_i the distance to agent i's k-th neighbor — scale-
+               free, so it needs no tuning as thetas grow. scale > 0
+               fixes s_ij = 2 scale^2. Traced data: a scale sweep shares
+               one compiled fit loop.
+    """
+
+    k: int = 3
+    every: int = 10
+    warmup: int = 10
+    affinity: str = "rbf"
+    scale: float = 0.0
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"personalization needs k >= 1, got {self.k}")
+        if self.every < 1:
+            raise ValueError(
+                f"graph-refresh period must be >= 1, got {self.every}")
+        if self.warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {self.warmup}")
+        if self.affinity not in AFFINITY_KINDS:
+            raise ValueError(
+                f"unknown affinity {self.affinity!r}; choose from "
+                f"{AFFINITY_KINDS}")
+        if isinstance(self.scale, (int, float)) and self.scale < 0:
+            raise ValueError(
+                f"scale must be >= 0 (0 = local auto-scaling), got "
+                f"{self.scale}")
+
+
+class PersonalizedState(NamedTuple):
+    """The ADMM solver state plus the current learned adjacency — what a
+    personalized fit carries through the scan."""
+
+    inner: COKEState
+    adjacency: jax.Array   # (N, N) weighted, symmetric, zero-diagonal
+
+
+# ---------------------------------------------------------------------------
+# Learning the graph
+# ---------------------------------------------------------------------------
+
+def topk_neighbors(thetas: jax.Array, k: int, affinity: str = "rbf",
+                   scale=0.0, block: int = 128
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Each agent's k most-affine peers from the (N, D) theta stack.
+
+    Returns (idx, w): (N, k) int32 neighbor indices (self excluded,
+    best first) and (N, k) float32 affinity weights in [0, 1].
+
+    Scratch is one (B, N) distance tile at a time (`lax.map` over row
+    blocks) — the full (N, N) affinity matrix is never materialized,
+    so the graph update stays O(N^2 D / B) flops but O(B N) memory.
+    """
+    N, _ = thetas.shape
+    if not 1 <= k <= N - 1:
+        raise ValueError(
+            f"top-k needs 1 <= k <= N-1 (k={k}, N={N} agents)")
+    t = thetas.astype(jnp.float32)
+    sq = jnp.sum(t * t, axis=1)                      # (N,)
+    B = min(block, N)
+    num_blocks = -(-N // B)
+    col = jnp.arange(N)
+
+    def one_block(i0):
+        rows = jnp.minimum(i0 + jnp.arange(B), N - 1)
+        dots = t[rows] @ t.T                         # (B, N)
+        if affinity == "rbf":
+            d2 = jnp.maximum(sq[rows][:, None] + sq[None, :] - 2.0 * dots,
+                             0.0)
+            score = -d2
+            val = d2
+        else:
+            norms = jnp.sqrt(sq)
+            denom = jnp.maximum(norms[rows][:, None] * norms[None, :],
+                                _EPS)
+            cos = jnp.clip(dots / denom, 0.0, 1.0)
+            score = cos
+            val = cos
+        score = jnp.where(rows[:, None] == col[None, :], -jnp.inf, score)
+        top_score, top_idx = jax.lax.top_k(score, k)
+        return top_idx.astype(jnp.int32), jnp.take_along_axis(
+            val, top_idx, axis=1)
+
+    idx, val = jax.lax.map(one_block, jnp.arange(num_blocks) * B)
+    idx = idx.reshape(num_blocks * B, k)[:N]
+    val = val.reshape(num_blocks * B, k)[:N]
+
+    if affinity == "cosine":
+        return idx, val
+    # rbf: turn the ascending-d2 top-k into weights. Local auto-scaling
+    # (scale == 0): sigma_i^2 = d2 to the k-th neighbor, w_ij =
+    # exp(-d2_ij / (sigma_i sigma_j)); fixed scale > 0: w_ij =
+    # exp(-d2_ij / (2 scale^2)). jnp.where keeps `scale` traced data.
+    sig2 = val[:, -1]                                # (N,)
+    local = jnp.maximum(jnp.sqrt(sig2[:, None] * sig2[idx]), _EPS)
+    s = jnp.asarray(scale, jnp.float32)
+    denom = jnp.where(s > 0, jnp.maximum(2.0 * s * s, _EPS), local)
+    return idx, jnp.exp(-val / denom)
+
+
+def learned_adjacency(pz: Personalization, thetas: jax.Array) -> jax.Array:
+    """The mutual top-k collaboration graph as a dense weighted (N, N)
+    adjacency — symmetric, zero diagonal, row degrees <= pz.k (the
+    property-test contract): edge (i, j) survives only when i and j
+    BOTH rank each other top-k, with weight (w_ij + w_ji) / 2."""
+    idx, w = topk_neighbors(thetas, pz.k, pz.affinity, pz.scale)
+    N = thetas.shape[0]
+    rows = jnp.arange(N)[:, None]
+    directed = jnp.zeros((N, N), jnp.float32).at[rows, idx].set(w)
+    mutual = (directed > 0) & (directed.T > 0)
+    return jnp.where(mutual, 0.5 * (directed + directed.T), 0.0)
+
+
+def should_update(pz: Personalization, k) -> jax.Array:
+    """Traced bool: does iteration k (1-based) refresh the graph?"""
+    k = jnp.asarray(k, jnp.int32)
+    return (k > pz.warmup) & ((k - pz.warmup - 1) % pz.every == 0)
+
+
+def maybe_update(pz: Personalization, thetas: jax.Array, k,
+                 adjacency: jax.Array) -> jax.Array:
+    """The per-iteration graph step: relearn the adjacency from the
+    current thetas on refresh iterations, carry it unchanged otherwise
+    (one lax.cond — off-iterations pay nothing)."""
+    return jax.lax.cond(
+        should_update(pz, k),
+        lambda t: learned_adjacency(pz, t).astype(adjacency.dtype),
+        lambda t: adjacency, thetas)
+
+
+def graph_recovery(adjacency: jax.Array, clusters) -> jax.Array:
+    """Fraction of learned edge mass that is intra-cluster, in [0, 1] —
+    the graph-recovery score against ground-truth task labels (1.0 =
+    every learned edge connects same-task agents)."""
+    c = jnp.asarray(clusters)
+    same = c[:, None] == c[None, :]
+    total = jnp.sum(adjacency)
+    intra = jnp.sum(jnp.where(same, adjacency, 0.0))
+    return jnp.where(total > 0, intra / jnp.maximum(total, _EPS), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Personalized gossip steps (dense learned graph)
+#
+# The static-graph gossip path reads the topology through a host-built
+# NeighborTable — which cannot follow a graph relearned inside the scan.
+# These dense-masked steps mirror core.gossip's update structure exactly
+# (participation mask, structurally-silent broadcast, delayed duals) with
+# `A @ x` neighbor sums, so participation = 1.0 reproduces the
+# synchronous personalized step bit-for-bit (the degeneracy contract).
+# ---------------------------------------------------------------------------
+
+def gossip_coke_step_dense(
+    problem: Problem,
+    policy,
+    pz: Personalization,
+    state: PersonalizedState,
+    plan: GossipPlan,
+    inner_steps: int = 50,
+    inner_lr: float = 0.1,
+    primal: str = "cg",
+    cg_tol: float = 1e-8,
+    cg_maxiter: int = 64,
+) -> PersonalizedState:
+    """One asynchronous personalized ADMM iteration: refresh the learned
+    graph if due, then the sampled participants run the (21a) primal +
+    policy-governed broadcast + delayed (21b) dual on it."""
+    s = state.inner
+    k = s.step + 1
+    A = maybe_update(pz, s.theta, k, state.adjacency)
+    chain = comm_mod.as_chain(policy)
+    N = s.theta.shape[0]
+    comm_state = chain.ensure_state(s.comm, N)
+
+    deg = jnp.sum(A, axis=1)
+    nbr_hat = A @ s.theta_hat
+
+    if primal == "cg":
+        theta_new = _primal_cg(problem, s.gamma, s.theta_hat, nbr_hat,
+                               deg, theta0=s.theta, tol=cg_tol,
+                               maxiter=cg_maxiter)
+    else:
+        theta_new = _primal_gradient(problem, inner_steps, inner_lr,
+                                     s.theta, s.gamma, s.theta_hat,
+                                     nbr_hat, deg)
+
+    m = participation_mask(comm_state.key, k, N, plan)
+    theta = _mask_rows(m, theta_new, s.theta)
+    theta_hat, send, comm_state = chain.apply(theta, s.theta_hat, k,
+                                              comm_state, active=m)
+    gamma = _mask_rows(
+        m, s.gamma + problem.rho * (deg[:, None] * theta_hat
+                                    - A @ theta_hat), s.gamma)
+    inner = COKEState(
+        theta=theta, theta_hat=theta_hat, gamma=gamma, step=k,
+        comms=s.comms + jnp.sum(send.astype(jnp.int32)), comm=comm_state)
+    return PersonalizedState(inner, A)
+
+
+def gossip_stream_step_dense(
+    state: OnlineState,
+    feats: jax.Array,
+    labels: jax.Array,
+    adjacency: jax.Array,
+    schedule,
+    plan: GossipPlan,
+    *,
+    lam: float,
+    rho: float,
+    lr: float,
+    eta: float | None = None,
+) -> tuple[OnlineState, jax.Array]:
+    """The asynchronous streaming round on a (learned) dense graph —
+    `core.gossip.gossip_stream_step` with `A @ x` in place of the static
+    neighbor-table gathers. The caller owns the graph refresh (the
+    adjacency rides in the solver's fit state, not the OnlineState)."""
+    chain = comm_mod.as_chain(schedule)
+    N = feats.shape[0]
+    k = state.step + 1
+    comm_state = chain.ensure_state(state.comm, N)
+
+    deg = jnp.sum(adjacency, axis=1)
+    preds = jnp.einsum("nbd,nd->nb", feats, state.theta)
+    inst_mse = jnp.mean((labels - preds) ** 2)
+
+    resid = preds - labels
+    g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
+    nbr_sum = adjacency @ state.theta_hat
+    g = (g_data + (2.0 * lam / N) * state.theta
+         + 2.0 * rho * deg[:, None] * state.theta
+         + state.gamma
+         - rho * (deg[:, None] * state.theta_hat + nbr_sum))
+    if eta is None:
+        theta_new = state.theta - lr * g
+    else:
+        theta_new = state.theta - g / (eta + 2.0 * rho * deg[:, None])
+
+    m = participation_mask(comm_state.key, k, N, plan)
+    theta = _mask_rows(m, theta_new, state.theta)
+    theta_hat, send, comm_state = chain.apply(theta, state.theta_hat, k,
+                                              comm_state, active=m)
+    gamma = _mask_rows(
+        m, state.gamma + rho * (deg[:, None] * theta_hat
+                                - adjacency @ theta_hat), state.gamma)
+    return OnlineState(theta, theta_hat, gamma, k,
+                       state.comms + jnp.sum(send.astype(jnp.int32)),
+                       comm_state), inst_mse

@@ -198,9 +198,26 @@ def _mask_rows(m: jax.Array, new, old):
 # One consensus update given per-agent local gradients
 # ---------------------------------------------------------------------------
 
+def _degb(deg: jax.Array, x: jax.Array) -> jax.Array:
+    """Broadcast a (N,) weighted-degree vector against an agent-stacked
+    leaf (N, ...) — the dense-graph analogue of the scalar circulant
+    degree."""
+    return deg.reshape((deg.shape[0],) + (1,) * (x.ndim - 1))
+
+
+def _dense_neighbors(adjacency: jax.Array, tree):
+    """sum_n w_in x_n per agent: one (N, N) x (N, ...) contraction per
+    leaf — the dense-graph analogue of the circulant permute halves.
+    Matches the simulator's `A @ theta_hat` contraction bit-for-bit on
+    (N, D) leaves."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(adjacency, x.astype(jnp.float32), axes=1),
+        tree)
+
+
 def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
                      params, grads, state, comm=None, primal_solve=None,
-                     participate=None):
+                     participate=None, adjacency=None):
     """params/grads: agent-stacked pytrees (N, ...). Returns
     (new_params, new_state, metrics).
 
@@ -224,9 +241,17 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     and integrate the dual drift delayed-but-correct on their next wake.
     The permutes still execute every round (SPMD is bulk-synchronous at
     the collective level; sleeping is value-masking, exactly like the
-    censor semantics). An all-true mask is bitwise `participate=None`."""
+    censor semantics). An all-true mask is bitwise `participate=None`.
+
+    adjacency — optional (N, N) dense weighted graph (ADMM strategies
+    only): weighted degrees `sum_j w_ij` and per-leaf `A @ x` neighbor
+    sums replace the circulant permutes + cache. This is the learned-
+    collaboration-graph (personalization) hook: the graph may change per
+    iteration, so the cached fetch — which belongs to the previous
+    step's graph — is bypassed (and carried untouched)."""
     step = state["step"] + 1
     metrics: dict[str, jax.Array] = {}
+    dense = adjacency is not None
     if ccfg.offset_schedule and ccfg.strategy not in ("dkla", "coke",
                                                       "coke_et"):
         raise ValueError(
@@ -236,6 +261,20 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
         raise ValueError(
             "gossip participation masking is implemented for the ADMM "
             f"strategies (dkla/coke/coke_et), not {ccfg.strategy!r}")
+    if dense:
+        if not ccfg.is_admm:
+            raise ValueError(
+                "a dense (learned) adjacency is implemented for the ADMM "
+                f"strategies (dkla/coke/coke_et), not {ccfg.strategy!r}")
+        if ccfg.use_fused_kernel:
+            raise ValueError(
+                "the fused coke_update kernel bakes the graph degree in "
+                "as a static parameter; a dense adjacency requires "
+                "use_fused_kernel=False")
+        if ccfg.offset_schedule:
+            raise ValueError(
+                "offset_schedule and a dense adjacency are two competing "
+                "definitions of the step's graph; pass one or the other")
 
     if ccfg.strategy == "cta":
         left, right = _ring_neighbors(params, ccfg.offsets)
@@ -270,6 +309,10 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
         # the cached fetch belongs to the PREVIOUS step's graph — re-fetch
         # theta_hat^{k-1} neighbors under the graph active at step k
         left, right = _scheduled_neighbors(theta_hat, variants, graph_idx)
+    elif dense:
+        # learned weighted graph: (N,) degrees and matmul neighbor sums
+        deg = jnp.sum(adjacency, axis=1)
+        left = right = None
     else:
         deg = ccfg.degree
         # neighbors' theta_hat^{k-1}: served from the cache filled by the
@@ -281,9 +324,25 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     # Lagrangian gradient
     #   g_aug = g_local + 2 rho deg theta + gamma - rho (deg theta_hat + sum_n theta_hat_n)
     if primal_solve is not None:
-        nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
+        if dense:
+            nbr_sum = _dense_neighbors(adjacency, theta_hat)
+        else:
+            nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
         new_params = primal_solve(params, theta_hat, gamma, nbr_sum, deg)
         opt = state["opt"]
+    elif dense:
+        nbr_sum = _dense_neighbors(adjacency, theta_hat)
+        g_aug = jax.tree.map(
+            lambda g, p, th, gm, nb: (
+                g.astype(jnp.float32)
+                + 2.0 * ccfg.rho * _degb(deg, p) * p.astype(jnp.float32)
+                + gm
+                - ccfg.rho * (_degb(deg, th) * th + nb)),
+            grads, params, theta_hat, gamma, nbr_sum)
+        updates, opt = jax.vmap(
+            lambda g, s, p: opt_update(opt_cfg, g, s, p)
+        )(g_aug, state["opt"], params)
+        new_params = apply_updates(params, updates)
     elif ccfg.use_fused_kernel:
         from repro.kernels.coke_update.ops import coke_update_pytree
         nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
@@ -323,14 +382,23 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
 
     # dual (21b) with theta_hat^k values — the step's ONLY neighbor fetch
     # on a static topology (2 permutes); cached for the next primal update
-    if ccfg.offset_schedule:
-        hat_l, hat_r = _scheduled_neighbors(new_theta_hat, variants,
-                                            graph_idx)
+    if dense:
+        nbr_new = _dense_neighbors(adjacency, new_theta_hat)
+        new_gamma = jax.tree.map(
+            lambda gm, th, nb: gm + ccfg.rho * (_degb(deg, th) * th - nb),
+            gamma, new_theta_hat, nbr_new)
+        # the circulant cache is stale under a per-iteration graph — carry
+        # it untouched (structurally present, never read on this path)
+        hat_l, hat_r = state["nbr_left"], state["nbr_right"]
     else:
-        hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
-    new_gamma = jax.tree.map(
-        lambda gm, th, l, r: gm + ccfg.rho * (deg * th - l - r),
-        gamma, new_theta_hat, hat_l, hat_r)
+        if ccfg.offset_schedule:
+            hat_l, hat_r = _scheduled_neighbors(new_theta_hat, variants,
+                                                graph_idx)
+        else:
+            hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
+        new_gamma = jax.tree.map(
+            lambda gm, th, l, r: gm + ccfg.rho * (deg * th - l - r),
+            gamma, new_theta_hat, hat_l, hat_r)
     # gossip: sleepers' duals freeze (delayed-but-correct — the next wake
     # integrates (21b) against the then-current broadcast values)
     if participate is not None:
@@ -367,7 +435,7 @@ def init_stream_state(ccfg: ConsensusConfig, theta0: jax.Array,
 
 def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
                   lam: float, lr: float, eta: float | None = None,
-                  comm=None, participate=None):
+                  comm=None, participate=None, adjacency=None):
     """One streaming (online) round on the ring runtime — the
     `consensus_update`-style hook behind `fit_stream`'s spmd backend.
 
@@ -386,13 +454,19 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     (the regret sample is measured on every agent's incoming data whether
     or not it woke up to learn from it).
 
+    adjacency — optional (N, N) dense weighted graph (the learned-
+    collaboration-graph hook, same semantics as `consensus_update`):
+    weighted degrees and `A @ x` neighbor sums replace the circulant
+    permutes + cache; the expressions mirror the simulator's
+    `core.online.stream_step` bit-for-bit.
+
     Returns (new_params, new_state, metrics) with metrics carrying the
     pre-update instantaneous MSE (the regret sample) and cumulative bits.
     """
     theta = params["theta"]
     theta_hat, gamma = state["theta_hat"], state["gamma"]
     N = theta.shape[0]
-    deg = ccfg.degree           # static: circulant topologies only
+    dense = adjacency is not None
     rho = ccfg.rho
     chain = comm_mod.as_chain(comm)
     k = state["step"] + 1
@@ -401,10 +475,16 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     inst_mse = jnp.mean((labels - preds) ** 2)
 
     # streaming augmented-Lagrangian gradient — the simulator's nbr_sum
-    # (adjacency @ theta_hat) served from the cached permutes
+    # (adjacency @ theta_hat) served from the cached permutes, or computed
+    # dense under a learned graph
     resid = preds - labels
     g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
-    nbr_sum = state["nbr_left"] + state["nbr_right"]
+    if dense:
+        deg = jnp.sum(adjacency, axis=1)[:, None]   # (N, 1) weighted
+        nbr_sum = adjacency @ theta_hat
+    else:
+        deg = ccfg.degree       # static scalar: circulant topologies only
+        nbr_sum = state["nbr_left"] + state["nbr_right"]
     g = (g_data + (2.0 * lam / N) * theta
          + 2.0 * rho * deg * theta
          + gamma
@@ -426,9 +506,15 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
                                                   active=participate)
 
     # dual with theta_hat^k — the round's ONLY neighbor fetch; cached for
-    # the next primal update
-    hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
-    new_gamma = gamma + rho * (deg * new_theta_hat - hat_l - hat_r)
+    # the next primal update (dense: recomputed matmul, stale cache
+    # carried untouched)
+    if dense:
+        new_gamma = gamma + rho * (deg * new_theta_hat
+                                   - adjacency @ new_theta_hat)
+        hat_l, hat_r = state["nbr_left"], state["nbr_right"]
+    else:
+        hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
+        new_gamma = gamma + rho * (deg * new_theta_hat - hat_l - hat_r)
     # gossip: sleepers' duals freeze (delayed-but-correct)
     if participate is not None:
         new_gamma = _mask_rows(participate, new_gamma, gamma)

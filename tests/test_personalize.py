@@ -1,0 +1,302 @@
+"""The personalization subsystem: learned-graph invariants (property
+tests), the two-phase prefix-invariance pin (iterations before the first
+graph update are bit-identical to the static-topology run), cross-backend
+personalized parity, degenerate-gossip composition, the per-agent serving
+path (to_models / ckpt round-trip / registry publish), the clustered
+non-IID generator, and the validation surface."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import assert_gossip_degenerate
+from hypothesis_compat import given, hnp, settings, st
+
+from repro.api import (FitConfig, KernelModel, KRRConfig, Personalization,
+                       build_problem, fit, fit_stream, heterogeneous, sweep)
+from repro.core import personalize as P
+
+# small clustered workload shared by the fit-level tests; censor_v=0 means
+# every agent transmits every iteration (equal-bits across arms)
+KRR = KRRConfig(dataset="heterogeneous", num_agents=12, samples_per_agent=60,
+                num_tasks=3, num_features=32, lam=1e-3, rho=0.1,
+                censor_v=0.3, censor_mu=0.97, seed=0)
+BASE = FitConfig(krr=KRR, graph="ring", num_iters=40, primal="cg")
+PZ = Personalization(k=3, every=5, warmup=15)
+
+
+# ---------------------------------------------------------------------------
+# Learned-graph invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(thetas=hnp.arrays(np.float32, (9, 7),
+                         elements=st.floats(-5.0, 5.0, width=32)),
+       k=st.integers(1, 4),
+       affinity=st.sampled_from(("rbf", "cosine")),
+       scale=st.sampled_from((0.0, 0.5, 2.0)))
+def test_adjacency_invariants(thetas, k, affinity, scale):
+    """Any theta stack yields a symmetric, self-loop-free adjacency with
+    row degree <= k and weights in [0, 1]."""
+    pz = Personalization(k=k, affinity=affinity, scale=scale)
+    A = np.asarray(P.learned_adjacency(pz, jnp.asarray(thetas)))
+    np.testing.assert_array_equal(A, A.T, err_msg="not symmetric")
+    np.testing.assert_array_equal(np.diag(A), 0.0, err_msg="self loops")
+    assert int(np.max(np.sum(A > 0, axis=1))) <= k
+    assert float(A.min()) >= 0.0 and float(A.max()) <= 1.0 + 1e-6
+
+
+def test_topk_rejects_bad_k():
+    th = jnp.ones((6, 4))
+    with pytest.raises(ValueError):
+        P.topk_neighbors(th, 0)
+    with pytest.raises(ValueError):
+        P.topk_neighbors(th, 6)
+
+
+def test_clustered_thetas_recover_clusters():
+    """Well-separated per-cluster thetas produce a graph whose edge mass
+    is entirely intra-cluster (graph_recovery == 1)."""
+    rng = np.random.default_rng(0)
+    clusters = np.arange(12) % 3
+    centers = 10.0 * rng.normal(size=(3, 16))
+    thetas = centers[clusters] + 0.1 * rng.normal(size=(12, 16))
+    A = P.learned_adjacency(Personalization(k=3),
+                            jnp.asarray(thetas, jnp.float32))
+    assert float(P.graph_recovery(A, clusters)) == 1.0
+
+
+def test_update_cadence():
+    """First refresh lands at iteration warmup+1, then every `every`."""
+    pz = Personalization(k=2, every=5, warmup=10)
+    ks = [k for k in range(1, 31) if bool(P.should_update(pz, k))]
+    assert ks == [11, 16, 21, 26]
+
+
+# ---------------------------------------------------------------------------
+# The prefix-invariance pin (the two-phase driver's contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["simulator", "spmd"])
+def test_prefix_bit_identical_to_static(backend):
+    """A personalized run whose warmup covers every iteration IS the
+    static run, bit for bit: the warmup phase executes the literal
+    static-consensus program (same primal mode), not a cond-gated variant
+    of it."""
+    cfg = BASE.replace(backend=backend)
+    stat = fit(cfg)
+    warm = fit(cfg.replace(
+        personalization=Personalization(k=3, every=5, warmup=100)))
+    for k in stat.history:
+        np.testing.assert_array_equal(
+            np.asarray(stat.history[k]), np.asarray(warm.history[k]),
+            err_msg=f"{backend}:{k}")
+    np.testing.assert_array_equal(np.asarray(stat.theta),
+                                  np.asarray(warm.theta),
+                                  err_msg=f"{backend}:theta")
+    # the all-warmup run still reports the per-agent trajectory and ends
+    # holding the (never-refreshed) starting graph
+    assert "per_agent_mse" in warm.history
+    assert warm.learned_adjacency is not None
+    assert stat.learned_adjacency is None
+
+
+def test_refreshing_run_prefix_and_divergence():
+    """A run that DOES refresh matches the static run bit-for-bit up to
+    its warmup boundary and diverges after it."""
+    stat = fit(BASE)
+    pers = fit(BASE.replace(personalization=PZ))
+    w = PZ.warmup
+    mse_s = np.asarray(stat.history["train_mse"])
+    mse_p = np.asarray(pers.history["train_mse"])
+    np.testing.assert_array_equal(mse_p[:w], mse_s[:w])
+    assert float(np.max(np.abs(mse_p[w:] - mse_s[w:]))) > 0.0
+    A = np.asarray(pers.learned_adjacency)
+    np.testing.assert_array_equal(A, A.T)
+    np.testing.assert_array_equal(np.diag(A), 0.0)
+    assert int(np.max(np.sum(A > 0, axis=1))) <= PZ.k
+
+
+def test_chunked_crosses_phase_boundary():
+    """Chunked execution whose chunk edges straddle the warmup->live
+    handoff is bit-identical to the monolithic run."""
+    mono = fit(BASE.replace(personalization=PZ))
+    chunked = fit(BASE.replace(personalization=PZ, chunk_size=7))
+    for k in mono.history:
+        np.testing.assert_array_equal(np.asarray(mono.history[k]),
+                                      np.asarray(chunked.history[k]),
+                                      err_msg=k)
+    np.testing.assert_array_equal(np.asarray(mono.theta),
+                                  np.asarray(chunked.theta))
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend + gossip composition
+# ---------------------------------------------------------------------------
+
+def test_sim_spmd_personalized_parity():
+    """Simulator and spmd learn the SAME graph (exact support) and
+    float-close trajectories. Theta is pinned relatively: cg drift is
+    amplified through the refresh's discontinuous top-k, so the absolute
+    static tolerance does not transfer."""
+    sim = fit(BASE.replace(personalization=PZ))
+    spmd = fit(BASE.replace(personalization=PZ, backend="spmd"))
+    As, Ap = np.asarray(sim.learned_adjacency), \
+        np.asarray(spmd.learned_adjacency)
+    np.testing.assert_array_equal(As > 0, Ap > 0)
+    np.testing.assert_allclose(As, Ap, atol=1e-3)
+    d = float(jnp.max(jnp.abs(sim.theta - spmd.theta)))
+    assert d / float(jnp.max(jnp.abs(sim.theta))) < 1e-3
+    # a censor decision may flip under that drift — never by more than a
+    # round of transmissions
+    assert float(np.max(np.abs(
+        np.asarray(sim.history["comms"], np.int64)
+        - np.asarray(spmd.history["comms"], np.int64)))) <= KRR.num_agents
+
+
+def test_degenerate_gossip_personalized():
+    """participation=1.0 gossip == sync, bit-for-bit, WITH a live learned
+    graph — the dense masked step collapses to the dense sync step."""
+    assert_gossip_degenerate(BASE.replace(personalization=PZ),
+                             ("simulator", "spmd"))
+
+
+def test_streaming_personalized():
+    """fit_stream: same prefix pin, and the spmd stream path agrees."""
+    cfg = BASE.replace(algorithm="online_coke", num_iters=30,
+                       primal="auto", online_batch=6, online_lr=0.3,
+                       personalization=Personalization(k=2, every=4,
+                                                       warmup=10))
+    stat = fit_stream(cfg.replace(personalization=None))
+    sim = fit_stream(cfg)
+    pre = np.asarray(sim.history["instant_mse"][:10])
+    np.testing.assert_array_equal(
+        pre, np.asarray(stat.history["instant_mse"][:10]))
+    assert sim.learned_adjacency is not None
+    spmd = fit_stream(cfg.replace(backend="spmd"))
+    d = float(jnp.max(jnp.abs(sim.theta - spmd.theta)))
+    assert d / max(float(jnp.max(jnp.abs(sim.theta))), 1e-9) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Per-agent serving path
+# ---------------------------------------------------------------------------
+
+def test_to_model_raises_to_models_roundtrips(tmp_path):
+    res = fit(BASE.replace(personalization=PZ))
+    with pytest.raises(ValueError, match="personalized"):
+        res.to_model()
+    models = res.to_models()
+    assert len(models) == KRR.num_agents
+    for i, m in enumerate(models):
+        assert m.meta["agent"] == i
+        assert m.meta["personalization"]["k"] == PZ.k
+    # ckpt round-trip: agent 5's model predicts identically after reload
+    x = np.random.default_rng(3).uniform(size=(7, 5)).astype(np.float32)
+    path = str(tmp_path / "agent5")
+    models[5].save(path)
+    reloaded = KernelModel.load(path)
+    np.testing.assert_array_equal(np.asarray(models[5].predict(x)),
+                                  np.asarray(reloaded.predict(x)))
+    np.testing.assert_array_equal(np.asarray(models[5].theta),
+                                  np.asarray(reloaded.theta))
+
+
+def test_publish_models_into_registry(tmp_path):
+    from repro.serve.registry import ModelRegistry
+
+    res = fit(BASE.replace(personalization=PZ))
+    reg = ModelRegistry(str(tmp_path / "registry"))
+    published = res.publish_models(reg, prefix="pz")
+    assert [mid for mid, _ in published] == \
+        [f"pz-{i:03d}" for i in range(KRR.num_agents)]
+    got = reg.load("pz-004")
+    np.testing.assert_array_equal(np.asarray(got.theta),
+                                  np.asarray(res.theta[4]))
+    assert got.meta["agent"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Clustered non-IID generator + end-to-end personalization win
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_generator():
+    ds = heterogeneous(num_agents=9, num_tasks=3, samples_per_agent=40,
+                       seed=1)
+    assert ds.x.shape == (9, 28, 5) and ds.x_test.shape == (9, 12, 5)
+    np.testing.assert_array_equal(ds.cluster, np.arange(9) % 3)
+    assert ds.num_tasks == 3
+    assert float(ds.x.min()) >= 0.0 and float(ds.x.max()) <= 1.0
+    # same-cluster agents share a target function: their label
+    # distributions match far better across than between clusters
+    with pytest.raises(ValueError):
+        heterogeneous(num_agents=4, num_tasks=5)
+
+
+def test_built_problem_carries_clusters():
+    built = build_problem(BASE)
+    np.testing.assert_array_equal(built.clusters,
+                                  np.arange(KRR.num_agents) % 3)
+    assert build_problem(BASE.replace(
+        krr=dataclasses.replace(KRR, dataset="synthetic"))).clusters is None
+
+
+def test_personalized_beats_consensus_and_recovers_clusters():
+    """The acceptance experiment in miniature: on clustered non-IID data
+    the personalized fit beats full consensus on mean per-agent test MSE
+    at equal cumulative bits, and the learned graph is intra-cluster."""
+    # rho=0.01: the proximity coupling must be weak enough for per-cluster
+    # structure to emerge in theta space (rho=0.1 over-mixes the agents
+    # and the affinities see only noise)
+    cfg = BASE.replace(num_iters=120,
+                       krr=dataclasses.replace(KRR, censor_v=0.0,
+                                               rho=0.01))
+    built = build_problem(cfg)
+    cons = fit(cfg, problem=built.problem)
+    pers = fit(cfg.replace(personalization=Personalization(
+        k=3, every=5, warmup=20)), problem=built.problem)
+    # equal bits: censor_v=0 -> every agent transmits every iteration
+    np.testing.assert_array_equal(np.asarray(cons.history["bits"]),
+                                  np.asarray(pers.history["bits"]))
+
+    def per_agent_mse(theta):
+        pred = jnp.einsum("nsd,nd->ns", built.feats_test, theta)
+        return float(jnp.mean((built.labels_test - pred) ** 2))
+
+    mse_cons = per_agent_mse(jnp.broadcast_to(
+        jnp.mean(cons.theta, axis=0), cons.theta.shape))
+    mse_pers = per_agent_mse(pers.theta)
+    assert mse_pers < mse_cons, (mse_pers, mse_cons)
+    assert float(P.graph_recovery(pers.learned_adjacency,
+                                  built.clusters)) > 0.6
+
+
+# ---------------------------------------------------------------------------
+# Validation surface
+# ---------------------------------------------------------------------------
+
+def test_admission_errors():
+    with pytest.raises(ValueError, match="fused"):
+        fit(BASE.replace(personalization=PZ, backend="fused"))
+    with pytest.raises(ValueError, match="Cholesky"):
+        fit(BASE.replace(personalization=PZ, primal="cholesky"))
+    from repro.api import TopologySchedule
+    with pytest.raises(ValueError, match="personalization"):
+        BASE.replace(personalization=PZ,
+                     topology=TopologySchedule.circulant_cycle(
+                         KRR.num_agents, [(1,)]))
+    with pytest.raises(ValueError, match="solver"):
+        fit(BASE.replace(algorithm="cta", comm=None, personalization=PZ))
+    with pytest.raises(ValueError, match="sweep"):
+        sweep(BASE.replace(personalization=PZ), [(0.3, 0.97), (0.5, 0.95)])
+
+
+def test_personalization_config_validation():
+    with pytest.raises(ValueError):
+        Personalization(k=0)
+    with pytest.raises(ValueError):
+        Personalization(affinity="euclid")
+    with pytest.raises(ValueError):
+        Personalization(every=0)
+    with pytest.raises(ValueError):
+        Personalization(warmup=-1)
