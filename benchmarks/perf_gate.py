@@ -61,6 +61,47 @@ def gate(fresh: dict, baseline: dict, factor: float) -> list[str]:
     return failures
 
 
+def summary_table(fresh: dict, baseline: dict, factor: float,
+                  baseline_name: str) -> str:
+    """The gate comparison as a GitHub-flavored markdown table — what CI
+    appends to $GITHUB_STEP_SUMMARY so a reviewer reads the latency deltas
+    on the run page instead of scrolling raw logs."""
+    f_rows, b_rows = _rows(fresh), _rows(baseline)
+    lines = [
+        f"### perf gate: `{baseline_name}` "
+        f"(sha `{baseline.get('git_sha')}`, limit {factor:.2f}x)",
+        "",
+        "| row | baseline (us) | fresh (us) | ratio | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for name in sorted(f_rows.keys() & b_rows.keys()):
+        new, old = f_rows[name], b_rows[name]
+        ratio = new / old if old > 0 else float("inf")
+        status = "❌ FAIL" if ratio > factor else "✅ ok"
+        lines.append(f"| `{name}` | {old:.1f} | {new:.1f} "
+                     f"| {ratio:.2f}x | {status} |")
+    for name in sorted(f_rows.keys() - b_rows.keys()):
+        lines.append(f"| `{name}` | — | {f_rows[name]:.1f} | — "
+                     "| 🆕 not gated |")
+    for name in sorted(b_rows.keys() - f_rows.keys()):
+        lines.append(f"| `{name}` | {b_rows[name]:.1f} | — | — "
+                     "| gone, not gated |")
+    return "\n".join(lines) + "\n"
+
+
+def _write_step_summary(fresh: dict, baseline: dict, factor: float,
+                        baseline_path: str) -> None:
+    """Append the markdown comparison to $GITHUB_STEP_SUMMARY when CI set
+    it (each gated baseline appends its own section); no-op locally."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write(summary_table(fresh, baseline, factor,
+                              os.path.basename(baseline_path)))
+        f.write("\n")
+
+
 def main(argv: list[str] | None = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if len(argv) != 2:
@@ -76,6 +117,7 @@ def main(argv: list[str] | None = None) -> int:
           f"(sha={baseline.get('git_sha')}, "
           f"recorded={baseline.get('timestamp')})")
     failures = gate(fresh, baseline, factor)
+    _write_step_summary(fresh, baseline, factor, baseline_path)
     if failures:
         print("\nperf gate FAILED:")
         for f_ in failures:

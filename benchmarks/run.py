@@ -76,17 +76,23 @@ def main(argv: list[str] | None = None) -> None:
         ("roofline", roofline.main),                     # from dry-run cache
     ]
     known = {name for name, _ in suites}
-    selected = args.only_flag or args.only
+    selected = args.only_flag if args.only_flag is not None else args.only
     only = None
-    if selected:
+    if selected is not None:
         only = {s.strip() for s in selected.split(",") if s.strip()}
+        if not only:
+            # an empty/whitespace --only must not degrade into "run all":
+            # CI invocations build the suite list programmatically, and a
+            # silently-universal run burns the full benchmark budget
+            parser.error("--only selected no suites; "
+                         f"choose from {sorted(known)}")
         unknown = only - known
         if unknown:
             parser.error(f"unknown suite(s) {sorted(unknown)}; "
                          f"choose from {sorted(known)}")
 
     for name, fn in suites:
-        if only and name not in only:
+        if only is not None and name not in only:
             continue
         kwargs = {}
         if args.smoke and "smoke" in inspect.signature(fn).parameters:

@@ -151,11 +151,17 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, gossip,
         # gossip: the round's participation mask, drawn from the SAME
         # CommState key + iteration fold as the simulator path — both
         # backends sample identical wake-up schedules, so comms/bits
-        # histories agree exactly across backends
-        participate = None
+        # histories agree exactly across backends. Under churn, the same
+        # alive/joined masks as the simulator's table_view thread into
+        # the ring exchange (alive-weighted degrees + masked permutes).
+        participate = alive = joined = None
         if gossip is not None:
+            k = cstate["step"] + 1
+            if gossip.has_churn:
+                alive = gossip.alive_at(k)
+                joined = alive & ~gossip.alive_at(k - 1)
             participate = gossip_mod.participation_mask(
-                cstate["comm"].key, cstate["step"] + 1, n_agents, gossip)
+                cstate["comm"].key, k, n_agents, gossip, alive)
         # personalization: refresh the learned graph if due (same cadence
         # and affinity computation as the simulator — graphs match
         # bit-for-bit), then run the round dense on it
@@ -171,7 +177,7 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, gossip,
         params, cstate, extra = cns.consensus_update(
             ccfg, opt_cfg, params, grads, cstate, comm=comm,
             primal_solve=primal_solve, participate=participate,
-            adjacency=adjacency)
+            adjacency=adjacency, alive=alive, joined=joined)
         if personalize is not None:
             cstate = dict(cstate, adjacency=adjacency)
         bits = extra.get("bits")
@@ -200,10 +206,14 @@ def _stream_chunk(stream, params, cstate, comm, gossip, personalize,
 
     def body(carry, _):
         params, cstate = carry
-        participate = None
-        if gossip is not None:  # same draw as the simulator (see above)
+        participate = alive = joined = None
+        if gossip is not None:  # same draw/masks as the simulator
+            k = cstate["step"] + 1
+            if gossip.has_churn:
+                alive = gossip.alive_at(k)
+                joined = alive & ~gossip.alive_at(k - 1)
             participate = gossip_mod.participation_mask(
-                cstate["comm"].key, cstate["step"] + 1, n_agents, gossip)
+                cstate["comm"].key, k, n_agents, gossip, alive)
         adjacency = None
         if personalize is not None:  # same refresh as the simulator
             adjacency = personalize_mod.maybe_update(
@@ -213,7 +223,7 @@ def _stream_chunk(stream, params, cstate, comm, gossip, personalize,
         params, cstate, extra = cns.stream_update(
             ccfg, params, cstate, feats, labels,
             lam=lam, lr=lr, eta=eta, comm=comm, participate=participate,
-            adjacency=adjacency)
+            adjacency=adjacency, alive=alive, joined=joined)
         if personalize is not None:
             cstate = dict(cstate, adjacency=adjacency)
         # exactly the simulator's _stream_metrics keys — streaming

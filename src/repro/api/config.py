@@ -140,13 +140,7 @@ class FitConfig:
         if self.exec not in EXEC_MODES:
             raise ValueError(
                 f"unknown exec mode {self.exec!r}; choose from {EXEC_MODES}")
-        if self.exec == "sync":
-            if self.participation != 1.0 or self.gossip_size is not None \
-                    or self.churn is not None:
-                raise ValueError(
-                    "participation/gossip_size/churn are gossip-execution "
-                    "knobs; set exec='gossip' to use them")
-        else:
+        if self.exec == "gossip":
             if not 0.0 < self.participation <= 1.0:
                 raise ValueError(
                     f"participation must be in (0, 1], got "
@@ -167,23 +161,11 @@ class FitConfig:
                     "personalization must be a repro.core.personalize."
                     "Personalization, got "
                     f"{type(self.personalization).__name__}")
-            if self.topology is not None:
-                raise ValueError(
-                    "personalization learns its own collaboration graph; "
-                    "it does not compose with a scripted "
-                    "FitConfig.topology schedule — drop one of them")
-            if self.churn is not None:
-                raise ValueError(
-                    "personalization does not compose with churn: a "
-                    "learned graph over a changing population is "
-                    "ill-defined (joiners restart at theta = 0, hijacking "
-                    "the affinity ranking) — drop one of them")
+        # the cross-axis admission — one declarative table, shared with
+        # the drivers' solver-scoped checks and the README matrix
+        from repro.api.capabilities import check_config
+        check_config(self)
         if self.comm is not None:
-            if self.censor_v is not None or self.censor_mu is not None:
-                raise ValueError(
-                    "censor_v/censor_mu are the legacy spelling of "
-                    "comm=Chain([Censor(v, mu)]); pass one or the other, "
-                    "not both")
             comm_mod.as_chain(self.comm)  # fail fast on non-policies
 
     # ---- resolved knobs --------------------------------------------------

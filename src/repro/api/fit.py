@@ -25,12 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.backends import consensus_runner, stream_consensus_runner
+from repro.api.capabilities import check_fit, check_stream
 from repro.api.config import FitConfig, FitResult, SolveContext
 from repro.api.problems import StreamProblem, build_problem, build_stream
-from repro.api.registry import (Solver, ensure_exec_supported,
-                                ensure_personalization_supported,
-                                ensure_primal_supported,
-                                ensure_stream_supported, get_solver)
+from repro.api.registry import Solver, get_solver
 from repro.core import ridge
 from repro.core.admm import Problem
 
@@ -107,48 +105,73 @@ def _pz_enter_live(carry, adjacency):
     return params, dict(cstate, adjacency=A0)
 
 
-def _pz_phased_runner(ctx: SolveContext, make_runner, num_iters: int,
-                      adjacency):
-    """Two-phase personalized driver. Iterations 1..warmup run a SEPARATE
-    compiled program (ctx.pz_warmup=True) that takes the exact
-    static-consensus code path — no graph machinery in its trace — so the
-    warmup prefix is bit-identical to a personalization=None run by
-    construction rather than by XLA fusion luck (a lax.cond in the scan
-    body measurably perturbs float rounding). At the boundary the carry
-    gains the starting adjacency and the live program (graph refresh +
-    similarity-weighted proximity penalty) takes over."""
+def phase_plan(ctx: SolveContext, num_iters: int, adjacency):
+    """Decompose one fit into its phased program: a tuple of
+    (phase_ctx, num_iters, enter_fn) where enter_fn (None on the first
+    phase) transforms the carry at the phase boundary. Ordinary fits are
+    one phase; a personalized fit with warmup > 0 is the two-phase
+    warmup -> live program. The plan is the *data* both drivers share:
+    fit()/fit_stream() walk it through the chunked host loop, and
+    sweep()'s vmapped scan replays the same phases inside one compiled
+    program — which is what makes personalization-aware sweeps possible.
+
+    Iterations 1..warmup run a SEPARATE compiled program
+    (ctx.pz_warmup=True) that takes the exact static-consensus code path —
+    no graph machinery in its trace — so the warmup prefix is
+    bit-identical to a personalization=None run by construction rather
+    than by XLA fusion luck (a lax.cond in the scan body measurably
+    perturbs float rounding). A zero-length live phase (warmup >=
+    num_iters) still applies its carry transform, so the final state
+    carries the adjacency either way."""
+    if ctx.personalization is None:
+        return ((ctx, num_iters, None),)
     W = min(int(ctx.personalization.warmup), num_iters)
     if W <= 0:
-        return make_runner(ctx)
+        return ((ctx, num_iters, None),)
     ctx_warm = dataclasses.replace(ctx, pz_warmup=True)
-    carry0, chunk_warm, _ = make_runner(ctx_warm)
-    _, chunk_live, theta_fn = make_runner(ctx)
-    phase = {"done": 0, "live": False}
+    return ((ctx_warm, W, None),
+            (ctx, num_iters - W,
+             lambda carry: _pz_enter_live(carry, adjacency)))
+
+
+def _phased_runner(make_runner, plan):
+    """Drive a phase_plan through the chunked host loop: one runner per
+    phase, carries handed across boundaries through the plan's enter
+    transforms, histories concatenated (phase metrics share one key set —
+    the key-parity contract the personalized metrics keep)."""
+    if len(plan) == 1 and plan[0][2] is None:
+        return make_runner(plan[0][0])
+    runners = [make_runner(c) for c, _, _ in plan]
+    ends, total = [], 0
+    for _, n, _ in plan:
+        total += n
+        ends.append(total)
+    pos = {"done": 0, "phase": 0}
 
     def chunk_fn(carry, n):
         hists, left = [], n
         while True:
-            if not phase["live"]:
-                m = min(left, W - phase["done"])
-                carry, h = chunk_warm(carry, m)
-                phase["done"] += m
-                left -= m
-                hists.append(h)
-                if phase["done"] >= W:
-                    carry = _pz_enter_live(carry, adjacency)
-                    phase["live"] = True
-                if left == 0:
-                    break
-            else:
-                carry, h = chunk_live(carry, left)
-                phase["done"] += left
-                hists.append(h)
+            i = pos["phase"]
+            m = min(left, ends[i] - pos["done"])
+            carry, h = runners[i][1](carry, m)
+            pos["done"] += m
+            left -= m
+            hists.append(h)
+            # cross every boundary reached — including with 0 iterations
+            # left, so a final chunk still applies the carry transform
+            while (pos["phase"] < len(ends) - 1
+                   and pos["done"] >= ends[pos["phase"]]):
+                pos["phase"] += 1
+                enter = plan[pos["phase"]][2]
+                if enter is not None:
+                    carry = enter(carry)
+            if left == 0:
                 break
         if len(hists) == 1:
             return carry, hists[0]
         return carry, jax.tree.map(lambda *xs: jnp.concatenate(xs), *hists)
 
-    return carry0, chunk_fn, theta_fn
+    return runners[0][0], chunk_fn, runners[-1][2]
 
 
 def fit(config: FitConfig, problem: Problem | None = None, *,
@@ -178,23 +201,7 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
             "fit() drives batch problems; run a StreamProblem through "
             "fit_stream(config, stream=...)")
     solver = get_solver(config.algorithm)
-    if config.backend not in solver.backends:
-        raise ValueError(
-            f"solver {config.algorithm!r} supports backends "
-            f"{solver.backends}, not {config.backend!r}")
-    if config.comm is not None and not getattr(solver, "comm_aware", False):
-        raise ValueError(
-            f"solver {config.algorithm!r} does not thread a communication "
-            "policy (it transmits unconditionally); drop FitConfig.comm or "
-            "pick a comm-aware algorithm (dkla/coke/online_coke)")
-    if config.topology is not None and not getattr(solver, "topology_aware",
-                                                   False):
-        raise ValueError(
-            f"solver {config.algorithm!r} does not support a time-varying "
-            "topology schedule; drop FitConfig.topology or pick dkla/coke")
-    ensure_primal_supported(config, solver)
-    ensure_exec_supported(config, solver)
-    ensure_personalization_supported(config, solver)
+    check_fit(config, solver)
     rff_params = None
     if problem is None:
         built = build_problem(config)
@@ -216,11 +223,9 @@ def fit(config: FitConfig, problem: Problem | None = None, *,
         return consensus_runner(config, solver, problem, c, oracle,
                                 mesh=mesh)
 
-    if ctx.personalization is not None:
-        carry0, chunk_fn, theta_fn = _pz_phased_runner(
-            ctx, make_runner, config.resolved_iters, problem.adjacency)
-    else:
-        carry0, chunk_fn, theta_fn = make_runner(ctx)
+    carry0, chunk_fn, theta_fn = _phased_runner(
+        make_runner, phase_plan(ctx, config.resolved_iters,
+                                problem.adjacency))
 
     carry, history = _chunked_scan(chunk_fn, carry0, config.resolved_iters,
                                    config.chunk_size, progress_cb)
@@ -250,9 +255,7 @@ def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
     serve) whose RFF map is the stream's featurization.
     """
     solver = get_solver(config.algorithm)
-    ensure_stream_supported(config, solver)
-    ensure_exec_supported(config, solver)
-    ensure_personalization_supported(config, solver)
+    check_stream(config, solver)
     rff_params = None
     if stream is None:
         built = build_stream(config)
@@ -270,11 +273,9 @@ def fit_stream(config: FitConfig, stream: StreamProblem | None = None, *,
         return stream_consensus_runner(config, solver, stream, c,
                                        theta0=theta0)
 
-    if ctx.personalization is not None:
-        carry0, chunk_fn, theta_fn = _pz_phased_runner(
-            ctx, make_runner, config.resolved_iters, stream.adjacency)
-    else:
-        carry0, chunk_fn, theta_fn = make_runner(ctx)
+    carry0, chunk_fn, theta_fn = _phased_runner(
+        make_runner, phase_plan(ctx, config.resolved_iters,
+                                stream.adjacency))
     if config.backend == "simulator" and theta0 is not None:
         carry0 = solver.warm_start(carry0, theta0)
 

@@ -95,92 +95,7 @@ def list_solvers() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def ensure_primal_supported(config, solver: Solver) -> None:
-    """Reject forcing an exact (21a) solve on a solver that has no (21a)
-    primal subproblem — silently running a different update would be worse
-    than failing. Shared by fit() and sweep()."""
-    if config.primal in ("cholesky", "cg") and not getattr(
-            solver, "primal_aware", False):
-        raise ValueError(
-            f"solver {config.algorithm!r} has no (21a) primal subproblem "
-            f"for primal={config.primal!r} to solve; leave primal='auto' "
-            "or pick an ADMM solver (dkla/coke)")
-
-
-def ensure_exec_supported(config, solver: Solver) -> None:
-    """The exec="gossip" admission checks, shared by fit(), fit_stream()
-    and sweep(): only solvers with asynchronous update semantics
-    (gossip_aware — the ADMM and streaming families) can run under
-    sampled participation, gossip needs a static graph, and churn
-    (population dynamics) is implemented on the vectorized simulator with
-    a degree-tracking primal."""
-    if config.exec != "gossip":
-        return
-    if not getattr(solver, "gossip_aware", False):
-        raise ValueError(
-            f"solver {config.algorithm!r} has no gossip execution "
-            "semantics; use exec='sync' or pick the ADMM (dkla/coke) or "
-            "streaming (online_dkla/online_coke/qc_odkla) families")
-    if config.topology is not None:
-        raise ValueError(
-            "gossip execution samples participants on a static consensus "
-            "graph; drop FitConfig.topology or use exec='sync'")
-    if config.churn is not None:
-        if config.backend != "simulator":
-            raise ValueError(
-                "churn (agent join/leave, stragglers) is implemented on "
-                f"the vectorized simulator backend, not {config.backend!r}")
-        if config.primal == "cholesky":
-            raise ValueError(
-                "churn makes the graph degrees time-varying; the "
-                "prefactored Cholesky primal cannot follow them — use "
-                "primal='auto', 'cg' or 'gradient'")
-
-
-def ensure_personalization_supported(config, solver: Solver) -> None:
-    """The FitConfig.personalization admission checks, shared by fit(),
-    fit_stream() and sweep(): only the ADMM and streaming families have
-    the proximity-penalty update a learned weighted graph plugs into, the
-    fused kernel bakes the graph degree in statically, and the
-    prefactored Cholesky primal cannot follow time-varying learned
-    degrees. (Structural conflicts — topology schedules, churn — are
-    rejected by FitConfig.__post_init__ itself.)"""
-    if config.personalization is None:
-        return
-    if not getattr(solver, "personalization_aware", False):
-        raise ValueError(
-            f"solver {config.algorithm!r} has no consensus-penalty term "
-            "for a learned collaboration graph to reweight; pick the ADMM "
-            "(dkla/coke) or streaming (online_dkla/online_coke/qc_odkla) "
-            "families, or drop FitConfig.personalization")
-    if config.backend == "fused":
-        raise ValueError(
-            "the fused Pallas coke_update kernel bakes the graph degree "
-            "in as a static parameter; a learned graph is time-varying — "
-            "use backend='simulator' or 'spmd'")
-    if config.primal == "cholesky":
-        raise ValueError(
-            "a learned collaboration graph makes the degrees time-"
-            "varying; the prefactored Cholesky primal cannot follow them "
-            "— use primal='auto', 'cg' or 'gradient'")
-
-
-def ensure_stream_supported(config, solver: Solver) -> None:
-    """The fit_stream() admission checks: only the streaming solvers take a
-    StreamProblem, and only on the backends their online update is wired
-    for. Shared by fit_stream() and KernelModel.partial_fit()."""
-    if not getattr(solver, "streaming", False):
-        raise ValueError(
-            f"solver {config.algorithm!r} is a batch algorithm; fit_stream "
-            "drives the streaming family (online_dkla/online_coke/"
-            "qc_odkla) — use fit() instead")
-    stream_backends = getattr(solver, "stream_backends", ())
-    if config.backend not in stream_backends:
-        raise ValueError(
-            f"streaming solver {config.algorithm!r} supports backends "
-            f"{stream_backends}, not {config.backend!r}")
-    if config.topology is not None:
-        raise ValueError(
-            "the streaming solvers run on a static consensus graph; drop "
-            "FitConfig.topology or use the batch ADMM solvers")
-    ensure_primal_supported(config, solver)
+# The cross-axis admission rules (which solver × backend × exec × workload
+# combinations run, and the nearest alternative when one does not) live in
+# repro.api.capabilities as one declarative table; the drivers call its
+# check_fit / check_stream / check_sweep entry points directly.

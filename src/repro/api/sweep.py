@@ -28,28 +28,45 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.capabilities import check_sweep
 from repro.api.config import FitConfig, SolveContext
+from repro.api.fit import _pz_enter_live, phase_plan
 from repro.api.model import KernelModel
 from repro.api.problems import build_problem
-from repro.api.registry import (Solver, ensure_exec_supported,
-                                ensure_primal_supported, get_solver)
+from repro.api.registry import Solver, get_solver
 from repro.core import comm as comm_mod
 from repro.core.admm import Problem
 
 
-@partial(jax.jit, static_argnames=("solver", "num_iters"))
-def _sweep_scan(solver: Solver, problem: Problem, ctx: SolveContext,
-                host_aux, policies, num_iters: int):
+@partial(jax.jit, static_argnames=("solver", "lengths"))
+def _sweep_scan(solver: Solver, problem: Problem, ctxs, host_aux,
+                policies, lengths: tuple[int, ...]):
+    """One vmapped program over policy cells, phase-aware: each cell runs
+    the phases back to back inside its lane (for a personalized sweep:
+    the bit-exact warmup program, the carry handoff that attaches the
+    starting adjacency, then the live learned-graph program), so a whole
+    grid of phased fits is still ONE compiled scan. lengths is static —
+    phases are separate traces stitched in sequence; ctxs ride along as
+    traced data like the single ctx did."""
     def run_one(chain):
-        c = dataclasses.replace(ctx, comm=chain)
-        aux = solver.prepare_traced(problem, c, host_aux)
-        state0 = solver.init_state(problem, c)
+        state, hists = None, []
+        for i, (ctx, n) in enumerate(zip(ctxs, lengths)):
+            c = dataclasses.replace(ctx, comm=chain)
+            aux = solver.prepare_traced(problem, c, host_aux)
+            if state is None:
+                state = solver.init_state(problem, c)
+            elif i > 0:   # the warmup -> live boundary of phase_plan
+                state = _pz_enter_live(state, problem.adjacency)
 
-        def body(state, _):
-            state = solver.step(problem, c, aux, state)
-            return state, solver.metrics(problem, c, aux, state)
+            def body(state, _):
+                state = solver.step(problem, c, aux, state)
+                return state, solver.metrics(problem, c, aux, state)
 
-        return jax.lax.scan(body, state0, None, length=num_iters)
+            state, h = jax.lax.scan(body, state, None, length=n)
+            hists.append(h)
+        if len(hists) == 1:
+            return state, hists[0]
+        return state, jax.tree.map(lambda *xs: jnp.concatenate(xs), *hists)
 
     return jax.vmap(run_one)(policies)
 
@@ -141,14 +158,7 @@ def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
             f"{base.backend!r} cells individually through fit()")
 
     solver = get_solver(base.algorithm)
-    ensure_primal_supported(base, solver)
-    ensure_exec_supported(base, solver)
-    if base.personalization is not None:
-        raise ValueError(
-            "sweep() vmaps ONE compiled fit program over policy cells; the "
-            "personalized two-phase driver (separate warmup and live "
-            "programs with a carry handoff) does not fit that shape — run "
-            "personalized fits individually through fit()")
+    check_sweep(base, solver)
     rff_params = None
     if problem is None:
         built = build_problem(base)
@@ -161,8 +171,14 @@ def sweep(configs_or_base: FitConfig | Sequence[FitConfig],
     host_aux = solver.prepare_host(problem, ctx)
     policies = _stack_policies(cells)
 
-    states, history = _sweep_scan(solver, problem, ctx, host_aux, policies,
-                                  num_iters=base.resolved_iters)
+    # a personalized sweep replays fit()'s phased program per lane: the
+    # plan's (ctx, length) pairs become traced data + static scan lengths
+    plan = phase_plan(ctx, base.resolved_iters, problem.adjacency)
+    ctxs = tuple(c for c, _, _ in plan)
+    lengths = tuple(n for _, n, _ in plan)
+
+    states, history = _sweep_scan(solver, problem, ctxs, host_aux, policies,
+                                  lengths=lengths)
     thetas = jax.vmap(solver.theta_of)(states)          # (G, N, D)
     censors = jnp.asarray(
         [FitConfig(krr=base.krr, comm=c).resolved_censor for c in cells],

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import comm as comm_mod
 from repro.core import losses as losses_mod
+from repro.core import step as step_mod
 from repro.core.censor import CensorSchedule
 from repro.core.graph import Graph, TopologySchedule
 
@@ -263,6 +264,43 @@ def _primal_gradient(problem: Problem, inner_steps: int, inner_lr: float,
     return theta
 
 
+def _primal_stage(problem: Problem, primal: str, *, chol=None,
+                  inner_steps: int = 50, inner_lr: float = 0.1,
+                  cg_tol: float = 1e-8, cg_maxiter: int = 64,
+                  legacy_auto: bool = False):
+    """The (21a) primal update as a `core.step` stage, shared by the
+    synchronous, gossip, and personalized assemblies. With
+    `legacy_auto=True` the dispatch keeps `coke_step`'s historical
+    contract (closed form whenever a factor is in hand and the loss is
+    quadratic); otherwise the mode is explicit ("cg" / "cholesky" /
+    gradient). A per-iteration factor resolved by the exchange stage
+    (`GraphView.chol`, the topology-schedule path) overrides the static
+    one."""
+    def stage(k, g, theta0, theta_hat0, gamma0, nbr_hat):
+        c = chol if g.chol is None else g.chol
+        if primal == "cg":
+            if problem.loss != "quadratic":
+                raise ValueError(
+                    "primal='cg' solves the quadratic-loss normal "
+                    f"equations; loss={problem.loss!r} needs "
+                    "primal='gradient'")
+            theta = _primal_cg(problem, gamma0, theta_hat0, nbr_hat,
+                               g.deg, theta0=theta0, tol=cg_tol,
+                               maxiter=cg_maxiter)
+        elif (problem.loss == "quadratic" and c is not None
+              if legacy_auto else primal == "cholesky"):
+            if c is None:
+                raise ValueError("primal='cholesky' needs the factor stack")
+            theta = _primal_closed_form(problem, c, gamma0, theta_hat0,
+                                        nbr_hat, g.deg)
+        else:
+            theta = _primal_gradient(problem, inner_steps, inner_lr,
+                                     theta0, gamma0, theta_hat0, nbr_hat,
+                                     g.deg)
+        return theta, {}
+    return stage
+
+
 # --------------------------------------------------------------------------
 # One COKE / DKLA iteration
 # --------------------------------------------------------------------------
@@ -298,50 +336,26 @@ def coke_step(
     (no `chol` needed — nothing (D, D) is ever built), warm-started from
     the previous iterate with `cg_tol`/`cg_maxiter` as stops.
     """
-    chain = comm_mod.as_chain(policy)
-    k = state.step + 1
     if topology is None:
-        A, deg = problem.adjacency, problem.degrees
+        def exchange(s, k):
+            return step_mod.dense_view(problem.adjacency,
+                                       deg=problem.degrees)
     else:
-        A = topology.at(k)
-        deg = jnp.sum(A, axis=1)
-        if chol is not None and chol.ndim == 4:
-            chol = chol[topology.index(k)]
-    nbr_sum_hat = A @ state.theta_hat  # (N, D): sum_n theta_hat_n
+        def exchange(s, k):
+            c = chol
+            if c is not None and c.ndim == 4:
+                c = c[topology.index(k)]
+            return step_mod.dense_view(topology.at(k), chol=c)
 
-    if primal == "cg":
-        if problem.loss != "quadratic":
-            raise ValueError(
-                "primal='cg' solves the quadratic-loss normal equations; "
-                f"loss={problem.loss!r} needs primal='gradient'")
-        theta = _primal_cg(problem, state.gamma, state.theta_hat,
-                           nbr_sum_hat, deg, theta0=state.theta,
-                           tol=cg_tol, maxiter=cg_maxiter)
-    elif problem.loss == "quadratic" and chol is not None:
-        theta = _primal_closed_form(problem, chol, state.gamma,
-                                    state.theta_hat, nbr_sum_hat, deg)
-    else:
-        theta = _primal_gradient(problem, inner_steps, inner_lr,
-                                 state.theta, state.gamma,
-                                 state.theta_hat, nbr_sum_hat, deg)
-
-    # communication: censor / quantize / drop, with stale-value fallback
-    comm_state = chain.ensure_state(state.comm, theta.shape[0])
-    theta_hat, send, comm_state = chain.apply(theta, state.theta_hat, k,
-                                              comm_state)
-
-    # Dual update (21b): gamma_i += rho * sum_n (theta_hat_i - theta_hat_n)
-    gamma = state.gamma + problem.rho * (deg[:, None] * theta_hat
-                                         - A @ theta_hat)
-
-    return COKEState(
-        theta=theta,
-        theta_hat=theta_hat,
-        gamma=gamma,
-        step=k,
-        comms=state.comms + jnp.sum(send.astype(jnp.int32)),
-        comm=comm_state,
-    )
+    program = step_mod.StepProgram(
+        chain=comm_mod.as_chain(policy), rho=problem.rho,
+        exchange=exchange,
+        primal=_primal_stage(problem, primal, chol=chol,
+                             inner_steps=inner_steps, inner_lr=inner_lr,
+                             cg_tol=cg_tol, cg_maxiter=cg_maxiter,
+                             legacy_auto=True))
+    new_state, _ = step_mod.run_step(program, state)
+    return new_state
 
 
 class RunResult(NamedTuple):

@@ -56,16 +56,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm as comm_mod
-from repro.core.admm import (COKEState, Problem, _primal_cg,
-                             _primal_closed_form, _primal_gradient)
+from repro.core import step as step_mod
+from repro.core.admm import COKEState, Problem, _primal_stage
 from repro.core.online import OnlineState
+from repro.core.step import (PARTICIPATION_TAG,  # noqa: F401 (re-export)
+                             _mask_rows, participation_mask)
 
 EXEC_MODES = ("sync", "gossip")
-
-#: fold-in tag separating the participation stream from the comm stages'
-#: per-round streams (Chain.apply folds the stage *index*; this sentinel
-#: can never collide with one)
-PARTICIPATION_TAG = np.uint32(0x9E3779B1)
 
 
 # ---------------------------------------------------------------------------
@@ -251,44 +248,6 @@ class GossipPlan:
         return self.alive_stack[i]
 
 
-def participation_mask(key: jax.Array, k, num_agents: int,
-                       plan: GossipPlan,
-                       alive: jax.Array | None = None) -> jax.Array:
-    """(N,) bool — who computes and broadcasts this round.
-
-    key is the chain-level `CommState.key`: folding (iteration k,
-    PARTICIPATION_TAG, the rate's f32 bit pattern) gives a stream that is
-    (a) independent of the comm stages' draws, (b) per-cell under sweep's
-    vmap (the chain key already folds every policy parameter), and (c)
-    identical on every backend carrying the same CommState. Straggler
-    slowdowns scale the *threshold*, not the stream — common random
-    numbers across slowdown scenarios. rate = 1.0 is exactly the all-ones
-    mask (uniform draws live in [0, 1)), the degeneracy contract."""
-    r = jax.random.fold_in(key, jnp.asarray(k, jnp.uint32))
-    r = jax.random.fold_in(r, PARTICIPATION_TAG)
-    r = comm_mod._fold_value(r, plan.participation)
-    u = jax.random.uniform(r, (num_agents,))
-    if plan.size is not None:
-        score = u if alive is None else jnp.where(alive, u, jnp.inf)
-        _, sel = jax.lax.top_k(-score, plan.size)
-        m = jnp.zeros((num_agents,), bool).at[sel].set(True)
-    else:
-        p = jnp.asarray(plan.participation, jnp.float32)
-        if plan.slowdown is not None:
-            p = jnp.minimum(p / plan.slowdown, 1.0)
-        m = u < p
-    if alive is not None:
-        m = m & alive
-    return m
-
-
-def _mask_rows(m: jax.Array, new, old):
-    """where(m) over agent-stacked pytrees: row i takes `new` iff m[i]."""
-    def sel(a, b):
-        return jnp.where(m.reshape(m.shape + (1,) * (a.ndim - 1)), a, b)
-    return jax.tree.map(sel, new, old)
-
-
 # ---------------------------------------------------------------------------
 # One gossip iteration — the ADMM family (DKLA / COKE)
 # ---------------------------------------------------------------------------
@@ -313,57 +272,15 @@ def gossip_coke_step(
     Reads the graph ONLY through `table` — `problem.adjacency` is never
     consumed, so the traced step touches no (N, N) value (the scaling
     contract, pinned by jaxpr inspection)."""
-    chain = comm_mod.as_chain(policy)
-    N = state.theta.shape[0]
-    k = state.step + 1
-    comm_state = chain.ensure_state(state.comm, N)
-
-    theta0, theta_hat0, gamma0 = state.theta, state.theta_hat, state.gamma
-    alive = plan.alive_at(k)
-    if plan.has_churn:
-        # a (re)joining agent restarts cold: zero primal/broadcast/dual
-        joined = alive & ~plan.alive_at(k - 1)
-        theta0, theta_hat0, gamma0 = _mask_rows(
-            joined, jax.tree.map(jnp.zeros_like, (theta0, theta_hat0,
-                                                  gamma0)),
-            (theta0, theta_hat0, gamma0))
-
-    deg = table.degrees(alive)
-    nbr_hat = table.nbr_sum(theta_hat0, alive)
-
-    if primal == "cg":
-        theta_new = _primal_cg(problem, gamma0, theta_hat0, nbr_hat, deg,
-                               theta0=theta0, tol=cg_tol,
-                               maxiter=cg_maxiter)
-    elif primal == "cholesky":
-        if chol is None:
-            raise ValueError("primal='cholesky' needs the factor stack")
-        theta_new = _primal_closed_form(problem, chol, gamma0, theta_hat0,
-                                        nbr_hat, deg)
-    else:
-        theta_new = _primal_gradient(problem, inner_steps, inner_lr,
-                                     theta0, gamma0, theta_hat0, nbr_hat,
-                                     deg)
-
-    m = participation_mask(comm_state.key, k, N, plan, alive)
-    theta = _mask_rows(m, theta_new, theta0)
-
-    # broadcast: participants run the comm policy (censor/quantize/drop),
-    # non-participants are structurally silent (active mask) — zero bits
-    theta_hat, send, comm_state = chain.apply(theta, theta_hat0, k,
-                                              comm_state, active=m)
-
-    # delayed dual: participants integrate (21b) against the CURRENT
-    # broadcast values; sleepers' duals freeze until they next wake
-    nbr_new = table.nbr_sum(theta_hat, alive)
-    gamma = _mask_rows(
-        m, gamma0 + problem.rho * (deg[:, None] * theta_hat - nbr_new),
-        gamma0)
-
-    return COKEState(
-        theta=theta, theta_hat=theta_hat, gamma=gamma, step=k,
-        comms=state.comms + jnp.sum(send.astype(jnp.int32)),
-        comm=comm_state)
+    program = step_mod.StepProgram(
+        chain=comm_mod.as_chain(policy), rho=problem.rho,
+        exchange=lambda s, k: step_mod.table_view(table, plan, k),
+        primal=_primal_stage(problem, primal, chol=chol,
+                             inner_steps=inner_steps, inner_lr=inner_lr,
+                             cg_tol=cg_tol, cg_maxiter=cg_maxiter),
+        comm_decide=step_mod.sampled_stage(plan))
+    new_state, _ = step_mod.run_step(program, state)
+    return new_state
 
 
 # ---------------------------------------------------------------------------
@@ -388,47 +305,14 @@ def gossip_stream_step(
     fresh minibatch and gossip; sleepers hold. Returns (state, pre-update
     instantaneous MSE over the full stack — the stream keeps flowing
     whether or not an agent woke up to learn from it)."""
-    chain = comm_mod.as_chain(schedule)
-    N = feats.shape[0]
-    k = state.step + 1
-    comm_state = chain.ensure_state(state.comm, N)
-
-    theta0, theta_hat0, gamma0 = state.theta, state.theta_hat, state.gamma
-    alive = plan.alive_at(k)
-    if plan.has_churn:
-        joined = alive & ~plan.alive_at(k - 1)
-        theta0, theta_hat0, gamma0 = _mask_rows(
-            joined, jax.tree.map(jnp.zeros_like, (theta0, theta_hat0,
-                                                  gamma0)),
-            (theta0, theta_hat0, gamma0))
-
-    deg = table.degrees(alive)
-    preds = jnp.einsum("nbd,nd->nb", feats, theta0)
-    inst_mse = jnp.mean((labels - preds) ** 2)
-
-    resid = preds - labels
-    g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
-    nbr_sum = table.nbr_sum(theta_hat0, alive)
-    g = (g_data + (2.0 * lam / N) * theta0
-         + 2.0 * rho * deg[:, None] * theta0
-         + gamma0
-         - rho * (deg[:, None] * theta_hat0 + nbr_sum))
-    if eta is None:
-        theta_new = theta0 - lr * g
-    else:
-        theta_new = theta0 - g / (eta + 2.0 * rho * deg[:, None])
-
-    m = participation_mask(comm_state.key, k, N, plan, alive)
-    theta = _mask_rows(m, theta_new, theta0)
-    theta_hat, send, comm_state = chain.apply(theta, theta_hat0, k,
-                                              comm_state, active=m)
-    nbr_new = table.nbr_sum(theta_hat, alive)
-    gamma = _mask_rows(
-        m, gamma0 + rho * (deg[:, None] * theta_hat - nbr_new), gamma0)
-
-    return OnlineState(theta, theta_hat, gamma, k,
-                       state.comms + jnp.sum(send.astype(jnp.int32)),
-                       comm_state), inst_mse
+    program = step_mod.StepProgram(
+        chain=comm_mod.as_chain(schedule), rho=rho,
+        exchange=lambda s, k: step_mod.table_view(table, plan, k),
+        primal=step_mod.stream_primal(feats, labels, lam=lam, rho=rho,
+                                      lr=lr, eta=eta),
+        comm_decide=step_mod.sampled_stage(plan))
+    new_state, extras = step_mod.run_step(program, state)
+    return new_state, extras["inst_mse"]
 
 
 # ---------------------------------------------------------------------------

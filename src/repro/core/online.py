@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import comm as comm_mod
+from repro.core import step as step_mod
 
 
 class OnlineState(NamedTuple):
@@ -68,35 +69,13 @@ def stream_step(state: OnlineState, feats: jax.Array,
         (with eta=None and stepsize lr they are bit-identical, the
         identity contract tests/test_stream.py pins).
     """
-    chain = comm_mod.as_chain(schedule)
-    N = feats.shape[0]
-    deg = jnp.sum(adjacency, axis=1)
-
-    preds = jnp.einsum("nbd,nd->nb", feats, state.theta)
-    inst_mse = jnp.mean((labels - preds) ** 2)
-
-    # streaming augmented-Lagrangian gradient (quadratic loss)
-    resid = preds - labels                                   # (N, b)
-    g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
-    nbr_sum = adjacency @ state.theta_hat
-    g = (g_data + (2.0 * lam / N) * state.theta
-         + 2.0 * rho * deg[:, None] * state.theta
-         + state.gamma
-         - rho * (deg[:, None] * state.theta_hat + nbr_sum))
-    if eta is None:
-        theta = state.theta - lr * g
-    else:
-        theta = state.theta - g / (eta + 2.0 * rho * deg[:, None])
-
-    k = state.step + 1
-    comm_state = chain.ensure_state(state.comm, N)
-    theta_hat, send, comm_state = chain.apply(theta, state.theta_hat, k,
-                                              comm_state)
-    gamma = state.gamma + rho * (deg[:, None] * theta_hat
-                                 - adjacency @ theta_hat)
-    return OnlineState(theta, theta_hat, gamma, k,
-                       state.comms + jnp.sum(send.astype(jnp.int32)),
-                       comm_state), inst_mse
+    program = step_mod.StepProgram(
+        chain=comm_mod.as_chain(schedule), rho=rho,
+        exchange=lambda s, k: step_mod.dense_view(adjacency),
+        primal=step_mod.stream_primal(feats, labels, lam=lam, rho=rho,
+                                      lr=lr, eta=eta))
+    new_state, extras = step_mod.run_step(program, state)
+    return new_state, extras["inst_mse"]
 
 
 def online_coke_step(state: OnlineState, feats: jax.Array,

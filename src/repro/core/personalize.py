@@ -40,9 +40,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import comm as comm_mod
-from repro.core.admm import (COKEState, Problem, _primal_cg,
-                             _primal_gradient)
-from repro.core.gossip import GossipPlan, _mask_rows, participation_mask
+from repro.core import step as step_mod
+from repro.core.admm import COKEState, Problem, _primal_stage
+from repro.core.gossip import GossipPlan
 from repro.core.online import OnlineState
 
 AFFINITY_KINDS = ("rbf", "cosine")
@@ -237,34 +237,15 @@ def gossip_coke_step_dense(
     graph if due, then the sampled participants run the (21a) primal +
     policy-governed broadcast + delayed (21b) dual on it."""
     s = state.inner
-    k = s.step + 1
-    A = maybe_update(pz, s.theta, k, state.adjacency)
-    chain = comm_mod.as_chain(policy)
-    N = s.theta.shape[0]
-    comm_state = chain.ensure_state(s.comm, N)
-
-    deg = jnp.sum(A, axis=1)
-    nbr_hat = A @ s.theta_hat
-
-    if primal == "cg":
-        theta_new = _primal_cg(problem, s.gamma, s.theta_hat, nbr_hat,
-                               deg, theta0=s.theta, tol=cg_tol,
-                               maxiter=cg_maxiter)
-    else:
-        theta_new = _primal_gradient(problem, inner_steps, inner_lr,
-                                     s.theta, s.gamma, s.theta_hat,
-                                     nbr_hat, deg)
-
-    m = participation_mask(comm_state.key, k, N, plan)
-    theta = _mask_rows(m, theta_new, s.theta)
-    theta_hat, send, comm_state = chain.apply(theta, s.theta_hat, k,
-                                              comm_state, active=m)
-    gamma = _mask_rows(
-        m, s.gamma + problem.rho * (deg[:, None] * theta_hat
-                                    - A @ theta_hat), s.gamma)
-    inner = COKEState(
-        theta=theta, theta_hat=theta_hat, gamma=gamma, step=k,
-        comms=s.comms + jnp.sum(send.astype(jnp.int32)), comm=comm_state)
+    A = maybe_update(pz, s.theta, s.step + 1, state.adjacency)
+    program = step_mod.StepProgram(
+        chain=comm_mod.as_chain(policy), rho=problem.rho,
+        exchange=lambda st, k: step_mod.dense_view(A),
+        primal=_primal_stage(problem, primal, inner_steps=inner_steps,
+                             inner_lr=inner_lr, cg_tol=cg_tol,
+                             cg_maxiter=cg_maxiter),
+        comm_decide=step_mod.sampled_stage(plan))
+    inner, _ = step_mod.run_step(program, s)
     return PersonalizedState(inner, A)
 
 
@@ -285,34 +266,11 @@ def gossip_stream_step_dense(
     `core.gossip.gossip_stream_step` with `A @ x` in place of the static
     neighbor-table gathers. The caller owns the graph refresh (the
     adjacency rides in the solver's fit state, not the OnlineState)."""
-    chain = comm_mod.as_chain(schedule)
-    N = feats.shape[0]
-    k = state.step + 1
-    comm_state = chain.ensure_state(state.comm, N)
-
-    deg = jnp.sum(adjacency, axis=1)
-    preds = jnp.einsum("nbd,nd->nb", feats, state.theta)
-    inst_mse = jnp.mean((labels - preds) ** 2)
-
-    resid = preds - labels
-    g_data = 2.0 * jnp.einsum("nb,nbd->nd", resid, feats) / feats.shape[1]
-    nbr_sum = adjacency @ state.theta_hat
-    g = (g_data + (2.0 * lam / N) * state.theta
-         + 2.0 * rho * deg[:, None] * state.theta
-         + state.gamma
-         - rho * (deg[:, None] * state.theta_hat + nbr_sum))
-    if eta is None:
-        theta_new = state.theta - lr * g
-    else:
-        theta_new = state.theta - g / (eta + 2.0 * rho * deg[:, None])
-
-    m = participation_mask(comm_state.key, k, N, plan)
-    theta = _mask_rows(m, theta_new, state.theta)
-    theta_hat, send, comm_state = chain.apply(theta, state.theta_hat, k,
-                                              comm_state, active=m)
-    gamma = _mask_rows(
-        m, state.gamma + rho * (deg[:, None] * theta_hat
-                                - adjacency @ theta_hat), state.gamma)
-    return OnlineState(theta, theta_hat, gamma, k,
-                       state.comms + jnp.sum(send.astype(jnp.int32)),
-                       comm_state), inst_mse
+    program = step_mod.StepProgram(
+        chain=comm_mod.as_chain(schedule), rho=rho,
+        exchange=lambda st, k: step_mod.dense_view(adjacency),
+        primal=step_mod.stream_primal(feats, labels, lam=lam, rho=rho,
+                                      lr=lr, eta=eta),
+        comm_decide=step_mod.sampled_stage(plan))
+    new_state, extras = step_mod.run_step(program, state)
+    return new_state, extras["inst_mse"]

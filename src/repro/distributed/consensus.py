@@ -215,9 +215,87 @@ def _dense_neighbors(adjacency: jax.Array, tree):
         tree)
 
 
+def _alive_ring_sum(tree, alive_f: jax.Array, offsets: tuple):
+    """Liveness-masked circulant neighbor sum: dead agents' values are
+    zeroed before the permutes, so each surviving agent accumulates
+    exactly `sum_n alive_n x_n` — bit-identical to the simulator's
+    alive-weighted NeighborTable gather on deg-2 rings (masking by
+    1.0/0.0 is exact; the two-term partial sums commute)."""
+    masked = jax.tree.map(lambda x: x * _degb(alive_f, x), tree)
+    left, right = _ring_neighbors(masked, offsets)
+    return jax.tree.map(jnp.add, left, right)
+
+
+# ---------------------------------------------------------------------------
+# Exchange stages (core.step's `exchange` slot, spmd flavors)
+# ---------------------------------------------------------------------------
+#
+# One iteration's view of the graph, bundling the (possibly per-agent)
+# degrees, the primal neighbor sum, and the expression family for the
+# augmented gradient and the (21b) dual. Two families exist because their
+# float associativity differs and each is pinned by parity tests:
+#
+#   halves — static/scheduled circulants: `deg*th + l + r` three-term adds
+#            over the permute halves, with the dual fetch refilling the
+#            neighbor cache (2 permutes per iteration);
+#   summed — dense (learned) graphs and churn-masked rings: `deg` is a
+#            per-agent (N,) vector and the neighbor view is a single
+#            summed tree, matching the simulator's expressions
+#            bit-for-bit; the circulant cache is stale under a
+#            per-iteration graph, so it is carried untouched.
+
+@dataclasses.dataclass(frozen=True)
+class _Exchange:
+    deg: Any            # scalar / 0-d (circulant) or (N,) vector degrees
+    nbr_sum: Any        # summed neighbor tree of theta_hat^{k-1}
+    g_aug: Any          # (grads, params, theta_hat, gamma) -> tree
+    dual: Any           # (gamma, new_theta_hat) -> (gamma', cache_l, cache_r)
+
+
+def _halves_exchange(rho, deg, left, right, dual_fetch) -> _Exchange:
+    def g_aug(grads, params, theta_hat, gamma):
+        return jax.tree.map(
+            lambda g, p, th, gm, l, r: (
+                g.astype(jnp.float32)
+                + 2.0 * rho * deg * p.astype(jnp.float32)
+                + gm
+                - rho * (deg * th + l + r)),
+            grads, params, theta_hat, gamma, left, right)
+
+    def dual(gamma, new_theta_hat):
+        hat_l, hat_r = dual_fetch(new_theta_hat)
+        new_gamma = jax.tree.map(
+            lambda gm, th, l, r: gm + rho * (deg * th - l - r),
+            gamma, new_theta_hat, hat_l, hat_r)
+        return new_gamma, hat_l, hat_r
+
+    return _Exchange(deg, jax.tree.map(jnp.add, left, right), g_aug, dual)
+
+
+def _summed_exchange(rho, deg, nbr_sum, dual_fetch, cache) -> _Exchange:
+    def g_aug(grads, params, theta_hat, gamma):
+        return jax.tree.map(
+            lambda g, p, th, gm, nb: (
+                g.astype(jnp.float32)
+                + 2.0 * rho * _degb(deg, p) * p.astype(jnp.float32)
+                + gm
+                - rho * (_degb(deg, th) * th + nb)),
+            grads, params, theta_hat, gamma, nbr_sum)
+
+    def dual(gamma, new_theta_hat):
+        nbr_new = dual_fetch(new_theta_hat)
+        new_gamma = jax.tree.map(
+            lambda gm, th, nb: gm + rho * (_degb(deg, th) * th - nb),
+            gamma, new_theta_hat, nbr_new)
+        return new_gamma, cache[0], cache[1]
+
+    return _Exchange(deg, nbr_sum, g_aug, dual)
+
+
 def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
                      params, grads, state, comm=None, primal_solve=None,
-                     participate=None, adjacency=None):
+                     participate=None, adjacency=None, alive=None,
+                     joined=None):
     """params/grads: agent-stacked pytrees (N, ...). Returns
     (new_params, new_state, metrics).
 
@@ -248,7 +326,15 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     sums replace the circulant permutes + cache. This is the learned-
     collaboration-graph (personalization) hook: the graph may change per
     iteration, so the cached fetch — which belongs to the previous
-    step's graph — is bypassed (and carried untouched)."""
+    step's graph — is bypassed (and carried untouched).
+
+    alive / joined — optional (N,) bool churn masks (ADMM strategies on
+    the static ring): dead agents are zero-weighted out of every degree
+    and neighbor sum (the cached fetch, unmasked and possibly stale
+    across a churn event, is bypassed and carried untouched), and the
+    rows flagged `joined` restart cold — zero primal / broadcast / dual
+    and a fresh optimizer slot — exactly mirroring the simulator's
+    `core.gossip` churn semantics."""
     step = state["step"] + 1
     metrics: dict[str, jax.Array] = {}
     dense = adjacency is not None
@@ -296,6 +382,16 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
     theta_hat, gamma = state["theta_hat"], state["gamma"]
     chain = ccfg.comm_chain() if comm is None else comm_mod.as_chain(comm)
     num_agents = jax.tree.leaves(params)[0].shape[0]
+    opt0 = state["opt"]
+    if joined is not None:
+        # a (re)joining agent restarts cold: zero primal / broadcast /
+        # dual rows and a fresh optimizer slot (core.gossip semantics)
+        params, theta_hat, gamma, opt0 = _mask_rows(
+            joined, jax.tree.map(jnp.zeros_like,
+                                 (params, theta_hat, gamma, opt0)),
+            (params, theta_hat, gamma, opt0))
+
+    cache = (state["nbr_left"], state["nbr_right"])
     if ccfg.offset_schedule:
         if ccfg.use_fused_kernel:
             raise ValueError(
@@ -305,72 +401,67 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
         variants = ccfg.offset_schedule
         graph_idx = (step - 1) % len(variants)
         degs = jnp.asarray([2.0 * len(v) for v in variants], jnp.float32)
-        deg = degs[graph_idx]
         # the cached fetch belongs to the PREVIOUS step's graph — re-fetch
         # theta_hat^{k-1} neighbors under the graph active at step k
         left, right = _scheduled_neighbors(theta_hat, variants, graph_idx)
+        x = _halves_exchange(
+            ccfg.rho, degs[graph_idx], left, right,
+            lambda nh: _scheduled_neighbors(nh, variants, graph_idx))
     elif dense:
-        # learned weighted graph: (N,) degrees and matmul neighbor sums
-        deg = jnp.sum(adjacency, axis=1)
-        left = right = None
+        # learned weighted graph: (N,) degrees and matmul neighbor sums;
+        # the circulant cache is stale under a per-iteration graph —
+        # carried untouched (structurally present, never read)
+        x = _summed_exchange(
+            ccfg.rho, jnp.sum(adjacency, axis=1),
+            _dense_neighbors(adjacency, theta_hat),
+            lambda nh: _dense_neighbors(adjacency, nh), cache)
+    elif alive is not None:
+        if ccfg.use_fused_kernel:
+            raise ValueError(
+                "the fused coke_update kernel bakes the graph degree in "
+                "as a static parameter; churn (a traced alive mask) "
+                "requires use_fused_kernel=False")
+        # churn-masked ring: per-agent alive-weighted degrees, masked
+        # permute sums, stale cache bypassed (same policy as dense)
+        alive_f = alive.astype(jnp.float32)
+        deg_l, deg_r = _ring_neighbors(alive_f, ccfg.offsets)
+        x = _summed_exchange(
+            ccfg.rho, deg_l + deg_r,
+            _alive_ring_sum(theta_hat, alive_f, ccfg.offsets),
+            lambda nh: _alive_ring_sum(nh, alive_f, ccfg.offsets), cache)
     else:
-        deg = ccfg.degree
         # neighbors' theta_hat^{k-1}: served from the cache filled by the
         # previous step's dual-update fetch — no permute here
-        left, right = state["nbr_left"], state["nbr_right"]
+        x = _halves_exchange(
+            ccfg.rho, ccfg.degree, cache[0], cache[1],
+            lambda nh: _ring_neighbors(nh, ccfg.offsets))
 
     # primal update (21a): exact when the caller supplies a solve (the
     # matrix-free CG path), otherwise one optimizer step on the augmented
     # Lagrangian gradient
     #   g_aug = g_local + 2 rho deg theta + gamma - rho (deg theta_hat + sum_n theta_hat_n)
     if primal_solve is not None:
-        if dense:
-            nbr_sum = _dense_neighbors(adjacency, theta_hat)
-        else:
-            nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
-        new_params = primal_solve(params, theta_hat, gamma, nbr_sum, deg)
-        opt = state["opt"]
-    elif dense:
-        nbr_sum = _dense_neighbors(adjacency, theta_hat)
-        g_aug = jax.tree.map(
-            lambda g, p, th, gm, nb: (
-                g.astype(jnp.float32)
-                + 2.0 * ccfg.rho * _degb(deg, p) * p.astype(jnp.float32)
-                + gm
-                - ccfg.rho * (_degb(deg, th) * th + nb)),
-            grads, params, theta_hat, gamma, nbr_sum)
-        updates, opt = jax.vmap(
-            lambda g, s, p: opt_update(opt_cfg, g, s, p)
-        )(g_aug, state["opt"], params)
-        new_params = apply_updates(params, updates)
-    elif ccfg.use_fused_kernel:
-        from repro.kernels.coke_update.ops import coke_update_pytree
-        nbr_sum = jax.tree.map(lambda l, r: l + r, left, right)
-        half = jax.tree.map(lambda x: 0.5 * x, nbr_sum)
-        g_aug, _ = coke_update_pytree(
-            params, theta_hat, gamma, grads, half, half,
-            rho=ccfg.rho, deg=deg)
-        updates, opt = jax.vmap(
-            lambda g, s, p: opt_update(opt_cfg, g, s, p)
-        )(g_aug, state["opt"], params)
-        new_params = apply_updates(params, updates)
+        new_params = primal_solve(params, theta_hat, gamma, x.nbr_sum,
+                                  x.deg)
+        opt = opt0
     else:
-        g_aug = jax.tree.map(
-            lambda g, p, th, gm, l, r: (
-                g.astype(jnp.float32)
-                + 2.0 * ccfg.rho * deg * p.astype(jnp.float32)
-                + gm
-                - ccfg.rho * (deg * th + l + r)),
-            grads, params, theta_hat, gamma, left, right)
+        if ccfg.use_fused_kernel:
+            from repro.kernels.coke_update.ops import coke_update_pytree
+            half = jax.tree.map(lambda s: 0.5 * s, x.nbr_sum)
+            g_aug, _ = coke_update_pytree(
+                params, theta_hat, gamma, grads, half, half,
+                rho=ccfg.rho, deg=x.deg)
+        else:
+            g_aug = x.g_aug(grads, params, theta_hat, gamma)
         updates, opt = jax.vmap(
             lambda g, s, p: opt_update(opt_cfg, g, s, p)
-        )(g_aug, state["opt"], params)
+        )(g_aug, opt0, params)
         new_params = apply_updates(params, updates)
 
     # gossip: sleepers hold their primal iterate and optimizer state
     if participate is not None:
         new_params = _mask_rows(participate, new_params, params)
-        opt = _mask_rows(participate, opt, state["opt"])
+        opt = _mask_rows(participate, opt, opt0)
 
     # communication policy (censor (19)/(20) / quantize / drop) over the
     # flattened agent-stacked message, with stale-value fallback — shared
@@ -382,23 +473,7 @@ def consensus_update(ccfg: ConsensusConfig, opt_cfg: OptConfig,
 
     # dual (21b) with theta_hat^k values — the step's ONLY neighbor fetch
     # on a static topology (2 permutes); cached for the next primal update
-    if dense:
-        nbr_new = _dense_neighbors(adjacency, new_theta_hat)
-        new_gamma = jax.tree.map(
-            lambda gm, th, nb: gm + ccfg.rho * (_degb(deg, th) * th - nb),
-            gamma, new_theta_hat, nbr_new)
-        # the circulant cache is stale under a per-iteration graph — carry
-        # it untouched (structurally present, never read on this path)
-        hat_l, hat_r = state["nbr_left"], state["nbr_right"]
-    else:
-        if ccfg.offset_schedule:
-            hat_l, hat_r = _scheduled_neighbors(new_theta_hat, variants,
-                                                graph_idx)
-        else:
-            hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)
-        new_gamma = jax.tree.map(
-            lambda gm, th, l, r: gm + ccfg.rho * (deg * th - l - r),
-            gamma, new_theta_hat, hat_l, hat_r)
+    new_gamma, hat_l, hat_r = x.dual(gamma, new_theta_hat)
     # gossip: sleepers' duals freeze (delayed-but-correct — the next wake
     # integrates (21b) against the then-current broadcast values)
     if participate is not None:
@@ -435,7 +510,8 @@ def init_stream_state(ccfg: ConsensusConfig, theta0: jax.Array,
 
 def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
                   lam: float, lr: float, eta: float | None = None,
-                  comm=None, participate=None, adjacency=None):
+                  comm=None, participate=None, adjacency=None,
+                  alive=None, joined=None):
     """One streaming (online) round on the ring runtime — the
     `consensus_update`-style hook behind `fit_stream`'s spmd backend.
 
@@ -460,6 +536,10 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     permutes + cache; the expressions mirror the simulator's
     `core.online.stream_step` bit-for-bit.
 
+    alive/joined — optional (N,) bool churn masks, same semantics as
+    `consensus_update`: dead agents contribute nothing to the masked
+    neighbor sums (alive-weighted degrees), joiners restart cold.
+
     Returns (new_params, new_state, metrics) with metrics carrying the
     pre-update instantaneous MSE (the regret sample) and cumulative bits.
     """
@@ -470,6 +550,11 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     rho = ccfg.rho
     chain = comm_mod.as_chain(comm)
     k = state["step"] + 1
+
+    if joined is not None:
+        theta, theta_hat, gamma = _mask_rows(
+            joined, jax.tree.map(jnp.zeros_like, (theta, theta_hat, gamma)),
+            (theta, theta_hat, gamma))
 
     preds = jnp.einsum("nbd,nd->nb", feats, theta)
     inst_mse = jnp.mean((labels - preds) ** 2)
@@ -482,6 +567,13 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     if dense:
         deg = jnp.sum(adjacency, axis=1)[:, None]   # (N, 1) weighted
         nbr_sum = adjacency @ theta_hat
+    elif alive is not None:
+        # churn-masked ring: alive-weighted degrees + masked permute sums
+        # (stale circulant cache bypassed — same policy as dense)
+        alive_f = alive.astype(jnp.float32)
+        deg_l, deg_r = _ring_neighbors(alive_f, ccfg.offsets)
+        deg = (deg_l + deg_r)[:, None]              # (N, 1) per-agent
+        nbr_sum = _alive_ring_sum(theta_hat, alive_f, ccfg.offsets)
     else:
         deg = ccfg.degree       # static scalar: circulant topologies only
         nbr_sum = state["nbr_left"] + state["nbr_right"]
@@ -511,6 +603,11 @@ def stream_update(ccfg: ConsensusConfig, params, state, feats, labels, *,
     if dense:
         new_gamma = gamma + rho * (deg * new_theta_hat
                                    - adjacency @ new_theta_hat)
+        hat_l, hat_r = state["nbr_left"], state["nbr_right"]
+    elif alive is not None:
+        new_gamma = gamma + rho * (
+            deg * new_theta_hat
+            - _alive_ring_sum(new_theta_hat, alive_f, ccfg.offsets))
         hat_l, hat_r = state["nbr_left"], state["nbr_right"]
     else:
         hat_l, hat_r = _ring_neighbors(new_theta_hat, ccfg.offsets)

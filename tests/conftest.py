@@ -80,57 +80,68 @@ def assert_results_match(ref, other, *, exact=(), theta_atol=None,
                                    err_msg=f"{err}:theta")
 
 
-def assert_gossip_degenerate(config, backends, *, problem=None,
-                             runner=None):
-    """The degenerate-gossip pin: `exec="gossip"` at participation=1.0
-    with zero staleness (no churn, no stragglers) must reproduce
-    `exec="sync"` BIT-FOR-BIT on every backend — every masked update
-    collapses to the synchronous step, the all-true participation mask is
-    drawn but selects everything, and non-participation bit savings are
-    vacuous. Use deg-2 (ring) graphs: there the gather-based neighbor sum
-    is bitwise equal to the dense adjacency matmul (two-term sums are
-    order-exact), which is what makes the pin exact rather than close.
-
-    runner — as in assert_fit_parity (None = fit; pass fit_stream-shaped
-             callables for the streaming family).
-    Returns {backend: (sync_result, gossip_result)}.
-    """
-    from repro.api import fit
-
-    if runner is None:
-        def runner(cfg, prob):
-            return fit(cfg, problem=prob)
-    out = {}
-    for b in backends:
-        sync = runner(config.replace(backend=b, exec="sync"), problem)
-        gsp = runner(config.replace(backend=b, exec="gossip",
-                                    participation=1.0), problem)
-        assert_results_match(sync, gsp, exact="*",
-                             err=f"gossip-degenerate:{b}")
-        out[b] = (sync, gsp)
-    return out
-
-
 def assert_fit_parity(config, backends, *, problem=None, runner=None,
-                      exact=("comms",), theta_atol=1e-5, close=None):
+                      exec_mode="sync", exact=("comms",), theta_atol=1e-5,
+                      close=None):
     """Run `config` on every backend in `backends` and pin cross-backend
     parity against the first (the reference).
 
-    runner — None = `repro.api.fit`; pass a callable (config, problem) ->
-             FitResult to conform other drivers (e.g. `fit_stream`, with
-             the StreamProblem as `problem`).
-    Returns {backend: FitResult} for follow-up assertions.
+    runner    — None = `repro.api.fit`; pass a callable (config, problem)
+                -> FitResult to conform other drivers (e.g. `fit_stream`,
+                with the StreamProblem as `problem`).
+    exec_mode — "sync" runs the config as-is. "degenerate-gossip" runs
+                BOTH executions per backend and pins the degenerate
+                contract: `exec="gossip"` at participation=1.0 with zero
+                staleness (no churn, no stragglers) must reproduce
+                `exec="sync"` BIT-FOR-BIT — every masked update collapses
+                to the synchronous step, the all-true participation mask
+                is drawn but selects everything, and non-participation
+                bit savings are vacuous. Use deg-2 (ring) graphs there:
+                the gather-based neighbor sum is bitwise equal to the
+                dense adjacency matmul (two-term sums are order-exact),
+                which is what makes the pin exact rather than close.
+                Cross-backend parity (exact/theta_atol/close) is then
+                pinned on the gossip runs.
+    Returns {backend: FitResult} for "sync",
+    {backend: (sync_result, gossip_result)} for "degenerate-gossip".
     """
     from repro.api import fit
 
     if runner is None:
         def runner(cfg, prob):
             return fit(cfg, problem=prob)
-    results = {b: runner(config.replace(backend=b), problem)
-               for b in backends}
+    results, pairs = {}, {}
+    for b in backends:
+        cfg = config.replace(backend=b)
+        if exec_mode == "sync":
+            results[b] = runner(cfg, problem)
+        elif exec_mode == "degenerate-gossip":
+            sync = runner(cfg.replace(exec="sync"), problem)
+            gsp = runner(cfg.replace(exec="gossip", participation=1.0),
+                         problem)
+            assert_results_match(sync, gsp, exact="*",
+                                 err=f"gossip-degenerate:{b}")
+            results[b] = gsp
+            pairs[b] = (sync, gsp)
+        else:
+            raise ValueError(f"unknown exec_mode {exec_mode!r}")
     ref = results[backends[0]]
     for b in backends[1:]:
         assert_results_match(ref, results[b], exact=exact,
                              theta_atol=theta_atol, close=close,
                              err=f"{backends[0]}-vs-{b}")
-    return results
+    return pairs if exec_mode == "degenerate-gossip" else results
+
+
+def assert_gossip_degenerate(config, backends, *, problem=None,
+                             runner=None):
+    """The degenerate-gossip pin, routed through `assert_fit_parity`
+    (exec_mode="degenerate-gossip") so sync and gossip conformance share
+    one code path. Cross-backend keys beyond the per-backend bit-exact
+    contract are left to callers (exact=(), theta_atol=None here keeps
+    this a pure degeneracy pin, as it always was).
+    Returns {backend: (sync_result, gossip_result)}.
+    """
+    return assert_fit_parity(config, backends, problem=problem,
+                             runner=runner, exec_mode="degenerate-gossip",
+                             exact=(), theta_atol=None)

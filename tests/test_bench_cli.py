@@ -1,0 +1,88 @@
+"""The benchmark CLI surface: `--only` selection validation (an empty or
+whitespace selection must NOT degrade into running every suite), and the
+perf gate's $GITHUB_STEP_SUMMARY markdown emission."""
+import json
+
+import pytest
+
+from benchmarks import perf_gate
+from benchmarks import run as bench_run
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run --only validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("only", ["", " ", ",", " , ,"],
+                         ids=["empty", "space", "comma", "soup"])
+def test_only_empty_selection_rejected(only, capsys):
+    """`--only ""` (or any all-whitespace/comma selection) exits with a
+    usage error instead of silently running ALL suites — a programmatic
+    CI invocation with an empty list must not burn the full budget."""
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--only", only])
+    assert exc.value.code == 2
+    assert "no suites" in capsys.readouterr().err
+
+
+def test_legacy_positional_empty_rejected():
+    """The legacy positional spelling gets the same guard."""
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main([""])
+    assert exc.value.code == 2
+
+
+def test_unknown_suite_rejected(capsys):
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--only", "gossip,nope"])
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "nope" in err and "gossip" in err  # names the valid choices
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.perf_gate --> $GITHUB_STEP_SUMMARY
+# ---------------------------------------------------------------------------
+
+FRESH = {"results": [{"name": "a", "us_per_call": 30.0},
+                     {"name": "b", "us_per_call": 10.0},
+                     {"name": "c", "us_per_call": 1.0},
+                     {"name": "total_wall_s", "us_per_call": 99.0}]}
+BASE = {"git_sha": "cafe123", "results": [
+    {"name": "a", "us_per_call": 10.0},
+    {"name": "b", "us_per_call": 10.0},
+    {"name": "d", "us_per_call": 5.0}]}
+
+
+def test_summary_table_contents():
+    md = perf_gate.summary_table(FRESH, BASE, 1.5, "BENCH_gossip.json")
+    assert "### perf gate: `BENCH_gossip.json`" in md
+    assert "`cafe123`" in md
+    assert "| `a` | 10.0 | 30.0 | 3.00x | ❌ FAIL |" in md
+    assert "| `b` | 10.0 | 10.0 | 1.00x | ✅ ok |" in md
+    assert "🆕 not gated" in md          # fresh-only row c
+    assert "gone, not gated" in md       # baseline-only row d
+    assert "total_wall_s" not in md      # never gated, never tabled
+
+
+def test_gate_writes_step_summary(tmp_path, monkeypatch, capsys):
+    """main() appends one markdown section per invocation to the file
+    named by $GITHUB_STEP_SUMMARY; unset, it writes nothing anywhere."""
+    fresh_p = tmp_path / "fresh.json"
+    base_p = tmp_path / "BENCH_gossip.json"
+    fresh_p.write_text(json.dumps(FRESH))
+    base_p.write_text(json.dumps(BASE))
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert perf_gate.main([str(fresh_p), str(base_p)]) == 1  # a regressed
+    assert perf_gate.main([str(fresh_p), str(base_p)]) == 1
+    text = summary.read_text()
+    assert text.count("### perf gate: `BENCH_gossip.json`") == 2  # appends
+    assert "❌ FAIL" in text
+    capsys.readouterr()
+
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY")
+    summary.unlink()
+    assert perf_gate.main([str(fresh_p), str(base_p)]) == 1
+    assert not summary.exists()          # no-op without the env var
+    capsys.readouterr()

@@ -1,0 +1,142 @@
+"""The declarative capability table: every unsupported combination in
+CONFIG_RULES / RUN_RULES raises through the real admission path (config
+construction or driver check) with the rule's named nearest-supported
+alternative, the trigger registry below covers every rule (adding a rule
+without a trigger fails loudly), and the committed README support-matrix
+block matches the generated table (doc-drift pin)."""
+import pathlib
+
+import pytest
+
+from repro.api import (Censor, Chain, ChurnSchedule, FitConfig,
+                       Personalization, TopologySchedule)
+from repro.api.capabilities import (BEGIN_MARK, CONFIG_RULES, END_MARK,
+                                    RUN_RULES, check_fit, check_stream,
+                                    check_sweep, support_matrix)
+from repro.api.registry import get_solver
+
+TOPO = TopologySchedule.circulant_cycle(8, [(1,)])
+CHURN = ChurnSchedule(leave=((2, 0),))
+PZ = Personalization()
+COMM = Chain((Censor(0.3, 0.97),))
+
+
+def _cfg(**kw):
+    return FitConfig(**kw)
+
+
+def _run(mode, **kw):
+    """Build the config, then run it through the driver-scoped check —
+    the exact call path fit()/fit_stream()/sweep() take."""
+    config = FitConfig(**kw)
+    solver = get_solver(config.algorithm)
+    {"batch": check_fit, "stream": check_stream,
+     "sweep": check_sweep}[mode](config, solver)
+
+
+#: rule id -> a zero-arg callable that must raise THAT rule's error.
+#: Kept exhaustive by test_every_rule_has_a_trigger.
+TRIGGERS = {
+    # CONFIG_RULES — fire in FitConfig.__post_init__, no solver needed
+    "sync-gossip-knobs": lambda: _cfg(participation=0.5),
+    "comm-censor-knobs": lambda: _cfg(comm=COMM, censor_v=0.3),
+    "personalization-topology": lambda: _cfg(personalization=PZ,
+                                             topology=TOPO),
+    "personalization-churn": lambda: _cfg(exec="gossip", personalization=PZ,
+                                          churn=CHURN),
+    # RUN_RULES — fire in the driver admission once the solver resolves
+    "solver-backend": lambda: _run("batch", algorithm="ridge_oracle",
+                                   backend="spmd"),
+    "comm-unaware-solver": lambda: _run("batch", algorithm="cta",
+                                        comm=COMM),
+    "topology-unaware-solver": lambda: _run("batch", algorithm="cta",
+                                            topology=TOPO),
+    "primal-unaware-solver": lambda: _run("batch", algorithm="ridge_oracle",
+                                          primal="cg"),
+    "gossip-unaware-solver": lambda: _run("batch", algorithm="cta",
+                                          exec="gossip"),
+    "gossip-topology": lambda: _run("batch", algorithm="coke",
+                                    exec="gossip", topology=TOPO),
+    "churn-fused": lambda: _run("batch", algorithm="coke", exec="gossip",
+                                churn=CHURN, backend="fused"),
+    "churn-cholesky": lambda: _run("batch", algorithm="coke",
+                                   exec="gossip", churn=CHURN,
+                                   primal="cholesky"),
+    "personalization-unaware-solver": lambda: _run(
+        "batch", algorithm="cta", personalization=PZ),
+    "personalization-fused": lambda: _run("batch", algorithm="coke",
+                                          personalization=PZ,
+                                          backend="fused"),
+    "personalization-cholesky": lambda: _run("batch", algorithm="coke",
+                                             personalization=PZ,
+                                             primal="cholesky"),
+    "stream-batch-solver": lambda: _run("stream", algorithm="coke"),
+    "stream-backend": lambda: _run("stream", algorithm="online_coke",
+                                   backend="fused"),
+    "stream-topology": lambda: _run("stream", algorithm="online_coke",
+                                    topology=TOPO),
+    "sweep-streaming": lambda: _run("sweep", algorithm="online_coke"),
+    "sweep-backend": lambda: _run("sweep", algorithm="coke",
+                                  backend="spmd"),
+}
+
+ALL_RULES = {r.id: r for r in CONFIG_RULES + RUN_RULES}
+
+
+def test_every_rule_has_a_trigger():
+    """The table and the trigger registry must cover each other exactly —
+    a rule without a trigger is an unpinned rejection, a trigger without
+    a rule is a stale test."""
+    assert set(TRIGGERS) == set(ALL_RULES)
+
+
+@pytest.mark.parametrize("rule_id", sorted(TRIGGERS))
+def test_unsupported_combination_raises_with_alternative(rule_id):
+    """Every unsupported combination raises and the error names the
+    nearest supported alternative — verbatim from the rule, so a reworded
+    table stays in sync with what users actually see."""
+    rule = ALL_RULES[rule_id]
+    with pytest.raises(ValueError) as exc:
+        TRIGGERS[rule_id]()
+    msg = str(exc.value)
+    assert "nearest supported:" in msg, msg
+    assert rule.alternative in msg, (rule_id, msg)
+
+
+@pytest.mark.parametrize("rule_id", sorted(TRIGGERS))
+def test_trigger_fires_its_own_rule(rule_id):
+    """Each trigger fires its OWN rule, not an earlier one that happens to
+    overlap — pinning rule precedence in the table: every static fragment
+    of the rule's reason (placeholders excised) appears in the error."""
+    import re
+
+    rule = ALL_RULES[rule_id]
+    with pytest.raises(ValueError) as exc:
+        TRIGGERS[rule_id]()
+    msg = str(exc.value)
+    for frag in re.split(r"\{[a-z_]+\}", rule.reason):
+        if len(frag) > 10:
+            assert frag in msg, (rule_id, frag, msg)
+
+
+def test_supported_cells_admit():
+    """Spot-check the ✅ side of the matrix through the same entry points:
+    combinations the table leaves unmatched must pass admission."""
+    _run("batch", algorithm="coke", exec="gossip", churn=CHURN,
+         backend="spmd")                       # spmd churn (this PR)
+    _run("sweep", algorithm="coke", personalization=PZ)  # pz sweep (this PR)
+    _run("stream", algorithm="online_coke", backend="spmd")
+    _run("batch", algorithm="coke", topology=TOPO)
+
+
+def test_readme_matrix_in_sync():
+    """The committed README block between the support-matrix markers is
+    byte-identical to the generated table; regenerate with
+    `PYTHONPATH=src python -m repro.api.capabilities` after rule edits."""
+    readme = pathlib.Path(__file__).resolve().parents[1] / "README.md"
+    text = readme.read_text()
+    start = text.index(BEGIN_MARK)
+    end = text.index(END_MARK) + len(END_MARK)
+    assert text[start:end] == support_matrix(), (
+        "README support matrix drifted from repro.api.capabilities — "
+        "run: PYTHONPATH=src python -m repro.api.capabilities")

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from conftest import assert_gossip_degenerate
+from conftest import assert_fit_parity, assert_gossip_degenerate
 
 from repro.api import (Censor, Chain, ChurnSchedule, FitConfig, KRRConfig,
                        TopologySchedule, build_problem, fit, fit_stream,
@@ -179,6 +179,31 @@ def test_churn_leave_rejoin_prefix_invariance():
     assert inst[-10:].mean() < inst[:10].mean()
 
 
+def test_churn_parity_simulator_vs_spmd_batch():
+    """Churn now runs on the spmd ring runtime: neighbor sums mask by the
+    alive vector before the roll (two-term ring sums stay order-exact), so
+    the same leave/rejoin schedule yields bit-identical comms/bits against
+    the simulator and float-close thetas. primal="cg" keeps both backends
+    on the matrix-free primal the traced alive mask requires."""
+    churn = ChurnSchedule(leave=((5, 2),), join=((15, 2),))
+    assert_fit_parity(
+        BATCH.replace(algorithm="coke", exec="gossip", participation=0.6,
+                      churn=churn, primal="cg", num_iters=25),
+        ("simulator", "spmd"), exact=("comms", "bits"), theta_atol=1e-4)
+
+
+def test_churn_parity_simulator_vs_spmd_streaming():
+    """The streaming family's churn path gets the same cross-backend
+    contract: one participation schedule, bit-identical bit accounting,
+    float-close parameters through a leave/rejoin event."""
+    churn = ChurnSchedule(leave=((20, 3),), join=((50, 3),))
+    assert_fit_parity(
+        STREAM.replace(exec="gossip", participation=0.6, churn=churn,
+                       num_iters=80),
+        ("simulator", "spmd"), runner=_run_stream,
+        exact=("comms", "bits"), theta_atol=1e-4)
+
+
 def test_straggler_slowdown_reduces_participation():
     """A 4x-slower agent participates ~4x less often, hence pays fewer
     bits; everyone else keeps the base rate."""
@@ -273,9 +298,9 @@ def test_exec_support_validation():
     with pytest.raises(ValueError, match="topology"):
         fit(BATCH.replace(algorithm="coke", exec="gossip",
                           topology=topo, num_iters=2))
-    # churn needs the simulator's grow/shrink machinery
+    # the fused kernel bakes static degrees; a traced alive mask can't
     with pytest.raises(ValueError, match="churn"):
-        fit(BATCH.replace(algorithm="coke", exec="gossip", backend="spmd",
+        fit(BATCH.replace(algorithm="coke", exec="gossip", backend="fused",
                           churn=ChurnSchedule(leave=((5, 1),)),
                           num_iters=2))
     # a traced alive-mask makes degrees dynamic: no static Cholesky

@@ -179,6 +179,54 @@ def test_streaming_personalized():
 
 
 # ---------------------------------------------------------------------------
+# Personalization-aware sweeps (the phased program, vmapped per cell)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("warmup", [0, 8, 100],
+                         ids=["no-warmup", "mid-run", "all-warmup"])
+def test_sweep_personalized_matches_individual_fits(warmup):
+    """sweep() replays fit()'s phased warmup->live program inside each
+    vmapped lane, at every phase-boundary placement: before the first
+    iteration (warmup=0: the live program from the start), mid-run (the
+    carry handoff crosses inside the scan), and past the end (warmup >=
+    num_iters: a zero-length live phase that still attaches the graph).
+    Per-cell comms/bits are bit-identical to the individual personalized
+    fit; thetas agree to vmap-reassociation tolerance (loose: the
+    refresh's discontinuous top-k amplifies float drift, as in the
+    sim-vs-spmd parity pin above)."""
+    pz = Personalization(k=3, every=5, warmup=warmup)
+    base = BASE.replace(num_iters=20, personalization=pz)
+    cells = [(0.3, 0.97), (0.5, 0.95)]
+    sw = sweep(base, cells)
+    for i, (v, mu) in enumerate(cells):
+        r = fit(base.replace(censor_v=v, censor_mu=mu))
+        for k in ("comms", "bits"):
+            np.testing.assert_array_equal(
+                np.asarray(sw.history[k][i]), np.asarray(r.history[k]),
+                err_msg=f"cell{i}:{k}")
+        np.testing.assert_allclose(np.asarray(sw.thetas[i]),
+                                   np.asarray(r.theta), atol=1e-3,
+                                   err_msg=f"cell{i}:theta")
+
+
+def test_sweep_all_warmup_equals_static_sweep():
+    """A personalized sweep whose warmup covers every iteration pins the
+    prefix contract under vmap: its shared history keys are bit-identical
+    to the personalization=None sweep (the warmup lanes run the literal
+    static program)."""
+    cells = [(0.3, 0.97), (0.5, 0.95)]
+    stat = sweep(BASE.replace(num_iters=15), cells)
+    warm = sweep(BASE.replace(num_iters=15, personalization=Personalization(
+        k=3, every=5, warmup=50)), cells)
+    for k in stat.history:
+        np.testing.assert_array_equal(np.asarray(stat.history[k]),
+                                      np.asarray(warm.history[k]),
+                                      err_msg=k)
+    np.testing.assert_array_equal(np.asarray(stat.thetas),
+                                  np.asarray(warm.thetas))
+
+
+# ---------------------------------------------------------------------------
 # Per-agent serving path
 # ---------------------------------------------------------------------------
 
@@ -287,8 +335,10 @@ def test_admission_errors():
                          KRR.num_agents, [(1,)]))
     with pytest.raises(ValueError, match="solver"):
         fit(BASE.replace(algorithm="cta", comm=None, personalization=PZ))
-    with pytest.raises(ValueError, match="sweep"):
-        sweep(BASE.replace(personalization=PZ), [(0.3, 0.97), (0.5, 0.95)])
+    from repro.api import ChurnSchedule
+    with pytest.raises(ValueError, match="churn"):
+        BASE.replace(exec="gossip", personalization=PZ,
+                     churn=ChurnSchedule(leave=((5, 1),)))
 
 
 def test_personalization_config_validation():
