@@ -1,0 +1,95 @@
+"""The fused-backend benchmark: one megakernel iteration vs the unfused
+per-stage StepProgram path.
+
+Two kinds of rows, both defended by the perf gate against the committed
+``BENCH_fused.json``:
+
+* ``fused/{megakernel,unfused}/D*`` — DEVICE-MODELED step times from
+  `launch.analysis.roofline` over the exact cost dicts the launch layer
+  derives (`megastep_launch_params` for the megakernel; the multi-pass
+  cost of the unfused featurize -> gradient -> combine pipeline for the
+  baseline). These are deterministic — the gate pins the cost model
+  itself, so a block-sizing or cost-accounting regression fails CI on
+  any host. At memory-bound D the megakernel reads the (T, D) feature
+  tiles ONCE with theta/theta_hat/gamma/neighbors VMEM-resident, while
+  the unfused path streams phi twice (forward + gradient) and round-trips
+  the residual/gradient intermediates through HBM — the modeled fused
+  step beats the unfused baseline at every D >= 4096.
+
+* ``fused/*_interpret/D*`` — MEASURED wall time of the interpret-mode
+  megakernel and the jitted blockwise reference on this (CPU) host:
+  the plumbing-overhead regression tripwire. Interpret mode emulates the
+  grid walk, so these rows say nothing about device speed — that is what
+  the modeled rows are for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels.coke_update.coke_update import (megastep_launch_params,
+                                                  coke_megastep)
+from repro.kernels.coke_update.ref import coke_megastep_ref
+from repro.launch import analysis
+
+N_AGENTS = 8
+N_SAMPLES = 128
+N_NBR = 2  # ring
+
+
+def unfused_cost(n_agents: int, n_samples: int, dim: int,
+                 n_nbr: int) -> dict:
+    """HBM-traffic / flop model of the per-stage path at the same padded
+    shapes as the megakernel: forward predictions (read phi, theta; write
+    preds), data gradient (read phi again + resid; write g), and the
+    consensus combine + theta update (read theta/hat/gamma/g/neighbors,
+    write gaug and theta_new)."""
+    lp = megastep_launch_params(n_agents, n_samples, dim, n_nbr)
+    Tp, Dp = lp.padded_t, lp.padded_d
+    flops = float(n_agents) * (4.0 * Tp * Dp + 12.0 * Dp)
+    bytes_accessed = 4.0 * n_agents * (
+        2.0 * Tp * Dp        # phi streamed twice: forward + gradient
+        + 3.0 * Tp           # preds written, resid written + read
+        + (8.0 + n_nbr) * Dp  # theta x2, hat, gamma, g x2, gaug x2, nbrs
+        + 1.0)
+    return {"flops": flops, "bytes accessed": bytes_accessed}
+
+
+def _operands(n, t, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    return (jax.random.normal(ks[0], (n, d), jnp.float32),
+            jax.random.normal(ks[1], (n, d), jnp.float32),
+            jax.random.normal(ks[2], (n, d), jnp.float32),
+            jax.random.normal(ks[3], (n, t, d), jnp.float32),
+            jax.random.normal(ks[4], (n, t), jnp.float32))
+
+
+def main(emit, smoke: bool = False):
+    # device-modeled step times (deterministic; gates the cost model)
+    for d in (4096,) if smoke else (4096, 8192, 16384):
+        lp = megastep_launch_params(N_AGENTS, N_SAMPLES, d, N_NBR)
+        fused_us = lp.roofline["step_s_lower_bound"] * 1e6
+        un = analysis.roofline(
+            unfused_cost(N_AGENTS, N_SAMPLES, d, N_NBR), {})
+        unfused_us = un["step_s_lower_bound"] * 1e6
+        emit(f"fused/megakernel/D{d}", fused_us,
+             f"roofline model ({lp.roofline['dominant']}-bound "
+             f"bt={lp.block_t})")
+        emit(f"fused/unfused/D{d}", unfused_us,
+             f"roofline model ({un['dominant']}-bound; phi streamed 2x)")
+
+    # measured interpret-mode wall time (CPU plumbing tripwire)
+    kw = dict(rho=0.1, lam=1e-2, lr=0.05, offsets=(1,))
+    for d in (1024,) if smoke else (1024, 4096):
+        ops = _operands(N_AGENTS, N_SAMPLES, d)
+        t_k = time_call(lambda: coke_megastep(*ops, **kw), iters=5)
+        t_r = time_call(lambda: coke_megastep_ref(*ops, **kw), iters=5)
+        emit(f"fused/megakernel_interpret/D{d}", t_k,
+             f"N={N_AGENTS},T={N_SAMPLES} interpret walk")
+        emit(f"fused/unfused_interpret/D{d}", t_r,
+             "jitted blockwise reference, same shapes")
+
+
+if __name__ == "__main__":
+    main(lambda n, t, d: print(f"{n},{t:.1f},{d}"))

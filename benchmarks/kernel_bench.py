@@ -1,6 +1,11 @@
-"""Microbenchmarks: Pallas kernels (interpret mode on CPU — correctness
-path) vs their pure-jnp references. On TPU the same entry points run
-compiled; interpret timings here only sanity-check plumbing overhead."""
+"""Microbenchmarks: Pallas kernels vs their pure-jnp references.
+
+The wrappers' `interpret=None` resolves via
+`repro.kernels.runtime.resolve_interpret` — compiled on TPU/GPU,
+interpret on CPU ($REPRO_PALLAS_INTERPRET overrides). The row names
+carry the resolved mode, so compiled-device records are never compared
+against interpret-mode ones; on CPU the pallas rows only sanity-check
+plumbing overhead."""
 from __future__ import annotations
 
 import jax
@@ -13,16 +18,18 @@ from repro.kernels.coke_update.ref import coke_update_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rff.ops import featurize_fused
+from repro.kernels.runtime import resolve_interpret
 
 
 def main(emit):
+    mode = "interpret" if resolve_interpret(None) else "compiled"
     # RFF featurizer
     p = draw_rff(jax.random.PRNGKey(0), 77, 128, 1.0)
     x = jax.random.normal(jax.random.PRNGKey(1), (2048, 77))
     t_ref = time_call(lambda: featurize_jit(p, x))
     t_ker = time_call(lambda: featurize_fused(p, x))
     emit("kernel/rff/jnp_ref", t_ref, "T=2048,d=77,L=128")
-    emit("kernel/rff/pallas_interpret", t_ker, "same shapes")
+    emit(f"kernel/rff/pallas_{mode}", t_ker, "same shapes")
 
     # flash attention
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
@@ -33,7 +40,7 @@ def main(emit):
     t_ker = time_call(lambda: flash_attention(q, k, v, block_q=128,
                                               block_k=128))
     emit("kernel/flash_attention/jnp_ref", t_ref, "B1 H4 S512 D64 causal")
-    emit("kernel/flash_attention/pallas_interpret", t_ker, "same shapes")
+    emit(f"kernel/flash_attention/pallas_{mode}", t_ker, "same shapes")
 
     # fused COKE update
     args = [jax.random.normal(kk, (16, 65536))
@@ -41,7 +48,7 @@ def main(emit):
     t_ref = time_call(lambda: coke_update_ref(*args, rho=0.1))
     t_ker = time_call(lambda: coke_fused_update(*args, rho=0.1))
     emit("kernel/coke_update/jnp_ref", t_ref, "N=16,D=65536")
-    emit("kernel/coke_update/pallas_interpret", t_ker, "same shapes")
+    emit(f"kernel/coke_update/pallas_{mode}", t_ker, "same shapes")
 
 
 if __name__ == "__main__":

@@ -28,23 +28,42 @@ import os
 import sys
 
 
-def _rows(record: dict) -> dict[str, float]:
-    out = {}
+def _rows(record: dict) -> tuple[dict[str, float], dict[str, str]]:
+    """-> (gateable rows, malformed rows as name -> reason).
+
+    A row missing `us_per_call` or with a non-positive value cannot
+    anchor a ratio (a <= 0 baseline would make every fresh value an
+    "infinite regression"); such rows are reported as malformed / not
+    gated instead of raising or spuriously failing."""
+    out: dict[str, float] = {}
+    bad: dict[str, str] = {}
     for row in record.get("results", []):
         name = row.get("name", "")
         if name == "total_wall_s" or name.endswith("/ERROR"):
             continue
-        out[name] = float(row["us_per_call"])
-    return out
+        if "us_per_call" not in row:
+            bad[name] = "missing us_per_call"
+            continue
+        try:
+            us = float(row["us_per_call"])
+        except (TypeError, ValueError):
+            bad[name] = f"non-numeric us_per_call {row['us_per_call']!r}"
+            continue
+        if not us > 0:
+            bad[name] = f"non-positive us_per_call {us!r}"
+            continue
+        out[name] = us
+    return out, bad
 
 
 def gate(fresh: dict, baseline: dict, factor: float) -> list[str]:
     """-> list of human-readable failures (empty = gate green)."""
-    f_rows, b_rows = _rows(fresh), _rows(baseline)
+    f_rows, f_bad = _rows(fresh)
+    b_rows, b_bad = _rows(baseline)
     failures = []
     for name in sorted(f_rows.keys() & b_rows.keys()):
         new, old = f_rows[name], b_rows[name]
-        ratio = new / old if old > 0 else float("inf")
+        ratio = new / old
         status = "FAIL" if ratio > factor else "ok"
         print(f"{status:>4}  {name:<40} {old:>12.1f} -> {new:>12.1f} us  "
               f"({ratio:.2f}x, limit {factor:.2f}x)")
@@ -55,6 +74,11 @@ def gate(fresh: dict, baseline: dict, factor: float) -> list[str]:
         print(f"  new  {name} (no baseline row — not gated)")
     for name in sorted(b_rows.keys() - f_rows.keys()):
         print(f"  gone {name} (baseline-only row — not gated)")
+    for name, reason in sorted(f_bad.items()):
+        print(f"  WARN fresh row {name} malformed ({reason}) — not gated")
+    for name, reason in sorted(b_bad.items()):
+        print(f"  WARN baseline row {name} malformed ({reason}) "
+              "— not gated")
     if not (f_rows.keys() & b_rows.keys()):
         failures.append("no rows in common between fresh and baseline — "
                         "the gate compared nothing")
@@ -66,7 +90,8 @@ def summary_table(fresh: dict, baseline: dict, factor: float,
     """The gate comparison as a GitHub-flavored markdown table — what CI
     appends to $GITHUB_STEP_SUMMARY so a reviewer reads the latency deltas
     on the run page instead of scrolling raw logs."""
-    f_rows, b_rows = _rows(fresh), _rows(baseline)
+    f_rows, f_bad = _rows(fresh)
+    b_rows, b_bad = _rows(baseline)
     lines = [
         f"### perf gate: `{baseline_name}` "
         f"(sha `{baseline.get('git_sha')}`, limit {factor:.2f}x)",
@@ -76,7 +101,7 @@ def summary_table(fresh: dict, baseline: dict, factor: float,
     ]
     for name in sorted(f_rows.keys() & b_rows.keys()):
         new, old = f_rows[name], b_rows[name]
-        ratio = new / old if old > 0 else float("inf")
+        ratio = new / old
         status = "❌ FAIL" if ratio > factor else "✅ ok"
         lines.append(f"| `{name}` | {old:.1f} | {new:.1f} "
                      f"| {ratio:.2f}x | {status} |")
@@ -86,6 +111,9 @@ def summary_table(fresh: dict, baseline: dict, factor: float,
     for name in sorted(b_rows.keys() - f_rows.keys()):
         lines.append(f"| `{name}` | {b_rows[name]:.1f} | — | — "
                      "| gone, not gated |")
+    for name, reason in sorted({**b_bad, **f_bad}.items()):
+        lines.append(f"| `{name}` | — | — | — "
+                     f"| ⚠️ malformed ({reason}), not gated |")
     return "\n".join(lines) + "\n"
 
 

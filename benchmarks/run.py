@@ -26,6 +26,32 @@ from datetime import datetime, timezone
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def _apply_xla_flags() -> None:
+    """The olmax runner recipe (SNIPPETS.md): quiet the TF logging spew
+    and pin the host-platform device count before jax initializes its
+    backend. `--xla_step_marker_location=1` (step marker on the outer
+    while loop — what profilers key trace slices on) is applied only
+    when a TPU runtime is present: XLA on CPU hosts aborts at startup on
+    that flag. TPU presence means actual hardware (/dev/accel* device
+    nodes, the TPU-VM contract) or an explicit JAX_PLATFORMS=tpu — NOT
+    merely an installed libtpu wheel, which CPU test containers carry
+    too. Flags the caller already set in $XLA_FLAGS win.
+
+    Called from the __main__ entry only: in-process callers of `main()`
+    (tests, notebooks) keep their environment untouched — mutating
+    $XLA_FLAGS mid-process would leak into any subprocess they spawn."""
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    flags = ["--xla_force_host_platform_device_count=1"]
+    on_tpu = ("tpu" in os.environ.get("JAX_PLATFORMS", "").lower()
+              or any(os.path.exists(f"/dev/accel{i}") for i in range(8)))
+    if on_tpu:
+        flags.append("--xla_step_marker_location=1")
+    existing = os.environ.get("XLA_FLAGS", "")
+    extra = " ".join(f for f in flags if f.split("=")[0] not in existing)
+    if extra:
+        os.environ["XLA_FLAGS"] = f"{existing} {extra}".strip()
+
+
 def _git_sha() -> str | None:
     """HEAD sha for provenance-stamping BENCH_*.json (None outside git)."""
     try:
@@ -56,10 +82,11 @@ def main(argv: list[str] | None = None) -> None:
         rows.append({"name": name, "us_per_call": us, "derived": derived})
 
     t0 = time.time()
-    from benchmarks import (big_d_bench, gossip_bench, kernel_bench,
-                            many_model_bench, paper_comm_cost,
-                            paper_convergence, paper_generalization,
-                            paper_online, personalize_bench, roofline,
+    from benchmarks import (big_d_bench, fused_bench, gossip_bench,
+                            kernel_bench, many_model_bench,
+                            paper_comm_cost, paper_convergence,
+                            paper_generalization, paper_online,
+                            personalize_bench, roofline,
                             serve_kernel_bench)
 
     suites = [
@@ -68,6 +95,7 @@ def main(argv: list[str] | None = None) -> None:
         ("paper_generalization", paper_generalization.main),  # Thm 3
         ("paper_online", paper_online.main),             # streaming regret/bits
         ("kernels", kernel_bench.main),
+        ("fused", fused_bench.main),                     # megakernel vs unfused
         ("serve_kernel", serve_kernel_bench.main),       # deployment surface
         ("many_model", many_model_bench.main),           # multi-tenant store
         ("big_d", big_d_bench.main),                     # matrix-free CG sweep
@@ -127,4 +155,5 @@ def main(argv: list[str] | None = None) -> None:
 
 
 if __name__ == "__main__":
+    _apply_xla_flags()   # process entry: before jax initializes
     main()

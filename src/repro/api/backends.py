@@ -6,9 +6,17 @@
   spmd      — the repro.distributed.consensus runtime: agent axis sharded
               over the mesh, neighbor exchange as jnp.roll (lowers to
               collective-permute), inexact one-step primal update.
-  fused     — spmd with the augmented-gradient + censor-norm computation
-              routed through the Pallas `coke_update` kernel (interpret
-              mode on CPU hosts; the TPU hot path).
+  fused     — the Pallas hot path. On megakernel-admissible configs
+              (dkla/coke, gradient primal, quadratic loss, static ring,
+              no mesh/personalization) the whole ADMM iteration runs as
+              ONE `coke_megastep` pallas_call substituted into the
+              `core.step.StepProgram` primal+exchange stages, bit-equal
+              to the unfused blockwise StepProgram reference
+              (`kernels.coke_update.ref.coke_megastep_ref`). Everything
+              else falls back to spmd with the augmented-gradient +
+              censor-norm combine in the `coke_update` kernel. Kernels
+              compile on TPU/GPU and interpret on CPU
+              (repro.kernels.runtime.resolve_interpret).
 
 The spmd/fused backends require a circulant graph family — the topology the
 ring collectives implement — and are validated against the problem's
@@ -18,6 +26,7 @@ solving a different consensus problem.
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -28,14 +37,24 @@ from repro.api.registry import Solver
 from repro.api.solvers import (_per_agent_mse, _stacked_metrics,
                                _uncompressed_bits)
 from repro.core import admm
+from repro.core import comm as comm_mod
 from repro.core import gossip as gossip_mod
 from repro.core import losses as losses_mod
 from repro.core import personalize as personalize_mod
+from repro.core import step as step_mod
 from repro.core.admm import Problem
 from repro.core.graph import circulant
 from repro.distributed import consensus as cns
 from repro.distributed.sharding import shard_features, shard_problem
+from repro.kernels.coke_update.coke_update import coke_megastep
+from repro.kernels.coke_update.ref import coke_megastep_ref
 from repro.optim.optimizers import OptConfig
+
+#: debug/bench knob: route megakernel-admissible fused fits through the
+#: blockwise unfused StepProgram reference (`coke_megastep_ref`) instead
+#: of the pallas_call. Bit-identical by contract — the conformance tests
+#: and `benchmarks/fused_bench.py` flip this to pin/time the two paths.
+_MEGASTEP_USE_KERNEL = True
 
 
 def _validate_topology(problem: Problem, offsets: tuple[int, ...]) -> None:
@@ -198,6 +217,100 @@ def _consensus_chunk(problem, params, cstate, oracle, comm, gossip,
     return (params, cstate), hist
 
 
+class _FusedCarry(NamedTuple):
+    """core.step.run_step carry for the megakernel path — the six
+    canonical fields as bare (N, D) arrays (the consensus-state dicts are
+    unwrapped at the chunk boundary and rewrapped after the scan)."""
+    theta: jax.Array
+    theta_hat: jax.Array
+    gamma: jax.Array
+    step: jax.Array
+    comms: jax.Array
+    comm: object
+
+
+@partial(jax.jit, static_argnames=("ccfg", "num_iters", "lr",
+                                   "use_kernel"))
+def _megastep_chunk(problem, params, cstate, oracle, comm, gossip, ccfg,
+                    num_iters, lr, use_kernel=True):
+    """The fused-backend megakernel chunk: one `coke_megastep`
+    pallas_call per iteration, substituted into the StepProgram
+    primal+exchange stages (`primal_owns_exchange=True` — the kernel
+    reads the ring-rolled neighbor rows itself, so `run_step` skips the
+    pre-primal permute). With use_kernel=False the same program runs the
+    blockwise unfused reference — bitwise-identical histories, which is
+    the megakernel's conformance contract.
+
+    Metric keys match `_consensus_chunk` exactly (train_mse / comms /
+    consensus_gap / bits / send_frac [+ dist_to_oracle]), so every
+    cross-backend history comparison works unchanged. The circulant
+    neighbor caches (nbr_left/nbr_right) in the consensus state are
+    carried untouched: the kernel re-reads theta_hat rows each step
+    instead of consuming the cached dual-update fetch."""
+    chain = (ccfg.comm_chain() if comm is None
+             else comm_mod.as_chain(comm))
+    n_agents = problem.num_agents
+    offsets = ccfg.offsets
+    fn = coke_megastep if use_kernel else coke_megastep_ref
+
+    def nbr_sum(x):
+        out = None
+        for o in offsets:
+            both = jnp.roll(x, o, axis=0) + jnp.roll(x, -o, axis=0)
+            out = both if out is None else out + both
+        return out
+
+    view = step_mod.GraphView(
+        deg=jnp.full((n_agents,), ccfg.degree, jnp.float32),
+        nbr_sum=nbr_sum)
+
+    def primal(k, g, theta0, theta_hat0, gamma0, nbr_hat):
+        theta_new, _xi_sq = fn(
+            theta0, theta_hat0, gamma0, problem.feats, problem.labels,
+            rho=ccfg.rho, lam=problem.lam, lr=lr, offsets=offsets)
+        # _xi_sq — the kernel's fused censor-norm partial sums,
+        # ||theta_new - theta_hat||^2 — is validated against the censor
+        # policy in tests; the portable `chain.apply` recomputes the
+        # norm so the decision bits stay identical on every backend.
+        return theta_new.astype(theta0.dtype), {}
+
+    program = step_mod.StepProgram(
+        chain=chain, rho=ccfg.rho, exchange=lambda state, k: view,
+        primal=primal,
+        comm_decide=(None if gossip is None
+                     else step_mod.sampled_stage(gossip)),
+        primal_owns_exchange=True)
+
+    def body(carry, _):
+        st, opt = carry
+        new_st, _ = step_mod.run_step(program, st)
+        # the optimizer step is fused into the kernel (theta - lr*g_aug,
+        # bitwise sgd); keep the carried slot's step count in sync
+        if isinstance(opt, dict) and "count" in opt:
+            opt = dict(opt, count=opt["count"] + 1)
+        bits = jnp.sum(new_st.comm.bits)
+        m = _stacked_metrics(problem, new_st.theta, new_st.comms, bits)
+        m["send_frac"] = ((new_st.comms - st.comms).astype(jnp.float32)
+                          / n_agents)
+        m["bits"] = bits
+        if oracle is not None:
+            m["dist_to_oracle"] = jnp.max(jnp.linalg.norm(
+                new_st.theta - oracle, axis=-1))
+        return (new_st, opt), m
+
+    st0 = _FusedCarry(
+        theta=params["theta"], theta_hat=cstate["theta_hat"]["theta"],
+        gamma=cstate["gamma"]["theta"], step=cstate["step"],
+        comms=cstate["comms"], comm=cstate["comm"])
+    (st, opt), hist = jax.lax.scan(body, (st0, cstate["opt"]), None,
+                                   length=num_iters)
+    new_params = {"theta": st.theta}
+    new_cstate = dict(cstate, opt=opt, step=st.step, comms=st.comms,
+                      comm=st.comm, theta_hat={"theta": st.theta_hat},
+                      gamma={"theta": st.gamma})
+    return (new_params, new_cstate), hist
+
+
 @partial(jax.jit, static_argnames=("ccfg", "num_iters", "lam", "lr",
                                    "eta"))
 def _stream_chunk(stream, params, cstate, comm, gossip, personalize,
@@ -353,6 +466,30 @@ def consensus_runner(config: FitConfig, solver: Solver, problem: Problem,
     pz_metric = ctx.personalization is not None
 
     gplan = ctx.gossip if ctx.exec == "gossip" else None
+
+    # megakernel admission: one pallas_call per iteration, substituted
+    # into the StepProgram primal+exchange stages. The gate mirrors what
+    # the kernel bakes in statically: a fixed circulant (no schedule, no
+    # learned graph, no churn — churn-fused is already rejected by the
+    # capabilities table), the one-step gradient primal on the quadratic
+    # loss, and an unsharded carry. Everything outside falls back to the
+    # legacy spmd+coke_update path below, bit-identical to before.
+    use_mega = (config.backend == "fused"
+                and strategy in ("dkla", "coke")
+                and primal_mode == "gradient"
+                and problem.loss == "quadratic"
+                and offset_schedule is None
+                and mesh is None
+                and ctx.personalization is None)
+    if use_mega:
+        def mega_chunk_fn(carry, n):
+            params, cstate = carry
+            return _megastep_chunk(problem, params, cstate, oracle,
+                                   chain, gplan, ccfg=ccfg, num_iters=n,
+                                   lr=lr,
+                                   use_kernel=_MEGASTEP_USE_KERNEL)
+        return (params, cstate), mega_chunk_fn, \
+            lambda carry: carry[0]["theta"]
 
     def chunk_fn(carry, n):
         params, cstate = carry

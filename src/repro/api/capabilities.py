@@ -146,7 +146,8 @@ RUN_RULES: tuple[Rule, ...] = (
         id="churn-fused",
         when=(("churn", True), ("backend", "fused")),
         reason="churn makes the graph degrees traced data; the fused "
-               "coke_update kernel bakes the degree in as a static "
+               "Pallas kernels (the coke_megastep megakernel and the "
+               "coke_update combine) bake the degree in as a static "
                "parameter",
         alternative="backend='spmd' (alive-masked ring permutes) or "
                     "'simulator' with the same ChurnSchedule",
@@ -171,8 +172,8 @@ RUN_RULES: tuple[Rule, ...] = (
     Rule(
         id="personalization-fused",
         when=(("personalization", True), ("backend", "fused")),
-        reason="the fused Pallas coke_update kernel bakes the graph "
-               "degree in as a static parameter; a learned graph is "
+        reason="the fused Pallas kernels bake the graph degree and ring "
+               "offsets in as static parameters; a learned graph is "
                "time-varying — use backend='simulator' or 'spmd'",
         alternative="backend='spmd' with the same Personalization",
     ),

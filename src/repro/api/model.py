@@ -19,8 +19,9 @@ or ADMM state needed at inference time.
 Scoring backends: "ref" is the eager `repro.core.rff` reference path
 (bit-identical to what training recorded); "fused" routes featurization
 through the Pallas `kernels/rff` kernel (one VMEM pass for matmul + cosine —
-the TPU hot path; interpret mode on CPU). Parity is tested in
-tests/test_model.py.
+compiled on TPU/GPU, interpret mode on CPU via
+`repro.kernels.runtime.resolve_interpret`, `$REPRO_PALLAS_INTERPRET`
+overrides). Parity is tested in tests/test_model.py.
 """
 from __future__ import annotations
 

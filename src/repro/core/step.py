@@ -65,15 +65,22 @@ def participation_mask(key: jax.Array, k, num_agents: int,
     (a) independent of the comm stages' draws, (b) per-cell under sweep's
     vmap (the chain key already folds every policy parameter), and (c)
     identical on every backend carrying the same CommState. Straggler
-    slowdowns scale the *threshold*, not the stream — common random
-    numbers across slowdown scenarios. rate = 1.0 is exactly the all-ones
-    mask (uniform draws live in [0, 1)), the degeneracy contract."""
+    slowdowns scale the *threshold/score*, not the stream — common random
+    numbers across slowdown scenarios: in Bernoulli mode the acceptance
+    probability divides by the slowdown, in fixed-size (top-k) mode the
+    draw is multiplied by it so slowed agents sink in the ranking while
+    exactly `size` agents still fire each round. slowdown=None is
+    bit-identical to the unscaled draw in both modes. rate = 1.0 is
+    exactly the all-ones mask (uniform draws live in [0, 1)), the
+    degeneracy contract."""
     r = jax.random.fold_in(key, jnp.asarray(k, jnp.uint32))
     r = jax.random.fold_in(r, PARTICIPATION_TAG)
     r = comm_mod._fold_value(r, plan.participation)
     u = jax.random.uniform(r, (num_agents,))
     if plan.size is not None:
-        score = u if alive is None else jnp.where(alive, u, jnp.inf)
+        score = u if plan.slowdown is None else u * plan.slowdown
+        if alive is not None:
+            score = jnp.where(alive, score, jnp.inf)
         _, sel = jax.lax.top_k(-score, plan.size)
         m = jnp.zeros((num_agents,), bool).at[sel].set(True)
     else:
@@ -183,13 +190,18 @@ class StepProgram:
     nbr_hat)` returns (theta_new, extras); `comm_decide(key, k, g)` — if
     set — returns the (N,) participation mask (None = synchronous: every
     agent updates, `chain.apply` runs unmasked and the trace is identical
-    to the pre-refactor synchronous steps)."""
+    to the pre-refactor synchronous steps). `primal_owns_exchange=True`
+    declares that the primal stage fetches its own neighbor view of
+    theta_hat (the fused megakernel reads the ring-rolled rows inside the
+    pallas_call), so `run_step` skips the pre-primal `nbr_sum` and passes
+    nbr_hat=None."""
 
     chain: Any
     rho: Any
     exchange: Callable[[Any, Any], GraphView]
     primal: Callable
     comm_decide: Callable | None = None
+    primal_owns_exchange: bool = False
 
 
 def run_step(program: StepProgram, state):
@@ -209,7 +221,8 @@ def run_step(program: StepProgram, state):
                                                     gamma0)),
             (theta0, theta_hat0, gamma0))
 
-    nbr_hat = g.nbr_sum(theta_hat0)
+    nbr_hat = (None if program.primal_owns_exchange
+               else g.nbr_sum(theta_hat0))
     theta_new, extras = program.primal(k, g, theta0, theta_hat0, gamma0,
                                        nbr_hat)
 

@@ -79,8 +79,11 @@ class ConsensusConfig:
     # step's graph) and the fused kernel is unsupported (static degree).
     offset_schedule: tuple | None = None
     # route the augmented-gradient + censor-norm computation through the
-    # fused Pallas kernel (repro.kernels.coke_update) — the TPU fast path;
-    # on this CPU host it runs in interpret mode (tests assert equality).
+    # fused Pallas kernel (repro.kernels.coke_update) — compiled on
+    # TPU/GPU, interpret mode on CPU (tests assert equality). The full
+    # megakernel path (one pallas_call per iteration) lives one level up,
+    # in api.backends' StepProgram runner; this flag covers the configs
+    # the megakernel doesn't admit (cg primal, coke_et, schedules).
     use_fused_kernel: bool = False
 
     @property

@@ -2,7 +2,15 @@
 
 Flattens an agent-stacked param pytree to (N, D), runs the fused kernel,
 and unflattens g_aug — the drop-in accelerated core for
-repro.distributed.consensus.consensus_update on TPU.
+repro.distributed.consensus.consensus_update.
+
+xi contract (reconciled across the stack): the kernels
+(`coke_fused_update`, `coke_megastep`) return xi_sq — the *squared*
+censor norm, because squares are what per-block partial sums can emit —
+while this pytree-level wrapper returns xi_norm = sqrt(xi_sq), the
+quantity the censor policy compares against h(k). The zero pad added to
+reach the lane tile contributes exactly zero to either (pinned by a
+non-multiple-of-128 D test).
 """
 from __future__ import annotations
 
@@ -16,8 +24,13 @@ from repro.kernels.coke_update.coke_update import coke_fused_update
 
 
 def coke_update_pytree(params, theta_hat, gamma, grads, left, right, *,
-                       rho: float, deg: float = 2.0, interpret: bool = True):
-    """Agent-stacked pytrees -> (g_aug pytree fp32, xi_norm (N,))."""
+                       rho: float, deg: float = 2.0,
+                       interpret: bool | None = None):
+    """Agent-stacked pytrees -> (g_aug pytree fp32, xi_norm (N,)).
+
+    xi_norm = sqrt of the kernel's xi_sq = ||theta_hat - theta|| per
+    agent — censor-decision ready.
+    """
     th, leaves = flatten_agents(params)
     hat, _ = flatten_agents(theta_hat)
     gm, _ = flatten_agents(gamma)

@@ -1,11 +1,81 @@
-"""Pure-jnp oracle for the fused COKE update."""
+"""Pure-jnp oracles for the fused COKE kernels.
+
+`coke_update_ref` is the elementwise oracle for the consensus combine.
+`coke_megastep_ref` is the *bit-level* reference for the full-iteration
+megakernel: it replays the identical padding, (block_t, D_pad) block
+walk, and accumulation order as the Pallas grid, so on any backend the
+two produce bitwise-equal theta_new and xi_sq. It doubles as the
+"unfused StepProgram path" — the stage the fused runner substitutes the
+megakernel for — which is what makes full-fit bit-parity pins possible.
+"""
+import functools
+
+import jax
 import jax.numpy as jnp
+
+from repro.kernels.coke_update.coke_update import (megastep_launch_params,
+                                                   megastep_scalars)
 
 
 def coke_update_ref(theta, theta_hat, gamma, grad, left, right, *, rho,
                     deg=2.0):
+    """Returns (g_aug (N, D) fp32, xi_sq (N,) fp32) — squared censor norm."""
     f = lambda a: a.astype(jnp.float32)
     gaug = (f(grad) + 2.0 * rho * deg * f(theta) + f(gamma)
             - rho * (deg * f(theta_hat) + f(left) + f(right)))
     xi = f(theta_hat) - f(theta)
     return gaug, jnp.sum(xi * xi, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "lam", "lr", "offsets",
+                                             "block_t"))
+def coke_megastep_ref(theta, theta_hat, gamma, phi, y, *, rho, lam, lr,
+                      offsets=(1,), block_t=None):
+    """Blockwise unfused reference for `coke_megastep` (same contract).
+
+    Walks the same (block_t, D_pad) tiles in the same order as the
+    kernel grid — python loop over agents, fori over sample blocks —
+    so results are bitwise-equal to the interpret-mode kernel. Jitted:
+    XLA-compiled dots round differently from op-by-op eager dispatch,
+    and the bit contract is defined against the compiled program.
+    """
+    N, T, D = phi.shape
+    offsets = tuple(offsets)
+    lp = megastep_launch_params(N, T, D, 2 * len(offsets), block_t)
+    bt, Tp, Dp = lp.block_t, lp.padded_t, lp.padded_d
+    nt = Tp // bt
+    sc = megastep_scalars(rho=rho, lam=lam, lr=lr, n_agents=N, n_samples=T,
+                          n_offsets=len(offsets))
+    f32 = jnp.float32
+
+    pad_row = lambda a: jnp.pad(a.astype(f32), ((0, 0), (0, Dp - D)))
+    thp, hatp, gmp = map(pad_row, (theta, theta_hat, gamma))
+    phib = jnp.pad(phi.astype(f32),
+                   ((0, 0), (0, Tp - T), (0, Dp - D))).reshape(N, nt, bt, Dp)
+    yb = jnp.pad(y.astype(f32), ((0, 0), (0, Tp - T))).reshape(N, nt, 1, bt)
+
+    outs, xis = [], []
+    for i in range(N):
+        th = thp[i:i + 1]
+
+        def body(t, g, i=i, th=th):
+            pb = phib[i, t]                                   # (bt, Dp)
+            r = jnp.dot(pb, th.T, preferred_element_type=f32)  # (bt, 1)
+            resid = r - yb[i, t].T
+            return g + jnp.dot(resid.T, pb, preferred_element_type=f32)
+
+        g_scr = jax.lax.fori_loop(0, nt, body, jnp.zeros((1, Dp), f32))
+        hat = hatp[i:i + 1]
+        gm = gmp[i:i + 1]
+        acc = sc["deg"] * hat
+        for o in offsets:
+            acc = acc + hatp[(i + o) % N:(i + o) % N + 1]
+            acc = acc + hatp[(i - o) % N:(i - o) % N + 1]
+        g_data = sc["inv_t2"] * g_scr
+        gaug = (g_data + sc["lam2"] * th + sc["rho2deg"] * th + gm
+                - sc["rho"] * acc)
+        theta_new = th - sc["lr"] * gaug
+        d = theta_new - hat
+        outs.append(theta_new)
+        xis.append(jnp.sum(d * d))
+    return jnp.concatenate(outs, axis=0)[:, :D], jnp.stack(xis)

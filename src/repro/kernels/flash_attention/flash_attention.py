@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -66,12 +68,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
-    """q: (B, H, Sq, Dh); k/v: (B, H, Sk, Dh|Dv) (pre-broadcast GQA).
-    Returns (B, H, Sq, Dv)."""
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, window: int, block_q: int, block_k: int,
+                     interpret: bool) -> jax.Array:
     B, H, Sq, Dh = q.shape
     Sk, Dv = k.shape[2], v.shape[3]
     scale = 1.0 / (Dh ** 0.5)
@@ -114,3 +113,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(qf, kf, vf)
     return out.reshape(B, H, Sqp, Dv)[:, :, :Sq]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, Sq, Dh); k/v: (B, H, Sk, Dh|Dv) (pre-broadcast GQA).
+    Returns (B, H, Sq, Dv). interpret=None resolves via
+    repro.kernels.runtime.resolve_interpret (compiled off-CPU)."""
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=resolve_interpret(interpret))

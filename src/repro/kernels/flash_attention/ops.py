@@ -13,7 +13,7 @@ from repro.kernels.flash_attention.flash_attention import flash_attention
 
 
 def gqa_flash(q, k, v, *, causal=True, window=0, block_q=128, block_k=128,
-              interpret=True):
+              interpret=None):
     """q: (B,Sq,H,Dh); k/v: (B,Sk,KV,*) -> (B,Sq,H,Dv)."""
     B, Sq, H, Dh = q.shape
     KV = k.shape[2]

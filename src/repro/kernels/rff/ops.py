@@ -8,7 +8,7 @@ from repro.kernels.rff.rff import rff_pallas
 
 
 def featurize_fused(params: RFFParams, x: jax.Array,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """Drop-in for repro.core.rff.featurize (cos_bias mapping), batched over
     leading dims."""
     if x.ndim > 2:

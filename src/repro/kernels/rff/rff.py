@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _rff_kernel(x_ref, omega_ref, bias_ref, out_ref, *, scale: float):
     proj = jnp.dot(x_ref[...], omega_ref[...],
@@ -30,13 +32,8 @@ def _rff_kernel(x_ref, omega_ref, bias_ref, out_ref, *, scale: float):
 
 @functools.partial(jax.jit,
                    static_argnames=("block_t", "block_l", "interpret"))
-def rff_pallas(x: jax.Array, omega: jax.Array, bias: jax.Array,
-               block_t: int = 128, block_l: int = 128,
-               interpret: bool = True) -> jax.Array:
-    """x: (T, d); omega: (d, L); bias: (L,) -> (T, L) features.
-
-    Matches repro.core.rff.featurize with mapping='cos_bias' (incl. the
-    1/sqrt(L) normalization)."""
+def _rff_pallas(x: jax.Array, omega: jax.Array, bias: jax.Array,
+                block_t: int, block_l: int, interpret: bool) -> jax.Array:
     T, d = x.shape
     L = omega.shape[1]
     scale = float((2.0 / L) ** 0.5)
@@ -64,3 +61,15 @@ def rff_pallas(x: jax.Array, omega: jax.Array, bias: jax.Array,
         interpret=interpret,
     )(xp, op, bp)
     return out[:T, :L]
+
+
+def rff_pallas(x: jax.Array, omega: jax.Array, bias: jax.Array,
+               block_t: int = 128, block_l: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """x: (T, d); omega: (d, L); bias: (L,) -> (T, L) features.
+
+    Matches repro.core.rff.featurize with mapping='cos_bias' (incl. the
+    1/sqrt(L) normalization). interpret=None resolves via
+    repro.kernels.runtime.resolve_interpret (compiled off-CPU)."""
+    return _rff_pallas(x, omega, bias, block_t, block_l,
+                       resolve_interpret(interpret))

@@ -1,0 +1,47 @@
+"""Interpret-mode resolution for the Pallas wrappers.
+
+Historically every wrapper hardcoded ``interpret=True`` — correct on the
+CPU hosts the test suite runs on, but it meant the fused backend never
+ran a *compiled* kernel on an accelerator. The contract is now:
+
+* ``interpret=None`` (the default everywhere) resolves to
+  ``jax.default_backend() == "cpu"`` — interpret on CPU, compile on
+  TPU/GPU.
+* The environment variable ``REPRO_PALLAS_INTERPRET`` overrides the
+  backend-derived default (``1/true/yes/on`` or ``0/false/no/off``),
+  e.g. to force interpret mode while debugging a kernel on device.
+* An explicit ``interpret=True/False`` argument always wins.
+
+Resolution happens at trace time inside each wrapper (``interpret`` is a
+static jit argument), so flipping the env var between calls re-traces.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUTHY = {"1", "true", "yes", "on"}
+_FALSY = {"0", "false", "no", "off"}
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve a wrapper's ``interpret`` argument to a concrete bool.
+
+    Precedence: explicit argument > ``$REPRO_PALLAS_INTERPRET`` >
+    ``jax.default_backend() == "cpu"``.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    raw = os.environ.get(_ENV_VAR)
+    if raw is not None:
+        val = raw.strip().lower()
+        if val in _TRUTHY:
+            return True
+        if val in _FALSY:
+            return False
+        raise ValueError(
+            f"{_ENV_VAR}={raw!r} is not a recognised boolean "
+            f"(use one of {sorted(_TRUTHY | _FALSY)})")
+    return jax.default_backend() == "cpu"

@@ -1,7 +1,9 @@
 """The benchmark CLI surface: `--only` selection validation (an empty or
-whitespace selection must NOT degrade into running every suite), and the
-perf gate's $GITHUB_STEP_SUMMARY markdown emission."""
+whitespace selection must NOT degrade into running every suite), the
+runner's XLA-flags recipe, and the perf gate's $GITHUB_STEP_SUMMARY
+markdown emission."""
 import json
+import os
 
 import pytest
 
@@ -41,6 +43,40 @@ def test_unknown_suite_rejected(capsys):
 
 
 # ---------------------------------------------------------------------------
+# benchmarks.run XLA-flags recipe
+# ---------------------------------------------------------------------------
+
+def test_xla_flags_recipe(monkeypatch):
+    """Caller-set flags win (no duplicate device-count flag — XLA takes
+    the LAST occurrence, which would silently override the caller), the
+    TPU-only step-marker flag is never added on a CPU host (XLA aborts
+    at startup on it), and the TF log level quiets by default."""
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=8")
+    monkeypatch.delenv("TF_CPP_MIN_LOG_LEVEL", raising=False)
+    monkeypatch.delenv("JAX_PLATFORMS", raising=False)
+    bench_run._apply_xla_flags()
+    flags = os.environ["XLA_FLAGS"]
+    assert flags.count("--xla_force_host_platform_device_count") == 1
+    assert "device_count=8" in flags
+    if not os.path.exists("/dev/accel0"):  # the suite's CPU containers
+        assert "--xla_step_marker_location" not in flags
+    assert os.environ["TF_CPP_MIN_LOG_LEVEL"] == "4"
+
+
+def test_main_does_not_mutate_process_env(monkeypatch, capsys):
+    """In-process `main()` calls (this very test suite) must leave
+    $XLA_FLAGS alone: the recipe applies at the __main__ entry only.
+    A leaked device-count flag would poison subprocesses other tests
+    spawn with their own forced device counts."""
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    with pytest.raises(SystemExit):
+        bench_run.main(["--only", "nope"])
+    capsys.readouterr()
+    assert "XLA_FLAGS" not in os.environ
+
+
+# ---------------------------------------------------------------------------
 # benchmarks.perf_gate --> $GITHUB_STEP_SUMMARY
 # ---------------------------------------------------------------------------
 
@@ -63,6 +99,52 @@ def test_summary_table_contents():
     assert "🆕 not gated" in md          # fresh-only row c
     assert "gone, not gated" in md       # baseline-only row d
     assert "total_wall_s" not in md      # never gated, never tabled
+
+
+MALFORMED = {"results": [
+    {"name": "a", "us_per_call": 10.0},       # healthy, gated
+    {"name": "zero", "us_per_call": 0.0},     # non-positive -> not gated
+    {"name": "neg", "us_per_call": -3.0},     # non-positive -> not gated
+    {"name": "nokey"},                        # missing -> not gated
+]}
+MALFORMED_FRESH = {"results": [
+    {"name": "a", "us_per_call": 10.0},
+    {"name": "zero", "us_per_call": 5.0},
+    {"name": "neg", "us_per_call": 5.0},
+    {"name": "nokey", "us_per_call": 5.0},
+]}
+
+
+def test_gate_malformed_baseline_rows_not_gated(capsys):
+    """A baseline row with us_per_call <= 0 must NOT produce ratio=inf
+    and a spurious FAIL, and a row missing us_per_call must not raise
+    KeyError — both are warned as malformed / not gated."""
+    failures = perf_gate.gate(MALFORMED_FRESH, MALFORMED, 1.5)
+    assert failures == []                      # only `a` gated, 1.00x
+    out = capsys.readouterr().out
+    assert "ok" in out
+    for name, reason in [("zero", "non-positive"), ("neg", "non-positive"),
+                         ("nokey", "missing us_per_call")]:
+        assert name in out and "not gated" in out
+    assert reason  # last reason checked above
+    assert "WARN" in out and "non-positive" in out
+
+
+def test_gate_malformed_fresh_rows_not_gated(capsys):
+    """Same guard on the fresh side: a crashed bench emitting 0 us must
+    not silently pass as 0.00x NOR fail — it is simply not gated."""
+    failures = perf_gate.gate(MALFORMED, MALFORMED_FRESH, 1.5)
+    assert failures == []
+    out = capsys.readouterr().out
+    assert out.count("WARN") == 3
+
+
+def test_summary_table_malformed_rows():
+    md = perf_gate.summary_table(MALFORMED_FRESH, MALFORMED, 1.5,
+                                 "BENCH_x.json")
+    assert "| `a` | 10.0 | 10.0 | 1.00x | ✅ ok |" in md
+    assert "malformed" in md and "not gated" in md
+    assert "inf" not in md and "FAIL" not in md
 
 
 def test_gate_writes_step_summary(tmp_path, monkeypatch, capsys):

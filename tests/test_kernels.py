@@ -1,4 +1,6 @@
-"""Pallas kernels vs pure-jnp oracles (interpret=True): shape/dtype sweeps."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps. The wrappers'
+`interpret=None` default resolves to interpret mode on this CPU suite
+(compiled on TPU/GPU — see repro.kernels.runtime.resolve_interpret)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
